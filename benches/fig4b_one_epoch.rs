@@ -1,0 +1,98 @@
+//! Figure 4b — Kaggle-like dataset, 1 epoch (the DLRM-standard setting the
+//! prior work reports). CCE clusters at 1/4 and 1/2 of the epoch (the
+//! paper's `ct2 cf75000` ≈ 2 clusterings within the first half).
+//!
+//! Expected shape: with a single epoch the hashing-based methods can't
+//! reach the baseline at small budgets, but CCE sits below CE/hash at
+//! every budget (it reaches baseline at ~300× fewer parameters).
+
+use cce::config::TrainConfig;
+use cce::experiments::report::Table;
+use cce::experiments::sweep::{curve_for, run_sweep};
+use cce::experiments::SweepSpec;
+use cce::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    cce::util::logger::init();
+    let paper = std::env::args().any(|a| a == "--paper");
+    let store = ArtifactStore::open(ArtifactStore::default_dir())?;
+
+    let caps = if paper {
+        vec![64, 256, 1024, 4096, 16384, 65536]
+    } else {
+        vec![64, 256]
+    };
+    let seeds: Vec<u64> = if paper { vec![0, 1, 2] } else { vec![0] };
+    let methods =
+        if paper {
+        vec!["hash".to_string(), "hashemb".into(), "ce".into(), "cce".into(), "robe".into()]
+    } else {
+        vec!["hash".to_string(), "ce".into(), "cce".into()]
+    };
+    // one epoch; cluster twice, finishing by half the epoch (strategy 1)
+    let n_batches = 196_608usize.div_ceil(256);
+    let base = TrainConfig {
+        epochs: 1,
+        early_stop: false,
+        cluster_times: 2,
+        cluster_every: n_batches / 4,
+        ..Default::default()
+    };
+    let spec = SweepSpec {
+        dataset: "kaggle_small".into(),
+        methods: methods.clone(),
+        caps,
+        seeds,
+        base: base.clone(),
+    };
+    let points = run_sweep(&store, &spec)?;
+
+    let mut full_cfg = base.clone();
+    full_cfg.artifact = spec.artifact_name("full", 0);
+    full_cfg.cluster_times = 0;
+    let full = store
+        .has(&full_cfg.artifact)
+        .then(|| cce::coordinator::train(&store, &full_cfg))
+        .transpose()?;
+
+    let mut t = Table::new(
+        "Figure 4b — 1 epoch, kaggle_small (CCE clusters at 1/4 and 1/2 epoch)",
+        &["method", "params", "mean BCE", "min", "max"],
+    );
+    for m in &methods {
+        for (params, mean, min, max) in curve_for(&points, m) {
+            t.row(vec![
+                m.clone(),
+                format!("{params:.0}"),
+                format!("{mean:.5}"),
+                format!("{min:.5}"),
+                format!("{max:.5}"),
+            ]);
+        }
+    }
+    if let Some(f) = &full {
+        t.row(vec![
+            "full table (baseline)".into(),
+            f.embedding_params.to_string(),
+            format!("{:.5}", f.test_bce),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    t.print();
+    t.save_csv("fig4b");
+
+    // shape: CCE dominates CE at equal budgets
+    let cce = curve_for(&points, "cce");
+    let ce = curve_for(&points, "ce");
+    let mut wins = 0;
+    let mut total = 0;
+    for (c1, c2) in cce.iter().zip(&ce) {
+        total += 1;
+        if c1.1 <= c2.1 + 1e-4 {
+            wins += 1;
+        }
+    }
+    println!("CCE ≤ CE at {wins}/{total} budgets (paper: CCE dominates at one epoch)");
+    Ok(())
+}

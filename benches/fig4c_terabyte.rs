@@ -1,0 +1,70 @@
+//! Figure 4c — Terabyte-like dataset, 1 epoch, single repetition (the
+//! paper could only afford one run per algorithm at this scale; so can
+//! we). Requires `make artifacts-sweep`.
+//!
+//! Expected shape: same ordering as 4b, with PQ notably NOT better than
+//! sketch methods on this dataset (the paper's observation), and larger
+//! compression head-room from the bigger vocabularies.
+
+use cce::config::TrainConfig;
+use cce::experiments::report::Table;
+use cce::experiments::sweep::{curve_for, run_sweep};
+use cce::experiments::SweepSpec;
+use cce::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    cce::util::logger::init();
+    let paper = std::env::args().any(|a| a == "--paper");
+    let store = ArtifactStore::open(ArtifactStore::default_dir())?;
+
+    let caps = if paper {
+        vec![64, 256, 1024, 4096, 16384, 65536]
+    } else {
+        vec![256]
+    };
+    let methods = vec!["hash".to_string(), "cce".into()];
+    let n_batches = 393_216usize.div_ceil(256);
+    let base = TrainConfig {
+        epochs: 1,
+        cluster_times: 2,
+        cluster_every: n_batches / 4,
+        ..Default::default()
+    };
+    let spec = SweepSpec {
+        dataset: "terabyte_sim".into(),
+        methods: methods.clone(),
+        caps,
+        seeds: vec![0], // single repetition, like the paper
+        base,
+    };
+    let points = run_sweep(&store, &spec)?;
+
+    let mut t = Table::new(
+        "Figure 4c — 1 epoch, terabyte_sim (single repetition)",
+        &["method", "params", "test BCE", "test AUC"],
+    );
+    for m in &methods {
+        for p in points.iter().filter(|p| &p.method == m) {
+            t.row(vec![
+                m.clone(),
+                p.outcome.embedding_params.to_string(),
+                format!("{:.5}", p.outcome.test_bce),
+                format!("{:.5}", p.outcome.test_auc),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv("fig4c");
+
+    let cce = curve_for(&points, "cce");
+    let hash = curve_for(&points, "hash");
+    if let (Some(c), Some(h)) = (cce.first(), hash.first()) {
+        println!(
+            "smallest budget: CCE {:.5} vs hash {:.5} — CCE should win: {}",
+            c.1,
+            h.1,
+            if c.1 <= h.1 + 1e-4 { "✓" } else { "✗" }
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Figure 8 + Theorem 3.1 — convergence of Dense CCE vs the proven bound.
+//!
+//! The paper draws X, Y iid standard normal and shows the measured loss of
+//! Algorithm 1 tracks the `(1−ρ)^{ik}` envelope closely. We print measured
+//! mean loss (over seeds), the ρ-bound, and the idealized 1/d₁ bound.
+
+use cce::cce::{dense_cce, optimal_loss, theory, DenseCceOptions, NoiseKind};
+use cce::experiments::report::Table;
+use cce::linalg::Matrix;
+use cce::util::Rng;
+
+fn main() {
+    let paper = std::env::args().any(|a| a == "--paper");
+    let (n, d1, d2, k, iters, seeds) =
+        if paper { (2_000, 400, 5, 40, 30, 10) } else { (800, 150, 5, 25, 20, 6) };
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(&mut rng, n, d1);
+    let y = Matrix::randn(&mut rng, n, d2);
+    let opt = optimal_loss(&x, &y);
+    let bp = theory::bound_params(&x, &y);
+
+    let mut mean = vec![0f64; iters + 1];
+    let mut mean_half = vec![0f64; iters + 1];
+    for seed in 0..seeds {
+        let tr = dense_cce(
+            &x,
+            &y,
+            &DenseCceOptions {
+                k, iterations: iters, noise: NoiseKind::Iid, half_update: false, seed: seed as u64,
+            },
+        );
+        let trh = dense_cce(
+            &x,
+            &y,
+            &DenseCceOptions {
+                k, iterations: iters, noise: NoiseKind::Iid, half_update: true, seed: seed as u64,
+            },
+        );
+        for i in 0..=iters {
+            mean[i] += tr.losses[i] / seeds as f64;
+            mean_half[i] += trh.losses[i] / seeds as f64;
+        }
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "Figure 8 — Dense CCE vs Theorem 3.1 (X {n}x{d1}, Y {n}x{d2}, k={k}, {seeds} seeds; \
+             rho={:.3e}, 1/d1={:.3e})",
+            bp.rho, bp.rho_smart
+        ),
+        &["iter", "measured (full M)", "measured (M=[I|M'])", "bound (rho)", "bound (1/d1)"],
+    );
+    let mut violations = 0;
+    for i in 0..=iters {
+        let b_rho = bp.bound_at(i, k, d2, false);
+        let b_d1 = bp.bound_at(i, k, d2, true);
+        if mean_half[i] > b_rho * 1.1 {
+            violations += 1;
+        }
+        t.row(vec![
+            i.to_string(),
+            format!("{:.4e}", mean[i] - opt),
+            format!("{:.4e}", mean_half[i] - opt),
+            format!("{:.4e}", b_rho - bp.floor),
+            format!("{:.4e}", b_d1 - bp.floor),
+        ]);
+    }
+    t.print();
+    t.save_csv("fig8_convergence");
+    println!(
+        "bound violations (measured [I|M'] > 1.1x rho-bound): {violations} / {} \
+         — Theorem 3.1 holds in expectation ✓",
+        iters + 1
+    );
+    assert_eq!(violations, 0, "measured loss crossed the Theorem 3.1 envelope");
+    // full-M is at least as good as the analyzed restricted form
+    for i in 0..=iters {
+        assert!(mean[i] <= mean_half[i] * 1.05, "full-M update should dominate at iter {i}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Figure 9 — CCE clustering strategies: how many clusterings (ct) and how
+//! far apart (cf). The paper's findings: more clusterings help (9a);
+//! clusterings must FINISH early enough for the model to re-converge (9b
+//! vs 9c); spacing them out helps (9d).
+//!
+//! We grid (ct, cf) at a fixed budget on kaggle_small, 1–2 epochs.
+
+use cce::config::TrainConfig;
+use cce::experiments::report::Table;
+use cce::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    cce::util::logger::init();
+    let paper = std::env::args().any(|a| a == "--paper");
+    let store = ArtifactStore::open(ArtifactStore::default_dir())?;
+    let artifact = "sweep_kaggle_small_cce_1024"; // kaggle_small @ 1024 cap
+    let n_batches = 196_608usize.div_ceil(256); // 768
+
+    // (label, ct, cf, epochs)
+    let mut grid: Vec<(String, usize, usize, usize)> = vec![
+        ("no clustering (CE-like)".into(), 0, 0, 1),
+        ("ct1 cf=1/2 epoch".into(), 1, n_batches / 2, 1),
+        ("ct2 cf=1/4 epoch (strategy 1)".into(), 2, n_batches / 4, 1),
+        ("ct2 cf=1/3 epoch (finishes 2/3, strategy 2)".into(), 2, n_batches / 3, 1),
+    ];
+    if paper {
+        grid.push(("ct6 cf=1 epoch, 8 epochs (fig4a winner)".into(), 6, n_batches, 8));
+        grid.push(("ct2 cf=1 epoch, 8 epochs".into(), 2, n_batches, 8));
+    }
+
+    let mut t = Table::new(
+        "Figure 9 — CCE strategies (quick_cce, kaggle_small @ 4096 rows)",
+        &["strategy", "ct", "cf(batches)", "epochs", "test BCE", "test AUC"],
+    );
+    let mut results = Vec::new();
+    for (label, ct, cf, epochs) in &grid {
+        let cfg = TrainConfig {
+            artifact: artifact.into(),
+            epochs: *epochs,
+            cluster_times: *ct,
+            cluster_every: *cf,
+            early_stop: *epochs > 1,
+            ..Default::default()
+        };
+        log::info!("strategy: {label}");
+        let r = cce::coordinator::train(&store, &cfg)?;
+        t.row(vec![
+            label.clone(),
+            ct.to_string(),
+            cf.to_string(),
+            epochs.to_string(),
+            format!("{:.5}", r.test_bce),
+            format!("{:.5}", r.test_auc),
+        ]);
+        results.push((label.clone(), r.test_bce));
+    }
+    t.print();
+    t.save_csv("fig9_strategies");
+
+    let get = |needle: &str| {
+        results
+            .iter()
+            .find(|(l, _)| l.contains(needle))
+            .map(|(_, b)| *b)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "clustering vs none: ct2 {:.5} vs ct0 {:.5} — clustering should help: {}",
+        get("strategy 1"),
+        get("no clustering"),
+        if get("strategy 1") <= get("no clustering") + 1e-4 { "✓" } else { "✗" }
+    );
+    println!(
+        "rest after clustering: strategy 1 (finish 1/2) {:.5} vs strategy 2 (finish 2/3) {:.5} \
+         (paper: finishing earlier is better)",
+        get("strategy 1"),
+        get("strategy 2")
+    );
+    Ok(())
+}

@@ -1,0 +1,207 @@
+//! Perf micro-benches over the system's hot paths (EXPERIMENTS.md §Perf):
+//!
+//!   L3: index generation (rowwise/robe/dhe), batch generation, K-means,
+//!       AUC, matmul — the coordinator-side costs.
+//!   Runtime: chained train-step latency + throughput per impl
+//!       (pallas vs reference lowering), predict latency, kmeans offload
+//!       (rust vs PJRT HLO Lloyd step).
+//!
+//! Printed as mean ± std so before/after deltas in the §Perf log are
+//! directly comparable.
+
+use cce::data::batch::{BatchIter, Split};
+use cce::data::SyntheticDataset;
+use cce::experiments::report::Table;
+use cce::kmeans::{kmeans, KmeansConfig};
+use cce::runtime::session::EmbInput;
+use cce::runtime::{ArtifactStore, DlrmSession};
+use cce::tables::indexer::Indexer;
+use cce::tables::layout::TablePlan;
+use cce::util::timer::{bench, bench_for, fmt_ns};
+use cce::util::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    cce::util::logger::init();
+    let store = ArtifactStore::open(ArtifactStore::default_dir())?;
+    let mut t = Table::new("perf — hot paths", &["path", "timing", "derived"]);
+
+    // ---------------- L3: index generation ------------------------------
+    let vocabs: Vec<usize> = cce::data::SyntheticDataset::new(store.dataset("kaggle_small", 0)?)
+        .spec
+        .vocabs
+        .clone();
+    let mut rng = Rng::new(0);
+    let b = 256usize;
+    let f = vocabs.len();
+    let cats: Vec<u32> = (0..b * f)
+        .map(|i| (rng.below(vocabs[i % f] as u64)) as u32)
+        .collect();
+    {
+        let plan = TablePlan::new(&vocabs, 4096, 2, 4, 4);
+        let ix = Indexer::new_rowwise(&mut rng, plan);
+        let mut out = vec![0i32; b * f * 2 * 4];
+        let s = bench(3, 50, || ix.fill_rowwise(&cats, b, &mut out));
+        t.row(vec![
+            "index gen rowwise (B=256, F=26, T=2, c=4)".into(),
+            s.display(),
+            format!("{:.1} M idx/s", (b * f * 8) as f64 / s.mean_ns * 1e3),
+        ]);
+    }
+    {
+        let ix = Indexer::new_robe(&mut rng, &vocabs, 4096, 16, 4);
+        let mut out = vec![0i32; b * f * 16];
+        let s = bench(3, 50, || ix.fill_elementwise(&cats, b, &mut out));
+        t.row(vec![
+            "index gen robe (B=256, F=26, d=16)".into(),
+            s.display(),
+            format!("{:.1} M idx/s", (b * f * 16) as f64 / s.mean_ns * 1e3),
+        ]);
+    }
+    {
+        let ix = Indexer::new_dhe(&mut rng, &vocabs, 64);
+        let mut out = vec![0f32; b * f * 64];
+        let s = bench(3, 20, || ix.fill_dhe(&cats, b, &mut out));
+        t.row(vec![
+            "hash-features dhe (B=256, F=26, n_hash=64)".into(),
+            s.display(),
+            format!("{:.1} M hash/s", (b * f * 64) as f64 / s.mean_ns * 1e3),
+        ]);
+    }
+
+    // ---------------- L3: batch generation ------------------------------
+    {
+        let ds = SyntheticDataset::new(store.dataset("kaggle_small", 0)?);
+        let mut it = BatchIter::new(&ds, Split::Train, 256, None);
+        let mut batch = it.alloc_batch();
+        let s = bench(2, 30, || {
+            if !it.next_into(&mut batch) {
+                it = BatchIter::new(&ds, Split::Train, 256, None);
+                it.next_into(&mut batch);
+            }
+        });
+        t.row(vec![
+            "batch generation (B=256, kaggle_small)".into(),
+            s.display(),
+            format!("{:.0}k samples/s", 256.0 / s.mean_ns * 1e6),
+        ]);
+    }
+
+    // ---------------- L3: K-means (the clustering-event cost) -----------
+    {
+        let mut rng = Rng::new(1);
+        let n = 65_536;
+        let d = 4;
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let s = bench(1, 3, || {
+            let _ = kmeans(
+                &pts,
+                d,
+                &KmeansConfig { k: 4096, n_iter: 10, seed: 2, ..Default::default() },
+            );
+        });
+        t.row(vec![
+            "kmeans 65k pts, d=4, k=4096, 10 iters".into(),
+            s.display(),
+            format!("{:.1} M pt·iter/s", (n * 10) as f64 / s.mean_ns * 1e3),
+        ]);
+    }
+
+    // ---------------- runtime: train/predict per impl -------------------
+    for artifact in ["quick_cce", "quick_cce_ref"] {
+        if !store.has(artifact) {
+            continue;
+        }
+        let mut session = DlrmSession::open(&store, artifact)?;
+        let m = session.manifest.clone();
+        let mut rng = Rng::new(3);
+        let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
+        session.set_state(&state)?;
+        let plan = TablePlan::new(&m.vocabs, m.spec.cap, m.spec.t, m.spec.c, m.spec.dc);
+        let ix = Indexer::new_rowwise(&mut rng, plan);
+        let dense = vec![0.1f32; m.spec.batch * m.spec.n_dense];
+        let labels = vec![1.0f32; m.spec.batch];
+        let mut rows = vec![0i32; session.emb_elems("train")?];
+        let cats: Vec<u32> = (0..m.spec.batch * m.vocabs.len())
+            .map(|i| (rng.below(m.vocabs[i % m.vocabs.len()] as u64)) as u32)
+            .collect();
+        ix.fill_rowwise(&cats, m.spec.batch, &mut rows);
+        let s = bench_for(3, Duration::from_secs(2), || {
+            session.train_step(&dense, EmbInput::Rows(&rows), &labels).unwrap();
+        });
+        t.row(vec![
+            format!("train step {artifact} (B={})", m.spec.batch),
+            s.display(),
+            format!("{:.1}k samples/s", m.spec.batch as f64 / s.mean_ns * 1e6),
+        ]);
+        // predict
+        let mut prows = vec![0i32; session.emb_elems("predict")?];
+        let pcats: Vec<u32> = (0..m.spec.eval_batch * m.vocabs.len())
+            .map(|i| (rng.below(m.vocabs[i % m.vocabs.len()] as u64)) as u32)
+            .collect();
+        ix.fill_rowwise(&pcats, m.spec.eval_batch, &mut prows);
+        let pdense = vec![0.1f32; m.spec.eval_batch * m.spec.n_dense];
+        let s = bench_for(2, Duration::from_secs(1), || {
+            let _ = session.predict(&pdense, EmbInput::Rows(&prows)).unwrap();
+        });
+        t.row(vec![
+            format!("predict {artifact} (B={})", m.spec.eval_batch),
+            s.display(),
+            format!("{:.1}k samples/s", m.spec.eval_batch as f64 / s.mean_ns * 1e6),
+        ]);
+    }
+
+    // ---------------- runtime: K-means offload ablation ------------------
+    if store.has("kmeans_quick") {
+        let m = store.manifest("kmeans_quick")?;
+        let exe = store.compile(&m, "step")?;
+        let n = m.inputs["step"][0].shape[0];
+        let d = m.inputs["step"][0].shape[1];
+        let k = m.inputs["step"][1].shape[0];
+        let mut rng = Rng::new(4);
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let cen: Vec<f32> = (0..k * d).map(|_| rng.normal() as f32).collect();
+        let (pts_b, cen_b) = cce::runtime::with_client(|c| {
+            Ok((
+                c.buffer_from_host_buffer(&pts, &[n, d], None)?,
+                c.buffer_from_host_buffer(&cen, &[k, d], None)?,
+            ))
+        })?;
+        let s_hlo = bench(1, 5, || {
+            let _ = exe.execute_b(&[&pts_b, &cen_b]).unwrap();
+        });
+        t.row(vec![
+            format!("kmeans Lloyd step HLO offload (n={n}, k={k})"),
+            s_hlo.display(),
+            String::new(),
+        ]);
+        let s_rust = bench(1, 5, || {
+            let mut asg = vec![0u32; n];
+            cce::kmeans::assign(&pts, &cen, d, &mut asg);
+        });
+        t.row(vec![
+            format!("kmeans assign rust (n={n}, k={k})"),
+            s_rust.display(),
+            format!("offload speedup {:.2}x", s_rust.mean_ns / s_hlo.mean_ns),
+        ]);
+    }
+
+    // ---------------- metrics ------------------------------------------
+    {
+        let mut rng = Rng::new(5);
+        let scores: Vec<(f32, bool)> =
+            (0..100_000).map(|_| (rng.uniform() as f32, rng.bernoulli(0.3))).collect();
+        let s = bench(2, 20, || {
+            let _ = cce::metrics::auc(&scores);
+        });
+        t.row(vec![
+            "AUC over 100k scores".into(),
+            s.display(),
+            format!("{}/sample", fmt_ns(s.mean_ns / 1e5)),
+        ]);
+    }
+
+    t.print();
+    t.save_csv("perf_hot_paths");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Compare the full method zoo at a single parameter budget — the
+//! motivating comparison of the paper's §2 (Figure 3's evolution of
+//! hashing-based methods), on the quick artifacts.
+//!
+//! Run: `make artifacts && cargo run --release --example compare_methods`
+
+use cce::config::TrainConfig;
+use cce::coordinator::train;
+use cce::experiments::report::Table;
+use cce::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    cce::util::logger::init();
+    let store = ArtifactStore::open(ArtifactStore::default_dir())?;
+
+    let epochs: usize = std::env::args()
+        .skip_while(|a| a != "--epochs")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+
+    let mut table = Table::new(
+        &format!("method comparison, kaggle_small @ 1024-row cap, {epochs} epoch(s)"),
+        &["method", "test BCE", "test AUC", "emb params", "compression", "samples/s"],
+    );
+    for (label, artifact, clusterings) in [
+        ("Hashing Trick", "sweep_kaggle_small_hash_1024", 0usize),
+        ("CE (concat)", "sweep_kaggle_small_ce_1024", 0),
+        ("CCE (this paper)", "sweep_kaggle_small_cce_1024", 1),
+    ] {
+        let cfg = TrainConfig {
+            artifact: artifact.into(),
+            epochs,
+            cluster_times: clusterings,
+            ..Default::default()
+        };
+        log::info!("training {label} ({artifact})");
+        let r = train(&store, &cfg)?;
+        table.row(vec![
+            label.into(),
+            format!("{:.5}", r.test_bce),
+            format!("{:.5}", r.test_auc),
+            r.embedding_params.to_string(),
+            format!("{:.1}x", r.compression_total),
+            format!("{:.0}", r.throughput),
+        ]);
+    }
+    table.print();
+    println!(
+        "(The full-table baseline `quick_full` is excluded here for runtime; \
+         the fig4 benches include it. DHE/ROBE budgets live in the sweep artifacts.)"
+    );
+    Ok(())
+}

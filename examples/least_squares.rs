@@ -1,0 +1,72 @@
+//! Least-squares CCE (Section 3): run Algorithm 1 (dense) and Algorithm 2
+//! (sparse) on a random instance and print the convergence against the
+//! Theorem 3.1 envelope — the Figure 1b / Figure 8 story at example scale.
+//!
+//! Run: `cargo run --release --example least_squares`
+
+use cce::cce::{
+    dense_cce, optimal_loss, pq_factorized_loss, sparse_cce, theory, DenseCceOptions, NoiseKind,
+    SparseCceOptions,
+};
+use cce::linalg::Matrix;
+use cce::util::Rng;
+
+fn main() {
+    let (n, d1, d2, k, iters) = (1500, 250, 10, 40, 16);
+    let mut rng = Rng::new(0);
+    let x = Matrix::randn(&mut rng, n, d1);
+    let y = Matrix::randn(&mut rng, n, d2);
+
+    let opt = optimal_loss(&x, &y);
+    let bp = theory::bound_params(&x, &y);
+    println!("least squares: X {n}x{d1}, Y {n}x{d2}, sketch width k={k}");
+    println!("optimal loss {opt:.4e}; rho = {:.3e} (ideal 1/d1 = {:.3e})\n", bp.rho, bp.rho_smart);
+
+    let dense = dense_cce(
+        &x,
+        &y,
+        &DenseCceOptions { k, iterations: iters, noise: NoiseKind::Iid, half_update: false, seed: 1 },
+    );
+    let smart = dense_cce(
+        &x,
+        &y,
+        &DenseCceOptions { k, iterations: iters, noise: NoiseKind::Smart, half_update: false, seed: 1 },
+    );
+    let sparse = sparse_cce(
+        &x,
+        &y,
+        &SparseCceOptions {
+            k,
+            sketch_width: k / 3,
+            iterations: iters,
+            kmeans_iters: 25,
+            signs: false,
+            seed: 1,
+        },
+    );
+
+    println!(
+        "{:>4} {:>14} {:>14} {:>14} {:>14}",
+        "iter", "dense excess", "smart excess", "sparse excess", "bound excess"
+    );
+    for i in 0..=iters {
+        println!(
+            "{i:>4} {:>14.4e} {:>14.4e} {:>14.4e} {:>14.4e}",
+            dense.losses[i] - opt,
+            smart.losses[i] - opt,
+            sparse.losses[i] - opt,
+            bp.bound_at(i, k, d2, false) - bp.floor,
+        );
+    }
+
+    let pq = pq_factorized_loss(&x, &y, k, 25, 2);
+    println!(
+        "\npost-hoc PQ of the optimal solution (k={k} codewords): excess {:.4e}",
+        pq - opt
+    );
+    println!(
+        "sparse CCE reaches {:.4e} without ever materializing the optimal T \
+         (memory: O(d1·k) vs O(d1·d2) for the direct solve).",
+        sparse.losses.last().unwrap() - opt
+    );
+}

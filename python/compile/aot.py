@@ -1,0 +1,222 @@
+"""AOT pipeline: lower every artifact to HLO text + JSON manifest.
+
+Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per artifact `name`:
+    artifacts/<name>.train.hlo.txt
+    artifacts/<name>.predict.hlo.txt
+    artifacts/<name>.readout.hlo.txt
+    artifacts/<name>.json              (manifest: shapes, layout, hyperparams)
+plus a top-level artifacts/index.json with the artifact list and the
+dataset presets (the coordinator's single source of truth).
+
+Usage:
+    python -m compile.aot --out ../artifacts --set base
+    python -m compile.aot --out ../artifacts --set sweep
+    python -m compile.aot --dump-stats        # HLO op histograms (perf pass)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+from .kernels.kmeans import kmeans_step
+from .layout import METRIC_NAMES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (single, non-tuple root)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def hlo_stats(text: str) -> dict[str, int]:
+    """Crude op histogram from HLO text (perf-pass fusion review)."""
+    import re
+
+    ops: dict[str, int] = {}
+    for m in re.finditer(r"=\s+\S+\s+([a-z][a-z0-9\-]*)\(", text):
+        ops[m.group(1)] = ops.get(m.group(1), 0) + 1
+    return dict(sorted(ops.items(), key=lambda kv: -kv[1]))
+
+
+def _input_desc(name: str, dtype: str, shape: tuple[int, ...]) -> dict:
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def lower_artifact(spec: specs.ArtifactSpec, out_dir: str, dump_stats: bool) -> dict:
+    """Lower train/predict/readout for one spec; return its manifest."""
+    lo = model.build_layout(spec)
+    s = jax.ShapeDtypeStruct((lo.size,), jnp.float32)
+    dense_t = jax.ShapeDtypeStruct((spec.batch, spec.n_dense), jnp.float32)
+    dense_e = jax.ShapeDtypeStruct((spec.eval_batch, spec.n_dense), jnp.float32)
+    emb_shape_t, emb_dtype = model.emb_input_shape(spec, spec.batch)
+    emb_shape_e, _ = model.emb_input_shape(spec, spec.eval_batch)
+    emb_t = jax.ShapeDtypeStruct(emb_shape_t, getattr(jnp, emb_dtype))
+    emb_e = jax.ShapeDtypeStruct(emb_shape_e, getattr(jnp, emb_dtype))
+    labels_t = jax.ShapeDtypeStruct((spec.batch,), jnp.float32)
+
+    files = {}
+    stats = {}
+    for kind, fn, args in [
+        ("train", model.make_train_step(spec, lo), (s, dense_t, emb_t, labels_t)),
+        ("predict", model.make_predict(spec, lo), (s, dense_e, emb_e)),
+        ("readout", model.make_readout(lo), (s,)),
+    ]:
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        fname = f"{spec.name}.{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[kind] = fname
+        if dump_stats:
+            stats[kind] = hlo_stats(text)
+
+    manifest = {
+        "name": spec.name,
+        "family": "dlrm",
+        "kind": spec.kind,
+        "dataset": spec.dataset,
+        "method": spec.method,
+        "spec": {
+            "batch": spec.batch,
+            "eval_batch": spec.eval_batch,
+            "dim": spec.dim,
+            "dc": spec.dc if spec.kind == "rowwise" else spec.dim,
+            "t": spec.t,
+            "c": spec.c,
+            "cap": min(spec.cap, 1 << 40),
+            "lr": spec.lr,
+            "n_features": spec.n_features,
+            "n_dense": spec.n_dense,
+            "pool_rows": spec.pool_rows,
+            "dhe_hidden": spec.dhe_hidden,
+            "n_hash": spec.n_hash,
+            "bot_mlp": list(spec.bot_mlp),
+            "top_mlp": list(spec.top_mlp),
+            "impl": spec.impl,
+            "embedding_params": spec.embedding_params(),
+        },
+        "vocabs": spec.vocabs,
+        "state_size": lo.size,
+        "layout": lo.to_manifest(),
+        "metrics": {"offset": lo["metrics"].offset, "names": list(METRIC_NAMES)},
+        "executables": files,
+        "inputs": {
+            "train": [
+                _input_desc("state", "f32", (lo.size,)),
+                _input_desc("dense", "f32", (spec.batch, spec.n_dense)),
+                _input_desc("emb", emb_dtype.replace("int32", "i32").replace("float32", "f32"), emb_shape_t),
+                _input_desc("labels", "f32", (spec.batch,)),
+            ],
+            "predict": [
+                _input_desc("state", "f32", (lo.size,)),
+                _input_desc("dense", "f32", (spec.eval_batch, spec.n_dense)),
+                _input_desc("emb", emb_dtype.replace("int32", "i32").replace("float32", "f32"), emb_shape_e),
+            ],
+            "readout": [_input_desc("state", "f32", (lo.size,))],
+        },
+        "outputs": {
+            "train": {"dtype": "f32", "shape": [lo.size]},
+            "predict": {"dtype": "f32", "shape": [spec.eval_batch]},
+            "readout": {"dtype": "f32", "shape": [len(METRIC_NAMES)]},
+        },
+    }
+    with open(os.path.join(out_dir, f"{spec.name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if dump_stats:
+        print(f"== {spec.name} ==")
+        for k, v in stats.items():
+            top = ", ".join(f"{op}:{n}" for op, n in list(v.items())[:8])
+            print(f"  {k}: {top}")
+    return manifest
+
+
+def lower_kmeans(spec: specs.KmeansSpec, out_dir: str) -> dict:
+    pts = jax.ShapeDtypeStruct((spec.n_points, spec.dim), jnp.float32)
+    cen = jax.ShapeDtypeStruct((spec.k, spec.dim), jnp.float32)
+    text = to_hlo_text(jax.jit(kmeans_step).lower(pts, cen))
+    fname = f"{spec.name}.step.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    manifest = {
+        "name": spec.name,
+        "family": "kmeans",
+        "spec": {"n_points": spec.n_points, "dim": spec.dim, "k": spec.k},
+        "executables": {"step": fname},
+        "inputs": {
+            "step": [
+                _input_desc("points", "f32", (spec.n_points, spec.dim)),
+                _input_desc("centroids", "f32", (spec.k, spec.dim)),
+            ]
+        },
+        "outputs": {"step": {"dtype": "f32", "shape": [spec.k, spec.dim + 1]}},
+    }
+    with open(os.path.join(out_dir, f"{spec.name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", dest="which", default="base", choices=sorted(specs.ARTIFACT_SETS))
+    ap.add_argument("--only", default=None, help="build only artifacts whose name contains this")
+    ap.add_argument("--force", action="store_true", help="rebuild even if manifest exists")
+    ap.add_argument("--dump-stats", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    todo = specs.ARTIFACT_SETS[args.which]()
+    if args.only:
+        todo = [s for s in todo if args.only in s.name]
+
+    names = []
+    for spec in todo:
+        names.append(spec.name)
+        mpath = os.path.join(args.out, f"{spec.name}.json")
+        if not args.force and os.path.exists(mpath):
+            print(f"[skip] {spec.name}", file=sys.stderr)
+            continue
+        print(f"[lower] {spec.name} (state={model.build_layout(spec).size})", file=sys.stderr)
+        lower_artifact(spec, args.out, args.dump_stats)
+
+    km_names = []
+    if args.which in ("base", "all") and not args.only:
+        for kspec in specs.kmeans_specs():
+            km_names.append(kspec.name)
+            mpath = os.path.join(args.out, f"{kspec.name}.json")
+            if args.force or not os.path.exists(mpath):
+                print(f"[lower] {kspec.name}", file=sys.stderr)
+                lower_kmeans(kspec, args.out)
+
+    # merge into the index (sweep and base runs both contribute)
+    index_path = os.path.join(args.out, "index.json")
+    index = {"artifacts": [], "kmeans": [], "datasets": {}}
+    if os.path.exists(index_path):
+        with open(index_path) as f:
+            index = json.load(f)
+    index["artifacts"] = sorted(set(index.get("artifacts", [])) | set(names))
+    index["kmeans"] = sorted(set(index.get("kmeans", [])) | set(km_names))
+    index["datasets"] = specs.DATASETS
+    index["methods"] = {k: v for k, v in specs.METHODS.items()}
+    with open(index_path, "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"index: {len(index['artifacts'])} artifacts", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

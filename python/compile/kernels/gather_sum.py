@@ -1,0 +1,167 @@
+"""Pallas kernel: fused compositional-embedding gather (the lookup hot spot).
+
+Computes, for every (batch, feature) pair, the concatenation over ``c``
+columns of the sum over ``T`` terms of rows of a shared parameter pool:
+
+    out[b, f, j*dc:(j+1)*dc] = sum_t pool[idx[b, f, t, j]]
+
+which is Algorithm 3's ``CONCAT_i(M_i[h_i(id)] + M'_i[h'_i(id)])``
+generalized to ``T`` terms, with all subtables packed into one row pool so a
+single gather covers every method in the zoo (full/hash/hash-emb/CE/CCE).
+
+TPU adaptation (paper targets A100 gathers; see DESIGN.md §8): the grid
+tiles the *batch* dimension; each grid step stages a ``[TILE_B, F, T, c]``
+index block and accumulates ``T`` gathered rows per (sample, feature,
+column) in VMEM. On a real TPU the pool lives in HBM and rows are DMA'd per
+index (scalar-prefetch style); ``interpret=True`` executes the same
+schedule with jnp semantics on CPU, which is what the AOT pipeline lowers.
+
+VMEM footprint per grid step (estimate, f32):
+    idx tile:  TILE_B*F*T*c * 4 B
+    out tile:  TILE_B*F*c*dc * 4 B
+    row stage: T*c*dc * 4 B (double-buffered DMA target)
+e.g. TILE_B=32, F=26, T=2, c=4, dc=4 → ~80 KiB ≪ 16 MiB VMEM.
+MXU utilization: none (pure VPU adds) — this kernel is DMA-bound by design.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_sum_kernel(pool_ref, idx_ref, out_ref, *, t_terms: int, c_cols: int):
+    """Kernel body: one batch tile.
+
+    ``pool_ref`` maps the whole pool (HBM-resident on TPU; the fancy-index
+    below is the interpret-mode stand-in for per-row DMA).
+    """
+    pool = pool_ref[...]  # [R, dc]
+    idx = idx_ref[...]  # [TILE_B, F, T, c]
+    acc = None
+    # T and c are static: unrolled accumulation keeps one VMEM accumulator.
+    for t in range(t_terms):
+        rows = pool[idx[:, :, t, :]]  # [TILE_B, F, c, dc]
+        acc = rows if acc is None else acc + rows
+    tb, f, c, dc = acc.shape
+    out_ref[...] = acc.reshape(tb, f, c * dc)
+
+
+def gather_sum(pool: jnp.ndarray, idx: jnp.ndarray, *, tile_b: int | None = None) -> jnp.ndarray:
+    """Fused embedding lookup. See module docstring.
+
+    Args:
+      pool: ``f32[R, dc]``.
+      idx:  ``i32[B, F, T, c]``; ``B`` must be divisible by ``tile_b``.
+      tile_b: batch tile per grid step (default: ``min(B, 32)``).
+
+    Returns:
+      ``f32[B, F, c*dc]``.
+    """
+    b, f, t_terms, c_cols = idx.shape
+    r, dc = pool.shape
+    if tile_b is None:
+        tile_b = min(b, 32)
+    if b % tile_b != 0:
+        raise ValueError(f"batch {b} not divisible by tile_b {tile_b}")
+    grid = (b // tile_b,)
+    kernel = functools.partial(_gather_sum_kernel, t_terms=t_terms, c_cols=c_cols)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, dc), lambda i: (0, 0)),  # whole pool each step
+            pl.BlockSpec((tile_b, f, t_terms, c_cols), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, f, c_cols * dc), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, c_cols * dc), pool.dtype),
+        interpret=True,
+    )(pool, idx)
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: pallas_call has no VJP rule, so the kernels carry custom VJPs.
+# The backward of a gather is a scatter-add into the pool; on TPU that is
+# the embedding-gradient kernel (DMA-bound like the forward). Here it is
+# expressed with jnp scatter-add, which XLA lowers to the same scatter HLO
+# the reference implementation produces — so fwd uses the Pallas schedule
+# while bwd matches the oracle exactly.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def gather_sum_ad(pool: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable wrapper over :func:`gather_sum` (grad wrt pool)."""
+    return gather_sum(pool, idx)
+
+
+def _gather_sum_fwd(pool, idx):
+    return gather_sum(pool, idx), (pool.shape, idx)
+
+
+def _gather_sum_bwd(res, g):
+    (pool_shape, idx) = res
+    b, f, t_terms, c_cols = idx.shape
+    dc = pool_shape[1]
+    g4 = g.reshape(b, f, c_cols, dc)  # undo the concat
+    g_pool = jnp.zeros(pool_shape, g.dtype)
+    for t in range(t_terms):
+        g_pool = g_pool.at[idx[:, :, t, :]].add(g4)
+    return g_pool, None
+
+
+gather_sum_ad.defvjp(_gather_sum_fwd, _gather_sum_bwd)
+
+
+@jax.custom_vjp
+def gather_elements_ad(pool_flat: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable wrapper over :func:`gather_elements`."""
+    return gather_elements(pool_flat, idx)
+
+
+def _gather_elements_fwd(pool_flat, idx):
+    return gather_elements(pool_flat, idx), (pool_flat.shape, idx)
+
+
+def _gather_elements_bwd(res, g):
+    (pool_shape, idx) = res
+    return jnp.zeros(pool_shape, g.dtype).at[idx].add(g), None
+
+
+gather_elements_ad.defvjp(_gather_elements_fwd, _gather_elements_bwd)
+
+
+def _gather_elements_kernel(pool_ref, idx_ref, out_ref):
+    pool = pool_ref[...]  # [R]
+    out_ref[...] = pool[idx_ref[...]]
+
+
+def gather_elements(
+    pool_flat: jnp.ndarray, idx: jnp.ndarray, *, tile_b: int | None = None
+) -> jnp.ndarray:
+    """ROBE-style element gather: ``out[b,f,e] = pool_flat[idx[b,f,e]]``.
+
+    ROBE windows (contiguous runs with wrap-around in a flat array) are
+    materialized as element indices by the coordinator, so one kernel
+    serves any windowing scheme.
+    """
+    b, f, d = idx.shape
+    (r,) = pool_flat.shape
+    if tile_b is None:
+        tile_b = min(b, 32)
+    if b % tile_b != 0:
+        raise ValueError(f"batch {b} not divisible by tile_b {tile_b}")
+    return pl.pallas_call(
+        _gather_elements_kernel,
+        grid=(b // tile_b,),
+        in_specs=[
+            pl.BlockSpec((r,), lambda i: (0,)),
+            pl.BlockSpec((tile_b, f, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, f, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f, d), pool_flat.dtype),
+        interpret=True,
+    )(pool_flat, idx)

@@ -1,0 +1,68 @@
+"""Pallas kernel: K-means assignment (distance + argmin), plus a full Lloyd
+step built on top of it.
+
+This is the accelerated inner loop of the CCE clustering event
+(Algorithm 3 line 13). The default coordinator path runs K-means in Rust;
+this artifact is the optional offloaded path and the subject of the
+kmeans-offload ablation bench.
+
+TPU adaptation: ``‖x − c‖² = ‖x‖² − 2·x·cᵀ + ‖c‖²`` — the cross term is an
+MXU matmul tiled (TILE_N points × all k centroids, k ≤ 2048 for every
+preset); norms and the argmin reduction run on the VPU. VMEM per grid step:
+TILE_N·d + k·d + TILE_N·k floats; with TILE_N=256, d=16, k=2048 that is
+~2.3 MiB — fits with double buffering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(pts_ref, cen_ref, out_ref):
+    pts = pts_ref[...]  # [TILE_N, d]
+    cen = cen_ref[...]  # [k, d]
+    # ‖x‖² is constant across centroids — omit it from the argmin operand.
+    d2 = -2.0 * pts @ cen.T + jnp.sum(cen * cen, axis=1)[None, :]
+    out_ref[...] = jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_assign(
+    points: jnp.ndarray, centroids: jnp.ndarray, *, tile_n: int | None = None
+) -> jnp.ndarray:
+    """Nearest-centroid assignment. ``(f32[n,d], f32[k,d]) → i32[n]``."""
+    n, d = points.shape
+    k, d2 = centroids.shape
+    assert d == d2, (d, d2)
+    if tile_n is None:
+        tile_n = min(n, 256)
+    if n % tile_n != 0:
+        raise ValueError(f"n {n} not divisible by tile_n {tile_n}")
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(n // tile_n,),
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(points, centroids)
+
+
+def kmeans_step(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """One Lloyd iteration, packed for the single-output PJRT convention.
+
+    Returns ``f32[k, d+1]``: new centroids in ``[:, :d]`` and per-cluster
+    counts in ``[:, d]`` (the coordinator unpacks; empty clusters keep the
+    previous centroid, mirroring the Rust repair policy).
+    """
+    k, d = centroids.shape
+    assign = kmeans_assign(points, centroids)
+    one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    counts = one_hot.sum(axis=0)
+    sums = one_hot.T @ points
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], centroids)
+    return jnp.concatenate([new_c, counts[:, None]], axis=1)

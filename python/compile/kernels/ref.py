@@ -1,0 +1,107 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for kernel correctness: every Pallas kernel in
+this package has a matching ``*_ref`` here, and ``python/tests`` asserts
+allclose between the two across hypothesis-generated shapes/dtypes.
+
+They are also used directly by ``model.py`` when building the
+``impl="reference"`` variant of each artifact, which gives an end-to-end
+oracle for the whole lowered model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_sum_ref(pool: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Fused multi-term compositional-embedding lookup (reference).
+
+    Args:
+      pool: ``f32[R, dc]`` row pool. Every (feature, term, column) subtable
+        occupies a contiguous row range; the indices below are *global* row
+        ids into this pool (offsets are applied by the caller — in
+        production, the Rust coordinator).
+      idx:  ``i32[B, F, T, c]`` gather indices: batch, feature, term, column.
+
+    Returns:
+      ``f32[B, F, c*dc]`` embeddings: for each (b, f) the embedding is the
+      concatenation over columns of the sum over terms of pool rows —
+      exactly ``concat_j sum_t pool[idx[b,f,t,j]]`` (Algorithm 3's
+      ``CONCAT(M_i[h_i(id)] + M'_i[h'_i(id)])`` generalized to T terms).
+    """
+    rows = pool[idx]  # [B, F, T, c, dc]
+    summed = rows.sum(axis=2)  # [B, F, c, dc]
+    b, f, c, dc = summed.shape
+    return summed.reshape(b, f, c * dc)
+
+
+def gather_elements_ref(pool_flat: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise gather used by ROBE-style windowed embeddings.
+
+    Args:
+      pool_flat: ``f32[R]`` flat parameter array.
+      idx: ``i32[B, F, d]`` element indices (windows with wrap-around are
+        materialized by the caller).
+
+    Returns:
+      ``f32[B, F, d]``.
+    """
+    return pool_flat[idx]
+
+
+def interaction_ref(z: jnp.ndarray) -> jnp.ndarray:
+    """DLRM pairwise-dot interaction (reference).
+
+    Args:
+      z: ``f32[B, N, d]`` per-sample stack of N vectors (26 embeddings +
+        bottom-MLP output in DLRM).
+
+    Returns:
+      ``f32[B, N*(N-1)/2]`` strictly-lower-triangular entries of ``z zᵀ``
+      per sample, row-major over (i > j), matching Naumov et al.'s
+      interaction layer.
+    """
+    zzt = jnp.einsum("bnd,bmd->bnm", z, z)
+    n = z.shape[1]
+    ti, tj = jnp.tril_indices(n, k=-1)
+    return zzt[:, ti, tj]
+
+
+def kmeans_assign_ref(points: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """K-means assignment step (reference).
+
+    Args:
+      points: ``f32[n, d]``.
+      centroids: ``f32[k, d]``.
+
+    Returns:
+      ``i32[n]`` index of the nearest centroid under squared L2, ties to
+      the lowest index (argmin semantics).
+    """
+    d2 = (
+        jnp.sum(points * points, axis=1, keepdims=True)
+        - 2.0 * points @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def kmeans_update_ref(
+    points: jnp.ndarray, centroids: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One full Lloyd iteration (assignment + centroid update), reference.
+
+    Empty clusters keep their previous centroid (same policy as the Rust
+    implementation's "repair" fallback before re-seeding).
+
+    Returns:
+      ``(new_centroids f32[k, d], counts f32[k])``.
+    """
+    k = centroids.shape[0]
+    assign = kmeans_assign_ref(points, centroids)
+    one_hot = (assign[:, None] == jnp.arange(k)[None, :]).astype(points.dtype)
+    counts = one_hot.sum(axis=0)  # [k]
+    sums = one_hot.T @ points  # [k, d]
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], centroids)
+    return new_c, counts

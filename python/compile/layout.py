@@ -1,0 +1,106 @@
+"""Packed-state parameter layout.
+
+All model parameters live in ONE flat ``f32[S]`` state vector so every
+executable has a single array output and the Rust coordinator can chain
+device buffers step-to-step (see DESIGN.md §7 — PJRT tuple outputs cannot
+be re-fed). The layout (field order, offsets, init specs) is defined here
+and exported verbatim into each artifact's JSON manifest; the Rust side
+(`rust/src/runtime/manifest.rs`, `rust/src/tables/layout.rs`) mirrors it.
+
+The final ``metrics`` field holds the in-graph metric accumulators
+(loss-sum, example count, step count, last loss) that the tiny ``readout``
+executable extracts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+import jax.numpy as jnp
+
+METRIC_NAMES = ("loss_sum", "examples", "steps", "last_loss")
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    """One named tensor inside the packed state vector."""
+
+    name: str
+    shape: tuple[int, ...]
+    offset: int
+    #: init spec, applied by the Rust coordinator: ("zeros",), ("normal",
+    #: scale) or ("uniform", limit) — limit as in Glorot/LeCun fan-based init.
+    init: tuple
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+class Layout:
+    """Ordered collection of fields with contiguous offsets."""
+
+    def __init__(self) -> None:
+        self.fields: list[Field] = []
+        self._by_name: dict[str, Field] = {}
+        self.size = 0
+
+    def add(self, name: str, shape: Iterable[int], init: tuple) -> Field:
+        shape = tuple(int(s) for s in shape)
+        if name in self._by_name:
+            raise ValueError(f"duplicate field {name!r}")
+        f = Field(name, shape, self.size, init)
+        self.fields.append(f)
+        self._by_name[name] = f
+        self.size += f.size
+        return f
+
+    def __getitem__(self, name: str) -> Field:
+        return self._by_name[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._by_name
+
+    def unpack(self, state: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        """Slice the flat state into named tensors (trace-time, zero-copy)."""
+        out = {}
+        for f in self.fields:
+            out[f.name] = jnp.reshape(state[f.offset : f.offset + f.size], f.shape)
+        return out
+
+    def pack(self, tensors: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Concatenate named tensors back into the flat state vector."""
+        parts = []
+        for f in self.fields:
+            t = tensors[f.name]
+            if tuple(t.shape) != f.shape:
+                raise ValueError(f"field {f.name}: expected {f.shape}, got {t.shape}")
+            parts.append(jnp.reshape(t, (f.size,)))
+        return jnp.concatenate(parts)
+
+    def to_manifest(self) -> list[dict]:
+        return [
+            {
+                "name": f.name,
+                "shape": list(f.shape),
+                "offset": f.offset,
+                "size": f.size,
+                "init": list(f.init),
+            }
+            for f in self.fields
+        ]
+
+
+def mlp_fields(layout: Layout, prefix: str, sizes: list[int]) -> None:
+    """Add weight/bias fields for an MLP with the given layer sizes.
+
+    Uses LeCun-uniform init limits (what the DLRM reference uses for its
+    MLPs): ``limit = sqrt(6 / (fan_in + fan_out))``.
+    """
+    for i in range(len(sizes) - 1):
+        fan_in, fan_out = sizes[i], sizes[i + 1]
+        limit = math.sqrt(6.0 / (fan_in + fan_out))
+        layout.add(f"{prefix}_w{i}", (fan_in, fan_out), ("uniform", limit))
+        layout.add(f"{prefix}_b{i}", (fan_out,), ("zeros",))

@@ -1,0 +1,195 @@
+"""Layer-2: the DLRM compute graph in JAX, calling the Pallas kernels.
+
+The model follows Naumov et al. (2019): a bottom MLP over the dense
+features, one embedding per categorical feature (here: the generic
+compressed-embedding layer driven by Rust-computed indices), the
+pairwise-dot interaction, and a top MLP producing one logit.
+
+Everything is expressed over the packed ``f32[S]`` state vector from
+``layout.py`` so each executable has a single array output (DESIGN.md §7):
+
+  * ``train_step(state, dense, idx, labels) → state'`` — fwd + bwd + SGD +
+    in-graph metric accumulation, fused into one HLO module.
+  * ``predict(state, dense, idx) → f32[B]`` — probabilities.
+  * ``readout(state) → f32[4]`` — the metric slots.
+
+Index semantics per method kind:
+  * rowwise     — ``idx i32[B, F, T, c]`` global row ids into pool[R, d/c]
+  * elementwise — ``idx i32[B, F, d]`` element ids into pool_flat[R] (ROBE)
+  * dhe         — ``hashes f32[B, F, n_hash]`` in [-1, 1] (no gather at all)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layout import METRIC_NAMES, Layout, mlp_fields
+from .specs import ArtifactSpec
+from .kernels import ref as kref
+from .kernels.gather_sum import gather_sum_ad, gather_elements_ad
+from .kernels.interaction import interaction_ad as interaction_pallas
+
+
+# ---------------------------------------------------------------------------
+# Layout construction
+# ---------------------------------------------------------------------------
+
+
+def build_layout(spec: ArtifactSpec) -> Layout:
+    """Parameter layout for one artifact. Mirrored by tables/layout.rs."""
+    lo = Layout()
+    if spec.kind == "rowwise":
+        # N(0, 1/d) rows, the DLRM embedding init convention scaled to the
+        # subtable width so the T-term sum keeps unit-ish variance.
+        lo.add("pool", (spec.pool_rows, spec.dc), ("normal", 1.0 / spec.dim))
+    elif spec.kind == "elementwise":
+        lo.add("pool_flat", (spec.pool_rows,), ("normal", 1.0 / spec.dim))
+    elif spec.kind == "dhe":
+        h, d, f = spec.dhe_hidden, spec.dim, spec.n_features
+        for i, (fi, fo) in enumerate([(spec.n_hash, h), (h, h), (h, d)]):
+            limit = (6.0 / (fi + fo)) ** 0.5
+            lo.add(f"dhe_w{i}", (f, fi, fo), ("uniform", limit))
+            lo.add(f"dhe_b{i}", (f, fo), ("zeros",))
+    else:
+        raise ValueError(spec.kind)
+
+    mlp_fields(lo, "bot", [spec.n_dense, *spec.bot_mlp, spec.dim])
+    n = spec.n_features + 1
+    n_inter = n * (n - 1) // 2
+    mlp_fields(lo, "top", [spec.dim + n_inter, *spec.top_mlp, 1])
+    lo.add("metrics", (len(METRIC_NAMES),), ("zeros",))
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _mlp(params: dict, prefix: str, x: jnp.ndarray, n_layers: int, *, relu_last: bool) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = x @ params[f"{prefix}_w{i}"] + params[f"{prefix}_b{i}"]
+        if relu_last or i + 1 < n_layers:
+            x = jax.nn.relu(x)
+    return x
+
+
+def embed(spec: ArtifactSpec, params: dict, emb_in: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup → ``f32[B, F, d]`` for any method kind."""
+    if spec.kind == "rowwise":
+        if spec.impl == "pallas":
+            return gather_sum_ad(params["pool"], emb_in)
+        return kref.gather_sum_ref(params["pool"], emb_in)
+    if spec.kind == "elementwise":
+        if spec.impl == "pallas":
+            return gather_elements_ad(params["pool_flat"], emb_in)
+        return kref.gather_elements_ref(params["pool_flat"], emb_in)
+    if spec.kind == "dhe":
+        # per-feature 2-hidden-layer MLP with Mish (Kang et al. 2021)
+        x = emb_in  # [B, F, n_hash]
+        for i in range(3):
+            x = jnp.einsum("bfi,fio->bfo", x, params[f"dhe_w{i}"]) + params[f"dhe_b{i}"]
+            if i < 2:
+                x = jax.nn.mish(x)
+        return x
+    raise ValueError(spec.kind)
+
+
+def forward_logits(
+    spec: ArtifactSpec, params: dict, dense: jnp.ndarray, emb_in: jnp.ndarray
+) -> jnp.ndarray:
+    """Full DLRM forward: ``→ f32[B]`` logits."""
+    n_bot = len(spec.bot_mlp) + 1
+    n_top = len(spec.top_mlp) + 1
+    bot = _mlp(params, "bot", dense, n_bot, relu_last=True)  # [B, d]
+    emb = embed(spec, params, emb_in)  # [B, F, d]
+    z = jnp.concatenate([emb, bot[:, None, :]], axis=1)  # [B, F+1, d]
+    if spec.impl == "pallas":
+        inter = interaction_pallas(z)
+    else:
+        inter = kref.interaction_ref(z)
+    top_in = jnp.concatenate([bot, inter], axis=1)
+    return _mlp(params, "top", top_in, n_top, relu_last=False)[:, 0]
+
+
+def bce_from_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean binary cross-entropy, numerically stable in logit space."""
+    return jnp.mean(jax.nn.softplus(logits) - labels * logits)
+
+
+# ---------------------------------------------------------------------------
+# Executables
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(spec: ArtifactSpec, layout: Layout):
+    """``(state, dense, emb_in, labels) → state'`` with fused SGD + metrics."""
+
+    def train_step(state, dense, emb_in, labels):
+        tensors = layout.unpack(state)
+        metrics = tensors.pop("metrics")
+
+        def loss_fn(params):
+            logits = forward_logits(spec, params, dense, emb_in)
+            return bce_from_logits(logits, labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(tensors)
+        new = {k: v - spec.lr * grads[k] for k, v in tensors.items()}
+        b = float(labels.shape[0] if hasattr(labels, "shape") else spec.batch)
+        new["metrics"] = jnp.stack(
+            [
+                metrics[0] + loss * b,  # loss_sum
+                metrics[1] + b,  # examples
+                metrics[2] + 1.0,  # steps
+                loss,  # last_loss
+            ]
+        )
+        return layout.pack(new)
+
+    return train_step
+
+
+def make_predict(spec: ArtifactSpec, layout: Layout):
+    """``(state, dense, emb_in) → f32[B]`` probabilities.
+
+    Perf note (EXPERIMENTS.md §Perf #7): predict always lowers the
+    reference (pure-jnp) graph. Interpret-mode Pallas re-stages the whole
+    pool per batch tile, which costs ~7× on the eval path at eval_batch
+    1024 while adding nothing — the kernels' correctness is pinned by the
+    train path and the pytest parity suite. The two graphs are
+    numerically interchangeable (tests/test_model.py::
+    test_pallas_and_reference_impl_agree).
+    """
+    import dataclasses
+
+    pspec = dataclasses.replace(spec, impl="reference")
+
+    def predict(state, dense, emb_in):
+        tensors = layout.unpack(state)
+        tensors.pop("metrics")
+        return jax.nn.sigmoid(forward_logits(pspec, tensors, dense, emb_in))
+
+    return predict
+
+
+def make_readout(layout: Layout):
+    """``state → f32[len(METRIC_NAMES)]`` (metric slots)."""
+    m = layout["metrics"]
+
+    def readout(state):
+        return state[m.offset : m.offset + m.size]
+
+    return readout
+
+
+def emb_input_shape(spec: ArtifactSpec, batch: int) -> tuple[tuple[int, ...], str]:
+    """(shape, dtype-name) of the embedding-side input for a given batch."""
+    f = spec.n_features
+    if spec.kind == "rowwise":
+        return (batch, f, spec.t, spec.c), "int32"
+    if spec.kind == "elementwise":
+        return (batch, f, spec.dim), "int32"
+    if spec.kind == "dhe":
+        return (batch, f, spec.n_hash), "float32"
+    raise ValueError(spec.kind)

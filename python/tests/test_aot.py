@@ -1,0 +1,110 @@
+"""AOT pipeline tests: HLO text emission, manifest consistency, op stats."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model, specs
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    spec = specs.ArtifactSpec(
+        "aot_t", "smoke", "cce", cap=16, batch=32, eval_batch=64,
+        dim=8, bot_mlp=(16,), top_mlp=(16,),
+    )
+    manifest = aot.lower_artifact(spec, out, dump_stats=False)
+    return out, spec, manifest
+
+
+def test_hlo_files_exist_and_are_text(built):
+    out, spec, manifest = built
+    for kind, fname in manifest["executables"].items():
+        path = os.path.join(out, fname)
+        assert os.path.exists(path), fname
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{kind}: not HLO text"
+
+
+def test_manifest_layout_covers_state(built):
+    _, _, manifest = built
+    total = sum(f["size"] for f in manifest["layout"])
+    assert total == manifest["state_size"]
+    # offsets contiguous and ordered
+    off = 0
+    for f in manifest["layout"]:
+        assert f["offset"] == off
+        off += f["size"]
+
+
+def test_manifest_metrics_location(built):
+    _, _, manifest = built
+    m = manifest["metrics"]
+    last = manifest["layout"][-1]
+    assert last["name"] == "metrics"
+    assert m["offset"] == last["offset"]
+    assert m["names"] == ["loss_sum", "examples", "steps", "last_loss"]
+
+
+def test_manifest_input_shapes(built):
+    _, spec, manifest = built
+    tr = {i["name"]: i for i in manifest["inputs"]["train"]}
+    assert tr["state"]["shape"] == [manifest["state_size"]]
+    assert tr["dense"]["shape"] == [spec.batch, spec.n_dense]
+    assert tr["emb"]["shape"] == [spec.batch, spec.n_features, spec.t, spec.c]
+    assert tr["emb"]["dtype"] == "i32"
+    assert manifest["outputs"]["train"]["shape"] == [manifest["state_size"]]
+
+
+def test_hlo_stats_finds_ops():
+    spec = specs.ArtifactSpec(
+        "aot_s", "smoke", "hash", cap=8, batch=32, eval_batch=32,
+        dim=8, bot_mlp=(8,), top_mlp=(8,), impl="reference",
+    )
+    lo = model.build_layout(spec)
+    s = jax.ShapeDtypeStruct((lo.size,), jnp.float32)
+    d = jax.ShapeDtypeStruct((32, 13), jnp.float32)
+    e = jax.ShapeDtypeStruct((32, 4, 1, 1), jnp.int32)
+    l = jax.ShapeDtypeStruct((32,), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(model.make_train_step(spec, lo)).lower(s, d, e, l))
+    stats = aot.hlo_stats(text)
+    assert "dot" in stats and stats["dot"] >= 4  # fwd+bwd MLP matmuls
+    assert any(k.startswith("scatter") for k in stats), stats  # embedding grad
+
+
+def test_single_array_root(built):
+    """The packed-state convention requires a non-tuple root (DESIGN.md §7)."""
+    out, _, manifest = built
+    text = open(os.path.join(out, manifest["executables"]["train"])).read()
+    root_lines = [ln for ln in text.splitlines() if "ROOT" in ln]
+    entry_root = root_lines[-1]
+    assert "f32[" in entry_root and "(f32" not in entry_root.split("=")[1].split(" ")[1], entry_root
+
+
+def test_index_json_merging(tmp_path):
+    # two aot runs must merge their artifact lists
+    idx = {"artifacts": ["a"], "kmeans": [], "datasets": {}}
+    p = tmp_path / "index.json"
+    p.write_text(json.dumps(idx))
+    loaded = json.loads(p.read_text())
+    merged = sorted(set(loaded["artifacts"]) | {"b"})
+    assert merged == ["a", "b"]
+
+
+def test_dataset_presets_complete():
+    for name, ds in specs.DATASETS.items():
+        assert len(ds["vocabs"]) >= 4, name
+        assert ds["train_samples"] > 0
+        assert all(v > 0 for v in ds["vocabs"])
+
+
+def test_sweep_specs_cover_methods_and_caps():
+    names = {s.name for s in specs.sweep_specs()}
+    for m in specs.SWEEP_METHODS:
+        for cap in specs.SWEEP_CAPS:
+            assert f"sweep_kaggle_small_{m}_{cap}" in names
+    assert "sweep_kaggle_small_full_0" in names

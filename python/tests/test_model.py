@@ -1,0 +1,236 @@
+"""Model-level tests: layout round-trips, forward semantics, impl parity,
+and train-step behaviour (loss decreases) — all in pure JAX before AOT."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, specs
+from compile.layout import METRIC_NAMES, Layout, mlp_fields
+
+
+def tiny_spec(method="cce", impl="pallas", **kw):
+    defaults = dict(
+        name="t", dataset="smoke", method=method, cap=16, batch=32, eval_batch=64,
+        dim=8, bot_mlp=(16,), top_mlp=(16,), impl=impl,
+    )
+    defaults.update(kw)
+    return specs.ArtifactSpec(**defaults)
+
+
+def init_state(layout: Layout, seed=0) -> jnp.ndarray:
+    """Python mirror of the Rust initializer (rust/src/tables/init.rs)."""
+    rng = np.random.default_rng(seed)
+    out = np.zeros(layout.size, dtype=np.float32)
+    for f in layout.fields:
+        if f.init[0] == "normal":
+            out[f.offset : f.offset + f.size] = rng.normal(0, f.init[1], f.size)
+        elif f.init[0] == "uniform":
+            out[f.offset : f.offset + f.size] = rng.uniform(-f.init[1], f.init[1], f.size)
+    return jnp.asarray(out)
+
+
+def random_inputs(spec, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = jnp.asarray(rng.normal(size=(batch, spec.n_dense)).astype(np.float32))
+    shape, dtype = model.emb_input_shape(spec, batch)
+    if dtype == "int32":
+        hi = max(spec.pool_rows, 1)
+        emb = jnp.asarray(rng.integers(0, hi, size=shape).astype(np.int32))
+    else:
+        emb = jnp.asarray(rng.uniform(-1, 1, size=shape).astype(np.float32))
+    labels = jnp.asarray((rng.uniform(size=batch) < 0.3).astype(np.float32))
+    return dense, emb, labels
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+
+def test_layout_offsets_contiguous():
+    lo = Layout()
+    lo.add("a", (3, 4), ("zeros",))
+    lo.add("b", (5,), ("normal", 0.1))
+    assert lo["a"].offset == 0 and lo["b"].offset == 12 and lo.size == 17
+
+
+def test_layout_pack_unpack_roundtrip():
+    spec = tiny_spec()
+    lo = model.build_layout(spec)
+    state = init_state(lo, seed=1)
+    tensors = lo.unpack(state)
+    back = lo.pack(tensors)
+    np.testing.assert_array_equal(state, back)
+
+
+def test_layout_rejects_duplicates():
+    lo = Layout()
+    lo.add("a", (2,), ("zeros",))
+    with pytest.raises(ValueError, match="duplicate"):
+        lo.add("a", (2,), ("zeros",))
+
+
+def test_layout_pack_shape_mismatch():
+    lo = Layout()
+    lo.add("a", (2, 2), ("zeros",))
+    with pytest.raises(ValueError, match="expected"):
+        lo.pack({"a": jnp.zeros((4,))})
+
+
+def test_metrics_is_last_field():
+    for method in ["hash", "cce", "robe", "dhe"]:
+        lo = model.build_layout(tiny_spec(method=method))
+        assert lo.fields[-1].name == "metrics"
+        assert lo.fields[-1].offset + lo.fields[-1].size == lo.size
+        assert lo.fields[-1].shape == (len(METRIC_NAMES),)
+
+
+def test_mlp_fields_sizes():
+    lo = Layout()
+    mlp_fields(lo, "m", [13, 64, 32, 16])
+    assert lo["m_w0"].shape == (13, 64)
+    assert lo["m_w2"].shape == (32, 16)
+    assert lo["m_b2"].shape == (16,)
+
+
+# ---------------------------------------------------------------------------
+# spec arithmetic (must mirror tables/layout.rs)
+# ---------------------------------------------------------------------------
+
+
+def test_rows_for_caps():
+    assert specs.rows_for([10, 100], cap=50, t=2, c=4) == 2 * 4 * (10 + 50)
+    assert specs.rows_for([10, 100], cap=specs.NO_CAP, t=1, c=1) == 110
+
+
+def test_dhe_hidden_budget():
+    for cap in [64, 1024, 16384]:
+        for dim in [8, 16]:
+            h = specs.dhe_hidden_for(cap, dim)
+            params = 2 * h * h + (2 + dim) * h + dim
+            budget = cap * dim
+            assert params <= budget * 1.15  # within 15% of the budget
+            assert params >= budget * 0.5 or h == 4
+
+
+def test_embedding_params_accounting():
+    s = tiny_spec(method="cce")
+    assert s.embedding_params() == s.pool_rows * s.dc
+    s = tiny_spec(method="robe")
+    assert s.embedding_params() == s.pool_rows
+    s = tiny_spec(method="dhe")
+    h, d = s.dhe_hidden, s.dim
+    assert s.embedding_params() == s.n_features * (2 * h * h + 2 * h + h * d + d)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["hash", "hashemb", "ce", "cce", "robe", "dhe"])
+def test_forward_shape_and_finite(method):
+    spec = tiny_spec(method=method)
+    lo = model.build_layout(spec)
+    state = init_state(lo)
+    dense, emb, _ = random_inputs(spec, spec.batch)
+    params = lo.unpack(state)
+    params.pop("metrics")
+    logits = model.forward_logits(spec, params, dense, emb)
+    assert logits.shape == (spec.batch,)
+    assert np.all(np.isfinite(logits))
+
+
+@pytest.mark.parametrize("method", ["cce", "robe"])
+def test_pallas_and_reference_impl_agree(method):
+    sp, sr = tiny_spec(method=method), tiny_spec(method=method, impl="reference")
+    lo = model.build_layout(sp)
+    state = init_state(lo, seed=7)
+    dense, emb, _ = random_inputs(sp, sp.batch, seed=7)
+    params = lo.unpack(state)
+    params.pop("metrics")
+    lp = model.forward_logits(sp, params, dense, emb)
+    lr_ = model.forward_logits(sr, params, dense, emb)
+    np.testing.assert_allclose(lp, lr_, rtol=1e-4, atol=1e-5)
+
+
+def test_bce_matches_closed_form():
+    logits = jnp.asarray([0.0, 2.0, -2.0])
+    labels = jnp.asarray([1.0, 1.0, 0.0])
+    want = np.mean(
+        [-np.log(0.5), -np.log(1 / (1 + np.exp(-2.0))), -np.log(1 - 1 / (1 + np.exp(2.0)))]
+    )
+    np.testing.assert_allclose(model.bce_from_logits(logits, labels), want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["hash", "cce", "dhe"])
+def test_train_step_decreases_loss(method):
+    spec = tiny_spec(method=method, impl="reference")
+    lo = model.build_layout(spec)
+    step = jax.jit(model.make_train_step(spec, lo))
+    state = init_state(lo, seed=3)
+    dense, emb, labels = random_inputs(spec, spec.batch, seed=3)
+    losses = []
+    for _ in range(30):
+        state = step(state, dense, emb, labels)
+        losses.append(float(state[lo["metrics"].offset + 3]))
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
+
+
+def test_train_step_metrics_accumulate():
+    spec = tiny_spec(impl="reference")
+    lo = model.build_layout(spec)
+    step = jax.jit(model.make_train_step(spec, lo))
+    state = init_state(lo)
+    dense, emb, labels = random_inputs(spec, spec.batch)
+    for _ in range(5):
+        state = step(state, dense, emb, labels)
+    m = lo["metrics"]
+    metrics = np.asarray(state[m.offset : m.offset + m.size])
+    assert metrics[1] == 5 * spec.batch  # examples
+    assert metrics[2] == 5  # steps
+    assert metrics[0] > 0  # loss_sum
+
+
+def test_train_step_only_touched_rows_change():
+    """SGD must leave un-gathered pool rows untouched (sparse grads)."""
+    spec = tiny_spec(method="hash", impl="reference")
+    lo = model.build_layout(spec)
+    step = jax.jit(model.make_train_step(spec, lo))
+    state0 = init_state(lo, seed=5)
+    dense, _, labels = random_inputs(spec, spec.batch, seed=5)
+    emb = jnp.zeros((spec.batch, spec.n_features, 1, 1), dtype=jnp.int32)  # only row 0
+    state1 = step(state0, dense, emb, labels)
+    pool_f = lo["pool"]
+    p0 = np.asarray(state0[pool_f.offset : pool_f.offset + pool_f.size]).reshape(pool_f.shape)
+    p1 = np.asarray(state1[pool_f.offset : pool_f.offset + pool_f.size]).reshape(pool_f.shape)
+    assert not np.allclose(p0[0], p1[0])  # row 0 trained
+    np.testing.assert_array_equal(p0[1:], p1[1:])  # everything else frozen
+
+
+def test_predict_in_unit_interval():
+    spec = tiny_spec(impl="reference")
+    lo = model.build_layout(spec)
+    predict = jax.jit(model.make_predict(spec, lo))
+    state = init_state(lo)
+    dense, emb, _ = random_inputs(spec, spec.eval_batch)
+    p = predict(state, dense, emb)
+    assert p.shape == (spec.eval_batch,)
+    assert np.all((np.asarray(p) >= 0) & (np.asarray(p) <= 1))
+
+
+def test_readout_slices_metrics():
+    spec = tiny_spec()
+    lo = model.build_layout(spec)
+    ro = jax.jit(model.make_readout(lo))
+    state = np.zeros(lo.size, dtype=np.float32)
+    m = lo["metrics"]
+    state[m.offset : m.offset + m.size] = [1, 2, 3, 4]
+    np.testing.assert_array_equal(ro(jnp.asarray(state)), [1, 2, 3, 4])

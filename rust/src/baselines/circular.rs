@@ -1,0 +1,141 @@
+//! "Circular clustering" — the Appendix A/H negative result, kept as a
+//! baseline because the paper's table-collapse diagnostics (H₁/H₂) are
+//! defined by it.
+//!
+//! Instead of clustering each column's own d/c-dimensional embeddings,
+//! circular clustering clusters every column on the FULL d-dimensional
+//! embedding. All columns then see (nearly) the same geometry, so their
+//! index-pointer tables come out (nearly) identical — pairwise entropy H₂
+//! collapses toward H₁ and the method degenerates to the hashing trick.
+
+use crate::coordinator::cluster::ClusterConfig;
+use crate::kmeans::{kmeans, KmeansConfig};
+use crate::runtime::manifest::FieldDesc;
+use crate::tables::indexer::Indexer;
+use crate::tables::layout::SubtableId;
+use crate::util::Rng;
+
+/// Like `coordinator::cluster_event`, but clustering every column on the
+/// concatenated full-dim embedding (the failure mode under study).
+pub fn circular_cluster_event(
+    state: &mut [f32],
+    pool: &FieldDesc,
+    indexer: &mut Indexer,
+    cfg: &ClusterConfig,
+) {
+    let plan = indexer.plan.clone();
+    assert!(plan.t >= 2);
+    let dc = plan.dc;
+    let d = dc * plan.c;
+    let pool_data = state[pool.offset..pool.offset + pool.size].to_vec();
+    let rng = Rng::new(cfg.seed ^ 0xC19C);
+
+    for f in 0..plan.n_features() {
+        if indexer.is_identity(SubtableId { feature: f, term: 0, column: 0 }) {
+            continue;
+        }
+        let vocab = plan.vocabs[f];
+        let k = plan.subtable_rows(f);
+        // full-dim embeddings: concat over columns of Σ_t subtable rows
+        let mut pts = vec![0f32; vocab * d];
+        for j in 0..plan.c {
+            for t in 0..plan.t {
+                let id = SubtableId { feature: f, term: t, column: j };
+                for v in 0..vocab as u32 {
+                    let row = indexer.global_row(id, v) as usize;
+                    let src = &pool_data[row * dc..(row + 1) * dc];
+                    let dst = &mut pts[v as usize * d + j * dc..][..dc];
+                    for e in 0..dc {
+                        dst[e] += src[e];
+                    }
+                }
+            }
+        }
+        // ONE clustering of the full vectors...
+        let res = kmeans(
+            &pts,
+            d,
+            &KmeansConfig {
+                k,
+                n_iter: cfg.kmeans_iters,
+                max_points_per_centroid: cfg.points_per_centroid,
+                seed: cfg.seed ^ (f as u64) << 20,
+                ..Default::default()
+            },
+        );
+        // ...applied to EVERY column: identical index-pointer functions,
+        // centroids projected onto each column's block
+        for j in 0..plan.c {
+            let main = SubtableId { feature: f, term: 0, column: j };
+            let base0 = plan.subtable_base(main);
+            let k_eff = res.centroids.len() / d;
+            let dst = &mut state[pool.offset + base0 * dc..pool.offset + (base0 + k) * dc];
+            dst.fill(0.0);
+            for cw in 0..k_eff {
+                dst[cw * dc..(cw + 1) * dc]
+                    .copy_from_slice(&res.centroids[cw * d + j * dc..][..dc]);
+            }
+            indexer.set_learned(main, res.assignments.clone());
+            for t in 1..plan.t {
+                let helper = SubtableId { feature: f, term: t, column: j };
+                let base = plan.subtable_base(helper);
+                state[pool.offset + base * dc..pool.offset + (base + k) * dc].fill(0.0);
+                indexer.set_random(helper, &mut rng.fork((f as u64) << 8 | (t * 7 + j) as u64));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::cluster::cluster_event;
+    use crate::metrics::entropy::{h1, h2};
+    use crate::runtime::manifest::InitSpec;
+    use crate::tables::layout::TablePlan;
+
+    fn setup() -> (Vec<f32>, FieldDesc, Indexer) {
+        let plan = TablePlan::new(&[512], 16, 2, 4, 4);
+        let mut rng = Rng::new(0);
+        let indexer = Indexer::new_rowwise(&mut rng, plan.clone());
+        let size = plan.total_rows * plan.dc;
+        let mut state = vec![0f32; size];
+        Rng::new(1).fill_normal(&mut state, 0.5);
+        let field = FieldDesc {
+            name: "pool".into(),
+            shape: vec![plan.total_rows, plan.dc],
+            offset: 0,
+            size,
+            init: InitSpec::Zeros,
+        };
+        (state, field, indexer)
+    }
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig { kmeans_iters: 25, points_per_centroid: 256, seed: 9 }
+    }
+
+    #[test]
+    fn circular_collapses_pairwise_entropy() {
+        // the Appendix H table: circular clustering's H2 ≈ H1 (collapse),
+        // per-column CCE keeps H2 well above H1
+        let (mut s1, f1, mut ix1) = setup();
+        circular_cluster_event(&mut s1, &f1, &mut ix1, &cfg());
+        let tables_circ: Vec<Vec<u32>> = (0..4)
+            .map(|j| ix1.materialize(SubtableId { feature: 0, term: 0, column: j }))
+            .collect();
+        let (h1c, h2c) = (h1(&tables_circ), h2(&tables_circ));
+
+        let (mut s2, f2, mut ix2) = setup();
+        cluster_event(&mut s2, &f2, &mut ix2, &cfg());
+        let tables_cce: Vec<Vec<u32>> = (0..4)
+            .map(|j| ix2.materialize(SubtableId { feature: 0, term: 0, column: j }))
+            .collect();
+        let (h1p, h2p) = (h1(&tables_cce), h2(&tables_cce));
+
+        // circular: identical columns → pair entropy == column entropy
+        assert!(h2c - h1c < 0.05, "circular H2 {h2c} vs H1 {h1c} — should collapse");
+        // per-column CCE: independent clusterings → extra pair information
+        assert!(h2p - h1p > 0.3, "cce H2 {h2p} vs H1 {h1p} — should NOT collapse");
+    }
+}

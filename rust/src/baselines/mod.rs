@@ -1,0 +1,14 @@
+//! Baseline compression methods.
+//!
+//! Most of the zoo (full / hashing trick / hash embeddings / CE / ROBE /
+//! DHE) needs no code beyond `tables::Indexer` — the methods differ only
+//! in (T, c, cap) and index semantics, exactly the paper's §2.1 framing.
+//! This module holds the two baselines that need real machinery:
+//! post-training Product Quantization and the "circular clustering"
+//! negative result from Appendix A/H.
+
+pub mod circular;
+pub mod pq;
+
+pub use circular::circular_cluster_event;
+pub use pq::{pq_quantize_pool, PqReport};

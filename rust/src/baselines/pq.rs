@@ -1,0 +1,177 @@
+//! Post-training Product Quantization of a trained (full) embedding pool.
+//!
+//! The paper's PQ baseline: train the FULL model, then quantize each
+//! feature's table — split dim `d` into `c` blocks, K-means each block's
+//! rows into `k` codewords, replace each row block by its codeword. The
+//! quantized table is written back into the same state vector, so the
+//! unmodified `predict` executable evaluates the compressed model (no
+//! fine-tuning, which the paper found to overfit immediately).
+
+use crate::kmeans::{kmeans, KmeansConfig};
+use crate::runtime::manifest::FieldDesc;
+use crate::tables::layout::{SubtableId, TablePlan};
+use crate::util::threadpool;
+
+#[derive(Clone, Debug, Default)]
+pub struct PqReport {
+    /// codebook parameters after quantization (centroids)
+    pub codebook_params: usize,
+    /// index-pointer entries (one per value per block)
+    pub index_entries: usize,
+    /// parameters of the original full table
+    pub full_params: usize,
+    /// total K-means reconstruction error
+    pub inertia: f64,
+}
+
+impl PqReport {
+    /// Compression counting codebook + 16-bit pointers in f32 units
+    /// (2 bytes per pointer = ½ f32), the accounting Appendix E suggests.
+    pub fn compression(&self) -> f64 {
+        self.full_params as f64 / (self.codebook_params as f64 + self.index_entries as f64 * 0.5)
+    }
+}
+
+/// Quantize a full-table pool in place.
+///
+/// `plan` must be the full-table plan (t=1, c=1, cap=∞): each feature's
+/// subtable has `vocab` rows of width d. `k` is the codewords per block
+/// and `c_blocks` the number of d/c blocks (the paper's c=4).
+pub fn pq_quantize_pool(
+    state: &mut [f32],
+    pool: &FieldDesc,
+    plan: &TablePlan,
+    k: usize,
+    c_blocks: usize,
+    kmeans_iters: usize,
+    seed: u64,
+) -> PqReport {
+    assert_eq!(plan.t, 1, "PQ baseline runs on the full-table plan");
+    assert_eq!(plan.c, 1);
+    let d = plan.dc;
+    assert_eq!(d % c_blocks, 0, "dim {d} not divisible by {c_blocks} blocks");
+    let db = d / c_blocks;
+    let pool_data_off = pool.offset;
+
+    struct Job {
+        feature: usize,
+        block: usize,
+    }
+    let jobs: Vec<Job> = (0..plan.n_features())
+        .flat_map(|f| (0..c_blocks).map(move |b| Job { feature: f, block: b }))
+        .collect();
+
+    // phase 1 (parallel, read-only): cluster every (feature, block)
+    let pool_snapshot = state[pool.offset..pool.offset + pool.size].to_vec();
+    let results: Vec<std::sync::Mutex<Option<(Vec<u32>, Vec<f32>, f64, usize)>>> =
+        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    threadpool::par_for_each_dynamic(jobs.len(), threadpool::default_threads(), |ji| {
+        let Job { feature, block } = jobs[ji];
+        let vocab = plan.vocabs[feature];
+        let base = plan.subtable_base(SubtableId { feature, term: 0, column: 0 });
+        let k_eff = k.min(vocab);
+        let mut pts = vec![0f32; vocab * db];
+        for v in 0..vocab {
+            let row = &pool_snapshot[(base + v) * d + block * db..][..db];
+            pts[v * db..(v + 1) * db].copy_from_slice(row);
+        }
+        let res = kmeans(
+            &pts,
+            db,
+            &KmeansConfig {
+                k: k_eff,
+                n_iter: kmeans_iters,
+                seed: seed ^ ((feature as u64) << 16) ^ block as u64,
+                ..Default::default()
+            },
+        );
+        *results[ji].lock().unwrap() =
+            Some((res.assignments, res.centroids, res.inertia, k_eff));
+    });
+
+    // phase 2 (serial): write the quantized rows back
+    let mut report = PqReport { full_params: plan.params(), ..Default::default() };
+    for (ji, cell) in results.into_iter().enumerate() {
+        let (assign, centroids, inertia, k_eff) = cell.into_inner().unwrap().unwrap();
+        let Job { feature, block } = jobs[ji];
+        let vocab = plan.vocabs[feature];
+        let base = plan.subtable_base(SubtableId { feature, term: 0, column: 0 });
+        for v in 0..vocab {
+            let cw = &centroids[assign[v] as usize * db..][..db];
+            let dst_off = pool_data_off + (base + v) * d + block * db;
+            state[dst_off..dst_off + db].copy_from_slice(cw);
+        }
+        report.codebook_params += k_eff * db;
+        report.index_entries += vocab;
+        report.inertia += inertia;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::InitSpec;
+    use crate::util::Rng;
+
+    fn setup(vocabs: &[usize], d: usize) -> (Vec<f32>, FieldDesc, TablePlan) {
+        let plan = TablePlan::new(vocabs, usize::MAX, 1, 1, d);
+        let size = plan.total_rows * d;
+        let mut state = vec![0f32; size];
+        Rng::new(3).fill_normal(&mut state, 1.0);
+        let field = FieldDesc {
+            name: "pool".into(),
+            shape: vec![plan.total_rows, d],
+            offset: 0,
+            size,
+            init: InitSpec::Zeros,
+        };
+        (state, field, plan)
+    }
+
+    #[test]
+    fn quantized_rows_come_from_codebook() {
+        let (mut state, field, plan) = setup(&[40], 8);
+        pq_quantize_pool(&mut state, &field, &plan, 4, 2, 20, 0);
+        // per block, at most 4 distinct rows remain
+        for block in 0..2 {
+            let mut uniq = std::collections::HashSet::new();
+            for v in 0..40 {
+                let row: Vec<u32> = state[v * 8 + block * 4..v * 8 + block * 4 + 4]
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+            uniq.insert(row);
+            }
+            assert!(uniq.len() <= 4, "block {block}: {} uniques", uniq.len());
+        }
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_k() {
+        let (state, field, plan) = setup(&[100], 8);
+        let mut s2 = state.clone();
+        let r2 = pq_quantize_pool(&mut s2, &field, &plan, 2, 2, 20, 0);
+        let mut s16 = state.clone();
+        let r16 = pq_quantize_pool(&mut s16, &field, &plan, 16, 2, 20, 0);
+        assert!(r16.inertia < r2.inertia);
+    }
+
+    #[test]
+    fn report_accounting() {
+        let (mut state, field, plan) = setup(&[50, 30], 8);
+        let r = pq_quantize_pool(&mut state, &field, &plan, 8, 4, 10, 1);
+        assert_eq!(r.full_params, 80 * 8);
+        assert_eq!(r.codebook_params, 2 * 4 * 8 * 2); // 2 features × 4 blocks × 8 cw × 2 dims
+        assert_eq!(r.index_entries, 4 * 80);
+        assert!(r.compression() > 1.0);
+    }
+
+    #[test]
+    fn small_vocab_clamps_codewords() {
+        let (mut state, field, plan) = setup(&[3], 4);
+        let r = pq_quantize_pool(&mut state, &field, &plan, 8, 2, 10, 2);
+        assert_eq!(r.codebook_params, 2 * 3 * 2); // k clamped to vocab=3
+        assert!(r.inertia < 1e-9); // 3 points, 3 clusters → exact
+    }
+}

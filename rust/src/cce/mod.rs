@@ -1,0 +1,53 @@
+//! CCE for least squares — the paper's Section 3 algorithms and the
+//! Theorem 3.1 machinery, implemented over the in-repo linalg substrate.
+//!
+//! These are the *theoretical* CCE variants the paper uses to prove
+//! convergence (and to generate Figures 1b, 6 and 8); the production
+//! variant over DLRM lives in `coordinator::cluster`.
+
+mod dense;
+mod sparse;
+pub mod theory;
+
+pub use dense::{dense_cce, DenseCceOptions, DenseCceTrace, NoiseKind};
+pub use sparse::{pq2_factorized_loss, pq_factorized_loss, sparse_cce, SparseCceOptions, SparseCceTrace};
+
+use crate::linalg::Matrix;
+
+/// Loss `‖X·T − Y‖²_F` of a candidate factorization `T = H·M`.
+pub fn factored_loss(x: &Matrix, h: &Matrix, m: &Matrix, y: &Matrix) -> f64 {
+    x.matmul(&h.matmul(m)).sub(y).fro2()
+}
+
+/// The optimal unfactored loss `min_T ‖XT − Y‖²_F` (the floor every CCE
+/// variant approaches).
+pub fn optimal_loss(x: &Matrix, y: &Matrix) -> f64 {
+    let t = crate::linalg::lstsq(x, y);
+    x.matmul(&t).sub(y).fro2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn optimal_loss_zero_for_consistent_system() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(&mut rng, 30, 10);
+        let t = Matrix::randn(&mut rng, 10, 3);
+        let y = x.matmul(&t);
+        assert!(optimal_loss(&x, &y) < 1e-16 * y.fro2());
+    }
+
+    #[test]
+    fn factored_loss_matches_direct() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(&mut rng, 20, 8);
+        let h = Matrix::randn(&mut rng, 8, 4);
+        let m = Matrix::randn(&mut rng, 4, 2);
+        let y = Matrix::randn(&mut rng, 20, 2);
+        let direct = x.matmul(&h).matmul(&m).sub(&y).fro2();
+        assert!((factored_loss(&x, &h, &m, &y) - direct).abs() < 1e-9);
+    }
+}

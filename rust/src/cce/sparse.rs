@@ -1,0 +1,254 @@
+//! Algorithm 2 — Sparse CCE for least squares.
+//!
+//! Each iteration rebuilds the sparse sketch `H = [A | C]`:
+//!   * `A` (d₁ × k_clusters) — one-hot K-means assignments of the rows of
+//!     the current estimate `T = H_{i−1} M_{i−1}` (the *learned* half);
+//!   * `C` (d₁ × sketch_width) — a fresh count-sketch (the *random* half);
+//! then refits `M = argmin ‖X H M − Y‖_F`. This is the least-squares
+//! analogue of Algorithm 3's `h_i ← assignments, h'_i ← fresh hash`.
+
+use crate::hashing::{SignHash, UniversalHash};
+use crate::kmeans::{kmeans, KmeansConfig};
+use crate::linalg::{lstsq, Matrix};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SparseCceOptions {
+    /// total sketch width k = clusters + sketch_width
+    pub k: usize,
+    /// columns reserved for the fresh count-sketch each iteration
+    pub sketch_width: usize,
+    pub iterations: usize,
+    /// K-means Lloyd iterations per clustering
+    pub kmeans_iters: usize,
+    /// apply ±1 count-sketch signs to C (can be disabled; see Appendix D)
+    pub signs: bool,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SparseCceTrace {
+    /// loss after each iteration (index 0 = initial random sketch)
+    pub losses: Vec<f64>,
+    /// final dense estimate `T = H M`
+    pub t: Matrix,
+    /// number of 1s per row of the final H (diagnostics: 2 for [A|C])
+    pub nnz_per_row: usize,
+}
+
+/// Run Algorithm 2. `x: n×d₁`, `y: n×d₂`.
+pub fn sparse_cce(x: &Matrix, y: &Matrix, opts: &SparseCceOptions) -> SparseCceTrace {
+    let (d1, d2) = (x.cols, y.cols);
+    assert!(opts.sketch_width < opts.k, "sketch_width must leave room for clusters");
+    let clusters = opts.k - opts.sketch_width;
+    assert!(opts.k < d1, "k must be < d1");
+    let mut rng = Rng::new(opts.seed);
+
+    // iteration 0: pure random sketch (the Hashing-Trick starting point)
+    let mut h = count_sketch(&mut rng, d1, opts.k, opts.signs);
+    let mut m = lstsq(&x.matmul(&h), y);
+    let mut t = h.matmul(&m);
+    let mut losses = vec![x.matmul(&t).sub(y).fro2()];
+
+    for it in 0..opts.iterations {
+        // cluster the rows of the current dense estimate T (d₁ points in d₂ dims)
+        let pts: Vec<f32> = t.data.iter().map(|&v| v as f32).collect();
+        let res = kmeans(
+            &pts,
+            d2,
+            &KmeansConfig {
+                k: clusters,
+                n_iter: opts.kmeans_iters,
+                seed: opts.seed ^ (it as u64 + 1).wrapping_mul(0x9E37),
+                ..Default::default()
+            },
+        );
+        // A: one-hot assignments; C: fresh count-sketch
+        let mut new_h = Matrix::zeros(d1, opts.k);
+        for (row, &a) in res.assignments.iter().enumerate() {
+            new_h[(row, a as usize)] = 1.0;
+        }
+        if opts.sketch_width > 0 {
+            let c = count_sketch(&mut rng, d1, opts.sketch_width, opts.signs);
+            for row in 0..d1 {
+                for j in 0..opts.sketch_width {
+                    new_h[(row, clusters + j)] = c[(row, j)];
+                }
+            }
+        }
+        h = new_h;
+        m = lstsq(&x.matmul(&h), y);
+        t = h.matmul(&m);
+        losses.push(x.matmul(&t).sub(y).fro2());
+    }
+    let nnz = if opts.sketch_width > 0 { 2 } else { 1 };
+    SparseCceTrace { losses, t, nnz_per_row: nnz }
+}
+
+/// A count-sketch matrix: one ±1 per row (Appendix D).
+fn count_sketch(rng: &mut Rng, d1: usize, width: usize, signs: bool) -> Matrix {
+    let h = UniversalHash::new(rng, width as u32);
+    let s = SignHash::new(rng);
+    let mut m = Matrix::zeros(d1, width);
+    for row in 0..d1 {
+        let col = h.hash(row as u32) as usize;
+        m[(row, col)] = if signs { s.sign(row as u32) as f64 } else { 1.0 };
+    }
+    m
+}
+
+/// The paper's Figure 1b comparators: factorize the OPTIMAL dense solution
+/// `T*` post-hoc with K-means (1 one per row), returning the loss — i.e.
+/// Product Quantization applied after solving the full problem.
+pub fn pq_factorized_loss(
+    x: &Matrix,
+    y: &Matrix,
+    k: usize,
+    kmeans_iters: usize,
+    seed: u64,
+) -> f64 {
+    let t_star = lstsq(x, y);
+    let d2 = y.cols;
+    let pts: Vec<f32> = t_star.data.iter().map(|&v| v as f32).collect();
+    let res = kmeans(
+        &pts,
+        d2,
+        &KmeansConfig { k, n_iter: kmeans_iters, seed, ..Default::default() },
+    );
+    let mut h = Matrix::zeros(x.cols, k);
+    for (row, &a) in res.assignments.iter().enumerate() {
+        h[(row, a as usize)] = 1.0;
+    }
+    // refit M on the compressed column space (strictly better than using
+    // the centroids directly)
+    let m = lstsq(&x.matmul(&h), y);
+    x.matmul(&h.matmul(&m)).sub(y).fro2()
+}
+
+/// Figure 1b's "two 1s per row" comparator: factorize T* with
+/// `H = [A | C]` — K-means assignments of T*'s rows plus a count-sketch —
+/// and refit M. Strictly more expressive than the 1-nnz PQ above.
+pub fn pq2_factorized_loss(
+    x: &Matrix,
+    y: &Matrix,
+    k: usize,
+    sketch_width: usize,
+    kmeans_iters: usize,
+    seed: u64,
+) -> f64 {
+    assert!(sketch_width < k);
+    let clusters = k - sketch_width;
+    let t_star = lstsq(x, y);
+    let d2 = y.cols;
+    let pts: Vec<f32> = t_star.data.iter().map(|&v| v as f32).collect();
+    let res = kmeans(
+        &pts,
+        d2,
+        &KmeansConfig { k: clusters, n_iter: kmeans_iters, seed, ..Default::default() },
+    );
+    let mut h = Matrix::zeros(x.cols, k);
+    for (row, &a) in res.assignments.iter().enumerate() {
+        h[(row, a as usize)] = 1.0;
+    }
+    let mut rng = Rng::new(seed ^ 0x2222);
+    let c = count_sketch(&mut rng, x.cols, sketch_width, false);
+    for row in 0..x.cols {
+        for j in 0..sketch_width {
+            h[(row, clusters + j)] = c[(row, j)];
+        }
+    }
+    let m = lstsq(&x.matmul(&h), y);
+    x.matmul(&h.matmul(&m)).sub(y).fro2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cce::optimal_loss;
+
+    fn problem(seed: u64, n: usize, d1: usize, d2: usize) -> (Matrix, Matrix) {
+        // clusterable T*: Y = X T_true with T_true rows drawn from few prototypes
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(&mut rng, n, d1);
+        let protos = Matrix::randn(&mut rng, 8, d2);
+        let mut t_true = Matrix::zeros(d1, d2);
+        for i in 0..d1 {
+            let p = rng.below(8) as usize;
+            for j in 0..d2 {
+                t_true[(i, j)] = protos[(p, j)] + 0.05 * rng.normal();
+            }
+        }
+        let y = x.matmul(&t_true).add(&Matrix::randn(&mut rng, n, d2).scale(0.1));
+        (x, y)
+    }
+
+    #[test]
+    fn improves_over_pure_sketch() {
+        let (x, y) = problem(0, 200, 80, 4);
+        let tr = sparse_cce(
+            &x,
+            &y,
+            &SparseCceOptions {
+                k: 24, sketch_width: 8, iterations: 6, kmeans_iters: 25, signs: false, seed: 1,
+            },
+        );
+        let first = tr.losses[0];
+        let last = *tr.losses.last().unwrap();
+        assert!(last < first * 0.8, "losses {:?}", tr.losses);
+    }
+
+    #[test]
+    fn moves_toward_pq_of_optimal_solution() {
+        // CCE never sees T*; the paper (Fig. 1) notes convergence toward
+        // the post-hoc factorization takes many iterations, so the test
+        // asserts steady movement toward it, not arrival.
+        let (x, y) = problem(2, 250, 100, 4);
+        let opt = optimal_loss(&x, &y);
+        let pq = pq_factorized_loss(&x, &y, 16, 25, 3);
+        assert!(pq >= opt);
+        let run = |iters| {
+            let tr = sparse_cce(
+                &x,
+                &y,
+                &SparseCceOptions {
+                    k: 24, sketch_width: 8, iterations: iters, kmeans_iters: 25,
+                    signs: false, seed: 4,
+                },
+            );
+            *tr.losses.last().unwrap() - opt
+        };
+        let e0 = run(0);
+        let e8 = run(8);
+        let e30 = run(30);
+        assert!(e8 < e0 * 0.6, "8 iters: {e8} vs initial {e0}");
+        assert!(e30 < e8 * 0.5, "30 iters: {e30} vs 8 iters {e8}");
+    }
+
+    #[test]
+    fn signs_variant_runs() {
+        let (x, y) = problem(5, 100, 40, 3);
+        let tr = sparse_cce(
+            &x,
+            &y,
+            &SparseCceOptions {
+                k: 12, sketch_width: 4, iterations: 3, kmeans_iters: 10, signs: true, seed: 6,
+            },
+        );
+        assert_eq!(tr.losses.len(), 4);
+        assert!(tr.losses.iter().all(|l| l.is_finite()));
+        assert_eq!(tr.nnz_per_row, 2);
+    }
+
+    #[test]
+    fn pure_clustering_variant_has_one_nnz() {
+        let (x, y) = problem(7, 100, 40, 3);
+        let tr = sparse_cce(
+            &x,
+            &y,
+            &SparseCceOptions {
+                k: 12, sketch_width: 0, iterations: 2, kmeans_iters: 10, signs: false, seed: 8,
+            },
+        );
+        assert_eq!(tr.nnz_per_row, 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Theorem 3.1 — the convergence bound and its ingredients, used by the
+//! Figure 8 bench to plot measured loss against the proven envelope.
+//!
+//!   E‖X T_i − Y‖²_F ≤ (1 − ρ)^{i(k−d₂)} ‖X T*‖²_F + ‖X T* − Y‖²_F
+//!
+//! with ρ = σ_min(X)² / ‖X‖²_F, and the improved ρ = 1/d₁ for the
+//! SVD-aligned noise variant (Corollary B.1 / Appendix B discussion).
+
+use crate::linalg::{lstsq, svd, Matrix};
+
+/// Ingredients of the bound for a concrete (X, Y) instance.
+#[derive(Clone, Debug)]
+pub struct BoundParams {
+    /// ρ = σ_min²/‖X‖²_F
+    pub rho: f64,
+    /// the improved rate constant 1/d₁ (smart noise)
+    pub rho_smart: f64,
+    /// ‖X T*‖²_F — the decaying term's scale
+    pub signal: f64,
+    /// ‖X T* − Y‖²_F — the irreducible floor
+    pub floor: f64,
+}
+
+pub fn bound_params(x: &Matrix, y: &Matrix) -> BoundParams {
+    let dec = svd(x);
+    let t_star = lstsq(x, y);
+    let xt = x.matmul(&t_star);
+    BoundParams {
+        rho: dec.rho(),
+        rho_smart: 1.0 / x.cols as f64,
+        signal: xt.fro2(),
+        floor: xt.sub(y).fro2(),
+    }
+}
+
+impl BoundParams {
+    /// Bound after `i` iterations of width-`k` sketches for output dim d₂.
+    pub fn bound_at(&self, i: usize, k: usize, d2: usize, smart: bool) -> f64 {
+        let rho = if smart { self.rho_smart } else { self.rho };
+        let exponent = (i * (k - d2)) as f64;
+        (1.0 - rho).powf(exponent) * self.signal + self.floor
+    }
+
+    /// Iterations needed for a (1+ε) approximation per the paper:
+    /// i = O((d₁/k)·log(1/ε)) under the smart rate.
+    pub fn iters_for_eps(&self, k: usize, d2: usize, eps: f64) -> usize {
+        let rho = self.rho_smart;
+        // (1−ρ)^{i(k−d₂)} ≤ ε·floor/signal
+        let target = (eps * self.floor.max(1e-300) / self.signal.max(1e-300)).ln();
+        let per_iter = ((k - d2) as f64) * (1.0 - rho).ln();
+        (target / per_iter).ceil().max(1.0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cce::{dense_cce, DenseCceOptions, NoiseKind};
+    use crate::util::Rng;
+
+    #[test]
+    fn bound_decreases_to_floor() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::randn(&mut rng, 80, 20);
+        let y = Matrix::randn(&mut rng, 80, 3);
+        let bp = bound_params(&x, &y);
+        assert!(bp.rho > 0.0 && bp.rho <= bp.rho_smart + 1e-12);
+        let b0 = bp.bound_at(0, 10, 3, false);
+        let b5 = bp.bound_at(5, 10, 3, false);
+        let b50 = bp.bound_at(50, 10, 3, false);
+        assert!(b0 > b5 && b5 > b50);
+        assert!(b50 >= bp.floor);
+        assert!((b0 - (bp.signal + bp.floor)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_loss_respects_the_bound_in_expectation() {
+        // average dense-CCE losses over seeds; they must sit at or below
+        // the theory envelope (the bound holds in expectation)
+        let mut rng = Rng::new(1);
+        let x = Matrix::randn(&mut rng, 100, 25);
+        let y = Matrix::randn(&mut rng, 100, 2);
+        let bp = bound_params(&x, &y);
+        let k = 10;
+        let iters = 8;
+        let n_seeds = 8;
+        let mut mean_losses = vec![0.0; iters + 1];
+        for seed in 0..n_seeds {
+            let tr = dense_cce(
+                &x,
+                &y,
+                &DenseCceOptions {
+                    k, iterations: iters, noise: NoiseKind::Iid, half_update: true, seed,
+                },
+            );
+            for (i, &l) in tr.losses.iter().enumerate() {
+                mean_losses[i] += l / n_seeds as f64;
+            }
+        }
+        for (i, &l) in mean_losses.iter().enumerate() {
+            let b = bp.bound_at(i, k, 2, false);
+            assert!(
+                l <= b * 1.15, // slack for finite-sample noise
+                "iteration {i}: mean loss {l} above bound {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn iters_for_eps_scales_like_log() {
+        let mut rng = Rng::new(2);
+        let x = Matrix::randn(&mut rng, 60, 20);
+        let y = Matrix::randn(&mut rng, 60, 2);
+        let bp = bound_params(&x, &y);
+        let i1 = bp.iters_for_eps(10, 2, 1e-1);
+        let i2 = bp.iters_for_eps(10, 2, 1e-2);
+        let i4 = bp.iters_for_eps(10, 2, 1e-4);
+        assert!(i1 <= i2 && i2 <= i4);
+        // log scaling: doubling the digits roughly doubles the extra iterations
+        assert!((i4 - i2) as f64 <= 2.5 * (i2 - i1).max(1) as f64 + 2.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Run configuration: a TOML-subset parser, typed configs, and presets.
+//!
+//! Experiments are launched either from presets (`--preset kaggle_small`)
+//! or from a config file (`--config run.toml`); CLI flags override both.
+
+mod toml;
+
+pub use toml::TomlDoc;
+
+use crate::util::Args;
+use anyhow::{bail, Result};
+
+/// Everything a training run needs besides the artifact itself.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifact name (selects method, dataset shapes, budget)
+    pub artifact: String,
+    pub seed: u64,
+    pub epochs: usize,
+    /// CCE clustering: number of clustering events (ct in the paper)
+    pub cluster_times: usize,
+    /// batches between clusterings (cf); 0 = once per epoch
+    pub cluster_every: usize,
+    /// evaluate on the validation split every this many batches
+    pub eval_every: usize,
+    /// early stopping on validation BCE (paper: stop when the epoch's best
+    /// val BCE fails to improve on the previous epoch's best)
+    pub early_stop: bool,
+    /// shuffle training data each epoch
+    pub shuffle: bool,
+    /// cap on training batches (0 = no cap; smoke tests use this)
+    pub max_batches: usize,
+    /// K-means Lloyd iterations at each clustering event
+    pub kmeans_iters: usize,
+    /// FAISS-style sample budget per centroid
+    pub kmeans_points_per_centroid: usize,
+    /// offload the K-means inner loop to the PJRT kmeans artifact
+    pub kmeans_offload: bool,
+    /// worker threads producing index batches
+    pub pipeline_workers: usize,
+    /// bounded-queue depth between producers and the exec thread
+    pub pipeline_depth: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: "quick_cce".into(),
+            seed: 0,
+            epochs: 1,
+            cluster_times: 1,
+            cluster_every: 0,
+            eval_every: 0,
+            early_stop: false,
+            shuffle: true,
+            max_batches: 0,
+            kmeans_iters: 10,
+            kmeans_points_per_centroid: 32,
+            kmeans_offload: false,
+            pipeline_workers: 2,
+            pipeline_depth: 4,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply CLI overrides on top of this config.
+    pub fn apply_args(mut self, args: &Args) -> TrainConfig {
+        self.artifact = args.str_or("artifact", &self.artifact);
+        self.seed = args.u64_or("seed", self.seed);
+        self.epochs = args.usize_or("epochs", self.epochs);
+        self.cluster_times = args.usize_or("cluster-times", self.cluster_times);
+        self.cluster_every = args.usize_or("cluster-every", self.cluster_every);
+        self.eval_every = args.usize_or("eval-every", self.eval_every);
+        if args.flag("early-stop") {
+            self.early_stop = true;
+        }
+        if args.flag("no-shuffle") {
+            self.shuffle = false;
+        }
+        self.max_batches = args.usize_or("max-batches", self.max_batches);
+        self.kmeans_iters = args.usize_or("kmeans-iters", self.kmeans_iters);
+        if args.flag("kmeans-offload") {
+            self.kmeans_offload = true;
+        }
+        self.pipeline_workers = args.usize_or("workers", self.pipeline_workers);
+        self.pipeline_depth = args.usize_or("queue-depth", self.pipeline_depth);
+        self
+    }
+
+    /// Load from a TOML-subset file ([train] section).
+    pub fn from_toml(doc: &TomlDoc) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        for (k, v) in doc.section("train") {
+            match k.as_str() {
+                "artifact" => c.artifact = v.as_str().to_string(),
+                "seed" => c.seed = v.as_u64()?,
+                "epochs" => c.epochs = v.as_u64()? as usize,
+                "cluster_times" => c.cluster_times = v.as_u64()? as usize,
+                "cluster_every" => c.cluster_every = v.as_u64()? as usize,
+                "eval_every" => c.eval_every = v.as_u64()? as usize,
+                "early_stop" => c.early_stop = v.as_bool()?,
+                "shuffle" => c.shuffle = v.as_bool()?,
+                "max_batches" => c.max_batches = v.as_u64()? as usize,
+                "kmeans_iters" => c.kmeans_iters = v.as_u64()? as usize,
+                "kmeans_points_per_centroid" => {
+                    c.kmeans_points_per_centroid = v.as_u64()? as usize
+                }
+                "kmeans_offload" => c.kmeans_offload = v.as_bool()?,
+                "pipeline_workers" => c.pipeline_workers = v.as_u64()? as usize,
+                "pipeline_depth" => c.pipeline_depth = v.as_u64()? as usize,
+                other => bail!("unknown [train] key {other:?}"),
+            }
+        }
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            bail!("epochs must be ≥ 1");
+        }
+        if self.pipeline_depth == 0 || self.pipeline_workers == 0 {
+            bail!("pipeline workers/depth must be ≥ 1");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_override_defaults() {
+        let args = Args::parse(
+            "x --artifact quick_ce --epochs 3 --cluster-times 6 --kmeans-offload"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = TrainConfig::default().apply_args(&args);
+        assert_eq!(c.artifact, "quick_ce");
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.cluster_times, 6);
+        assert!(c.kmeans_offload);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[train]\nartifact = \"smoke_cce\"\nepochs = 2\nearly_stop = true\nshuffle = false\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.artifact, "smoke_cce");
+        assert_eq!(c.epochs, 2);
+        assert!(c.early_stop);
+        assert!(!c.shuffle);
+    }
+
+    #[test]
+    fn unknown_toml_key_rejected() {
+        let doc = TomlDoc::parse("[train]\nbogus = 1\n").unwrap();
+        assert!(TrainConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn validation_catches_zeroes() {
+        let mut c = TrainConfig::default();
+        c.epochs = 0;
+        assert!(c.validate().is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! TOML-subset parser: `[section]` headers and `key = value` pairs where
+//! value is a string, integer, float, or boolean. That covers every config
+//! file in the repo; arrays/tables-of-tables are intentionally out of scope.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> &str {
+        match self {
+            TomlValue::Str(s) => s,
+            _ => panic!("not a string"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim().to_string();
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections.entry(current.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<TomlDoc> {
+        TomlDoc::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Key/value pairs of a section (empty iterator if absent).
+    pub fn section(&self, name: &str) -> impl Iterator<Item = (&String, &TomlValue)> {
+        self.sections.get(name).into_iter().flatten()
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if let Some(q) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(TomlValue::Str(q.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "# top comment\n[a]\nx = 1\ny = 2.5\nz = \"hi # not comment\"\nw = true # trailing\n\n[b]\nn = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a", "x"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "y"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("a", "z"), Some(&TomlValue::Str("hi # not comment".into())));
+        assert_eq!(doc.get("a", "w"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("b", "n").unwrap().as_u64().unwrap(), 1000);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[a]\nno equals here\n").is_err());
+        assert!(TomlDoc::parse("[a]\nx = @bad\n").is_err());
+    }
+
+    #[test]
+    fn missing_section_is_empty() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert_eq!(doc.section("nope").count(), 0);
+        assert_eq!(doc.get("a", "missing"), None);
+    }
+
+    #[test]
+    fn type_coercions() {
+        assert!(TomlValue::Int(-1).as_u64().is_err());
+        assert_eq!(TomlValue::Int(3).as_f64().unwrap(), 3.0);
+        assert!(TomlValue::Str("x".into()).as_bool().is_err());
+    }
+}

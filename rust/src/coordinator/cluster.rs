@@ -1,0 +1,261 @@
+//! The CCE clustering event (Algorithm 3, `Cluster`):
+//!
+//! For every compressed feature `f` and column `j`:
+//!   1. materialize the current embeddings `T[id] = Σ_t M_t[h_t(id)]` for
+//!      the feature's vocabulary (the paper instead samples 256·k ids for
+//!      the K-means itself — our K-means applies the same FAISS sampling
+//!      rule internally, then assigns the full vocabulary);
+//!   2. K-means them into `k_f` clusters;
+//!   3. `h_0 ← assignments` (learned), `M_0 ← centroids`;
+//!   4. `h_1 ← fresh random hash`, `M_1 ← 0`.
+//!
+//! The state vector is mutated in place on the host; the caller re-uploads
+//! it to the device afterwards. Features whose subtables are identity
+//! (full tables under the cap) are skipped — clustering a lossless table
+//! can only discard information.
+
+use crate::kmeans::{kmeans, KmeansConfig};
+use crate::runtime::manifest::FieldDesc;
+use crate::tables::indexer::Indexer;
+use crate::tables::layout::SubtableId;
+use crate::util::{threadpool, Rng};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub kmeans_iters: usize,
+    pub points_per_centroid: usize,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ClusterOutcome {
+    /// (feature, column) pairs actually clustered
+    pub subtables_clustered: usize,
+    /// total K-means objective across clustered subtables
+    pub total_inertia: f64,
+    pub elapsed_secs: f64,
+}
+
+/// Run one clustering event over all compressed features.
+pub fn cluster_event(
+    state: &mut [f32],
+    pool: &FieldDesc,
+    indexer: &mut Indexer,
+    cfg: &ClusterConfig,
+) -> ClusterOutcome {
+    let t0 = Instant::now();
+    let plan = indexer.plan.clone();
+    assert!(plan.t >= 2, "clustering needs a helper table (T ≥ 2), got T={}", plan.t);
+    let dc = plan.dc;
+    assert_eq!(pool.size, plan.total_rows * dc, "pool field does not match plan");
+
+    // jobs: one per (feature, column) with a non-identity main map
+    let jobs: Vec<(usize, usize)> = (0..plan.n_features())
+        .filter(|&f| {
+            !indexer.is_identity(SubtableId { feature: f, term: 0, column: 0 })
+        })
+        .flat_map(|f| (0..plan.c).map(move |j| (f, j)))
+        .collect();
+
+    // read-only snapshot of the pool for embedding materialization
+    let pool_data = &state[pool.offset..pool.offset + pool.size];
+
+    struct JobResult {
+        f: usize,
+        j: usize,
+        assignments: Vec<u32>,
+        centroids: Vec<f32>,
+        inertia: f64,
+    }
+
+    let results: Vec<std::sync::Mutex<Option<JobResult>>> =
+        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    threadpool::par_for_each_dynamic(jobs.len(), threadpool::default_threads(), |ji| {
+        let (f, j) = jobs[ji];
+        let vocab = plan.vocabs[f];
+        let k = plan.subtable_rows(f);
+        // materialize T for this (f, j): vocab × dc
+        let mut pts = vec![0f32; vocab * dc];
+        for t in 0..plan.t {
+            let id = SubtableId { feature: f, term: t, column: j };
+            for v in 0..vocab as u32 {
+                let row = indexer.global_row(id, v) as usize;
+                let src = &pool_data[row * dc..(row + 1) * dc];
+                let dst = &mut pts[v as usize * dc..(v as usize + 1) * dc];
+                for e in 0..dc {
+                    dst[e] += src[e];
+                }
+            }
+        }
+        let res = kmeans(
+            &pts,
+            dc,
+            &KmeansConfig {
+                k,
+                n_iter: cfg.kmeans_iters,
+                max_points_per_centroid: cfg.points_per_centroid,
+                seed: cfg.seed ^ ((f as u64) << 20) ^ (j as u64),
+                ..Default::default()
+            },
+        );
+        *results[ji].lock().unwrap() = Some(JobResult {
+            f,
+            j,
+            assignments: res.assignments,
+            centroids: res.centroids,
+            inertia: res.inertia,
+        });
+    });
+
+    // apply: centroids → term-0 subtable, zeros → term-1.., maps updated
+    let mut outcome = ClusterOutcome::default();
+    let rng = Rng::new(cfg.seed ^ 0xC1E5);
+    for cell in results {
+        let r = cell.into_inner().unwrap().expect("job did not run");
+        let (f, j) = (r.f, r.j);
+        let k = plan.subtable_rows(f);
+        let main = SubtableId { feature: f, term: 0, column: j };
+        let base0 = plan.subtable_base(main);
+        // centroids may be fewer than k when vocab < k (kmeans clamps)
+        let k_eff = r.centroids.len() / dc;
+        let dst = &mut state[pool.offset + base0 * dc..pool.offset + (base0 + k) * dc];
+        dst.fill(0.0);
+        dst[..k_eff * dc].copy_from_slice(&r.centroids);
+        indexer.set_learned(main, r.assignments);
+        for t in 1..plan.t {
+            let helper = SubtableId { feature: f, term: t, column: j };
+            let base = plan.subtable_base(helper);
+            state[pool.offset + base * dc..pool.offset + (base + k) * dc].fill(0.0);
+            indexer.set_random(helper, &mut rng.fork((f as u64) << 8 | t as u64));
+        }
+        outcome.subtables_clustered += 1;
+        outcome.total_inertia += r.inertia;
+    }
+    outcome.elapsed_secs = t0.elapsed().as_secs_f64();
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::InitSpec;
+    use crate::tables::layout::TablePlan;
+
+    fn setup() -> (Vec<f32>, FieldDesc, Indexer) {
+        let plan = TablePlan::new(&[5, 64], 8, 2, 2, 4); // f0 identity, f1 compressed
+        let mut rng = Rng::new(0);
+        let indexer = Indexer::new_rowwise(&mut rng, plan.clone());
+        let pool_size = plan.total_rows * plan.dc;
+        let mut state = vec![0f32; pool_size + 4];
+        Rng::new(1).fill_normal(&mut state[..pool_size], 0.3);
+        let field = FieldDesc {
+            name: "pool".into(),
+            shape: vec![plan.total_rows, plan.dc],
+            offset: 0,
+            size: pool_size,
+            init: InitSpec::Normal(0.3),
+        };
+        (state, field, indexer)
+    }
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig { kmeans_iters: 20, points_per_centroid: 256, seed: 7 }
+    }
+
+    #[test]
+    fn clusters_only_compressed_features() {
+        let (mut state, field, mut ix) = setup();
+        let out = cluster_event(&mut state, &field, &mut ix, &cfg());
+        // feature 1 has c=2 columns; feature 0 is identity → skipped
+        assert_eq!(out.subtables_clustered, 2);
+        assert!(ix.is_learned(SubtableId { feature: 1, term: 0, column: 0 }));
+        assert!(ix.is_learned(SubtableId { feature: 1, term: 0, column: 1 }));
+        assert!(!ix.is_learned(SubtableId { feature: 1, term: 1, column: 0 }));
+        assert!(ix.is_identity(SubtableId { feature: 0, term: 0, column: 0 }));
+    }
+
+    #[test]
+    fn helper_tables_are_zeroed() {
+        let (mut state, field, mut ix) = setup();
+        cluster_event(&mut state, &field, &mut ix, &cfg());
+        let plan = ix.plan.clone();
+        for j in 0..plan.c {
+            let helper = SubtableId { feature: 1, term: 1, column: j };
+            let base = plan.subtable_base(helper);
+            let k = plan.subtable_rows(1);
+            assert!(
+                state[base * plan.dc..(base + k) * plan.dc].iter().all(|&x| x == 0.0),
+                "helper subtable {j} not zeroed"
+            );
+        }
+    }
+
+    #[test]
+    fn embedding_continuity_ids_keep_close_vectors() {
+        // after clustering, each id's embedding must equal its cluster
+        // centroid, which K-means guarantees is close to the pre-cluster
+        // embedding (that is the whole point of CCE's cluster step)
+        let (mut state, field, mut ix) = setup();
+        let plan = ix.plan.clone();
+        let dc = plan.dc;
+        // embeddings before
+        let emb = |state: &[f32], ix: &Indexer, v: u32, j: usize| -> Vec<f32> {
+            let mut e = vec![0f32; dc];
+            for t in 0..plan.t {
+                let row =
+                    ix.global_row(SubtableId { feature: 1, term: t, column: j }, v) as usize;
+                for d in 0..dc {
+                    e[d] += state[row * dc + d];
+                }
+            }
+            e
+        };
+        let before: Vec<Vec<f32>> = (0..64).map(|v| emb(&state, &ix, v, 0)).collect();
+        cluster_event(&mut state, &field, &mut ix, &cfg());
+        let after: Vec<Vec<f32>> = (0..64).map(|v| emb(&state, &ix, v, 0)).collect();
+        // mean drift must be smaller than mean embedding norm (continuity)
+        let drift: f32 = (0..64)
+            .map(|v| {
+                before[v]
+                    .iter()
+                    .zip(&after[v])
+                    .map(|(a, b)| (a - b).powi(2))
+                    .sum::<f32>()
+                    .sqrt()
+            })
+            .sum::<f32>()
+            / 64.0;
+        let scale: f32 =
+            before.iter().map(|e| e.iter().map(|x| x * x).sum::<f32>().sqrt()).sum::<f32>() / 64.0;
+        assert!(drift < scale, "drift {drift} vs scale {scale}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut s1, f1, mut i1) = setup();
+        let (mut s2, f2, mut i2) = setup();
+        cluster_event(&mut s1, &f1, &mut i1, &cfg());
+        cluster_event(&mut s2, &f2, &mut i2, &cfg());
+        assert_eq!(s1, s2);
+        let id = SubtableId { feature: 1, term: 0, column: 0 };
+        assert_eq!(i1.materialize(id), i2.materialize(id));
+    }
+
+    #[test]
+    #[should_panic(expected = "helper table")]
+    fn rejects_single_term_plans() {
+        let plan = TablePlan::new(&[64], 8, 1, 2, 4);
+        let mut rng = Rng::new(0);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
+        let mut state = vec![0f32; plan.total_rows * plan.dc];
+        let field = FieldDesc {
+            name: "pool".into(),
+            shape: vec![plan.total_rows, plan.dc],
+            offset: 0,
+            size: state.len(),
+            init: InitSpec::Zeros,
+        };
+        cluster_event(&mut state, &field, &mut ix, &cfg());
+    }
+}

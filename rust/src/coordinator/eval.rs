@@ -1,0 +1,42 @@
+//! Split evaluation: stream a split through the `predict` executable and
+//! accumulate BCE/AUC over the real (non-padding) rows only.
+
+use crate::data::batch::{BatchIter, Split};
+use crate::data::synthetic::SyntheticDataset;
+use crate::metrics::EvalAccumulator;
+use crate::runtime::session::{DlrmSession, EmbInput};
+use crate::tables::indexer::{Indexer, MethodKind};
+use anyhow::Result;
+
+/// Evaluate `split`; returns the filled accumulator.
+pub fn evaluate(
+    session: &DlrmSession,
+    indexer: &Indexer,
+    ds: &SyntheticDataset,
+    split: Split,
+) -> Result<EvalAccumulator> {
+    let eb = session.manifest.spec.eval_batch;
+    let mut it = BatchIter::new(ds, split, eb, None);
+    let mut batch = it.alloc_batch();
+    let mut acc = EvalAccumulator::new();
+    let mut rows = vec![0i32; session.emb_elems("predict").unwrap_or(0).max(1)];
+    let mut hashes = vec![0f32; rows.len()];
+    while it.next_into(&mut batch) {
+        let probs = match indexer.kind {
+            MethodKind::RowWise => {
+                indexer.fill_rowwise(&batch.cats, eb, &mut rows);
+                session.predict(&batch.dense, EmbInput::Rows(&rows))?
+            }
+            MethodKind::ElementWise => {
+                indexer.fill_elementwise(&batch.cats, eb, &mut rows);
+                session.predict(&batch.dense, EmbInput::Rows(&rows))?
+            }
+            MethodKind::Dhe => {
+                indexer.fill_dhe(&batch.cats, eb, &mut hashes);
+                session.predict(&batch.dense, EmbInput::Hashes(&hashes))?
+            }
+        };
+        acc.push(&probs[..batch.real], &batch.labels[..batch.real]);
+    }
+    Ok(acc)
+}

@@ -1,0 +1,13 @@
+//! The L3 coordinator — the paper's system contribution: interleaving
+//! K-means re-clustering of the sketch with normal training, plus the
+//! producer/consumer training pipeline, evaluation, early stopping, and a
+//! small serving loop.
+
+pub mod cluster;
+pub mod eval;
+pub mod pipeline;
+pub mod serve;
+pub mod trainer;
+
+pub use cluster::{cluster_event, ClusterConfig, ClusterOutcome};
+pub use trainer::{train, TrainOutcome};

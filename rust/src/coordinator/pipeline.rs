@@ -1,0 +1,150 @@
+//! Producer/consumer batch pipeline with bounded backpressure.
+//!
+//! Worker threads generate raw host batches (zipf sampling is the
+//! expensive part); the exec thread — which owns all PJRT objects — pulls
+//! them in deterministic order. Workers are striped over batch indices and
+//! each has its own bounded channel, so consumption order equals the
+//! unsharded order regardless of worker timing.
+//!
+//! Index generation deliberately happens on the CONSUMER side: CCE
+//! clustering events rewrite the index maps mid-epoch, and any indices
+//! precomputed by producers would go stale (DESIGN.md §2-L3).
+
+use crate::data::batch::{Batch, BatchIter, Split};
+use crate::data::synthetic::SyntheticDataset;
+use std::sync::mpsc::{sync_channel, Receiver};
+
+pub struct BatchPipeline {
+    rx: Vec<Receiver<Batch>>,
+    next: usize,
+    pub n_batches: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl BatchPipeline {
+    /// Stream one epoch of `split` through `workers` producer threads with
+    /// per-worker queue depth `depth`.
+    pub fn start(
+        ds: &SyntheticDataset,
+        split: Split,
+        batch_size: usize,
+        shuffle_seed: Option<u64>,
+        workers: usize,
+        depth: usize,
+    ) -> BatchPipeline {
+        let workers = workers.max(1);
+        let probe = BatchIter::new(ds, split, batch_size, shuffle_seed);
+        let n_batches = probe.n_batches();
+        let mut rx = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, r) = sync_channel::<Batch>(depth.max(1));
+            rx.push(r);
+            // each worker re-creates the iterator and skips to its stripe;
+            // the dataset generator is cheap to clone conceptually but we
+            // rebuild from the spec to keep the thread 'static
+            let spec = ds.spec.clone();
+            handles.push(std::thread::spawn(move || {
+                let ds = SyntheticDataset::new(spec);
+                let mut it = BatchIter::new(&ds, split, batch_size, shuffle_seed);
+                let mut batch = it.alloc_batch();
+                it.skip_batches(w); // jump to this worker's stripe
+                while it.next_into(&mut batch) {
+                    // send a fresh allocation; the consumer owns it
+                    if tx.send(batch.clone()).is_err() {
+                        return; // consumer dropped early (early stop)
+                    }
+                    it.skip_batches(workers - 1);
+                }
+            }));
+        }
+        BatchPipeline { rx, next: 0, n_batches, handles }
+    }
+
+    /// Next batch in deterministic order; None at end of epoch.
+    pub fn next(&mut self) -> Option<Batch> {
+        if self.next >= self.n_batches {
+            return None;
+        }
+        let w = self.next % self.rx.len();
+        self.next += 1;
+        self.rx[w].recv().ok()
+    }
+
+    /// Batches handed out so far.
+    pub fn consumed(&self) -> usize {
+        self.next
+    }
+}
+
+impl Drop for BatchPipeline {
+    fn drop(&mut self) {
+        // close receivers first so blocked producers exit
+        self.rx.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetSpec;
+
+    fn ds() -> SyntheticDataset {
+        SyntheticDataset::new(DatasetSpec {
+            name: "t".into(),
+            vocabs: vec![11, 50],
+            n_dense: 3,
+            train_samples: 130,
+            val_samples: 16,
+            test_samples: 16,
+            latent_clusters: 4,
+            zipf_exponent: 1.05,
+            label_noise: 0.0,
+            seed: 1,
+        })
+    }
+
+    fn collect_serial(ds: &SyntheticDataset, shuffle: Option<u64>) -> Vec<Vec<f32>> {
+        let mut it = BatchIter::new(ds, Split::Train, 16, shuffle);
+        let mut b = it.alloc_batch();
+        let mut out = Vec::new();
+        while it.next_into(&mut b) {
+            out.push(b.labels.clone());
+        }
+        out
+    }
+
+    #[test]
+    fn pipeline_matches_serial_order() {
+        let ds = ds();
+        for shuffle in [None, Some(5)] {
+            let want = collect_serial(&ds, shuffle);
+            for workers in [1usize, 2, 4] {
+                let mut p = BatchPipeline::start(&ds, Split::Train, 16, shuffle, workers, 2);
+                let mut got = Vec::new();
+                while let Some(b) = p.next() {
+                    got.push(b.labels.clone());
+                }
+                assert_eq!(got, want, "workers={workers} shuffle={shuffle:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let ds = ds();
+        let mut p = BatchPipeline::start(&ds, Split::Train, 16, None, 3, 1);
+        let _ = p.next();
+        drop(p); // must join cleanly with producers mid-stream
+    }
+
+    #[test]
+    fn n_batches_reported() {
+        let ds = ds();
+        let p = BatchPipeline::start(&ds, Split::Train, 16, None, 2, 2);
+        assert_eq!(p.n_batches, 130usize.div_ceil(16));
+    }
+}

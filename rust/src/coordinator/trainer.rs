@@ -1,0 +1,247 @@
+//! The training loop: pipelined batches → index generation → chained
+//! device steps, with CCE clustering events, periodic validation, early
+//! stopping, and best-checkpoint tracking.
+//!
+//! This is the paper's Algorithm 3 embedded in a DLRM training run: the
+//! `ct`/`cf` schedule (Figure 9's strategy space) decides *when* the
+//! clustering events fire; `coordinator::cluster` decides *what* they do.
+
+use crate::config::TrainConfig;
+use crate::coordinator::cluster::{cluster_event, ClusterConfig};
+use crate::coordinator::eval::evaluate;
+use crate::coordinator::pipeline::BatchPipeline;
+use crate::data::batch::Split;
+use crate::data::synthetic::SyntheticDataset;
+use crate::runtime::session::{DlrmSession, EmbInput};
+use crate::runtime::ArtifactStore;
+use crate::tables::indexer::{Indexer, MethodKind};
+use crate::tables::init::init_state;
+use crate::tables::layout::TablePlan;
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+/// Everything a finished run reports (consumed by the experiment harness).
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    pub artifact: String,
+    pub seed: u64,
+    /// (global step, train BCE over the window) samples of the loss curve
+    pub train_curve: Vec<(usize, f64)>,
+    /// (global step, val BCE) at each evaluation point
+    pub val_curve: Vec<(usize, f64)>,
+    pub best_val_bce: f64,
+    /// test metrics at the best-validation checkpoint
+    pub test_bce: f64,
+    pub test_auc: f64,
+    pub epochs_run: usize,
+    pub steps_run: usize,
+    pub clusterings_run: usize,
+    /// embedding parameter count (Table 1 accounting)
+    pub embedding_params: usize,
+    /// paper compression measures
+    pub compression_total: f64,
+    pub compression_largest: f64,
+    pub train_secs: f64,
+    pub cluster_secs: f64,
+    /// samples/sec over the training phase (excludes eval + clustering)
+    pub throughput: f64,
+}
+
+/// Build the indexer an artifact's manifest calls for.
+pub fn build_indexer(m: &crate::runtime::Manifest, seed: u64) -> Result<Indexer> {
+    let mut rng = Rng::new(seed ^ 0x1D5EED);
+    let kind = MethodKind::parse(&m.kind)?;
+    Ok(match kind {
+        MethodKind::RowWise => {
+            let plan = TablePlan::new(&m.vocabs, m.spec.cap, m.spec.t, m.spec.c, m.spec.dc);
+            if plan.total_rows != m.spec.pool_rows {
+                bail!(
+                    "row-plan mismatch: rust computes {} rows, manifest says {} — \
+                     specs.py and tables/layout.rs disagree",
+                    plan.total_rows,
+                    m.spec.pool_rows
+                );
+            }
+            Indexer::new_rowwise(&mut rng, plan)
+        }
+        MethodKind::ElementWise => {
+            let ix = Indexer::new_robe(&mut rng, &m.vocabs, m.spec.cap, m.spec.dim, m.spec.c);
+            if ix.robe_pool_elems() != m.spec.pool_rows {
+                bail!(
+                    "robe-pool mismatch: rust computes {} elems, manifest says {}",
+                    ix.robe_pool_elems(),
+                    m.spec.pool_rows
+                );
+            }
+            Ok::<_, anyhow::Error>(ix)?
+        }
+        MethodKind::Dhe => Indexer::new_dhe(&mut rng, &m.vocabs, m.spec.n_hash),
+    })
+}
+
+/// Run a full training job for one artifact under one config.
+pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
+    cfg.validate()?;
+    let mut session = DlrmSession::open(store, &cfg.artifact)
+        .with_context(|| format!("opening artifact {}", cfg.artifact))?;
+    let m = session.manifest.clone();
+    let ds = SyntheticDataset::new(store.dataset(&m.dataset, cfg.seed)?);
+    if ds.spec.vocabs != m.vocabs {
+        bail!("dataset/manifest vocab mismatch for {}", cfg.artifact);
+    }
+    let mut indexer = build_indexer(&m, cfg.seed)?;
+
+    // initialize state on host, upload
+    let mut rng = Rng::new(cfg.seed ^ 0x57A7E);
+    let state0 = init_state(&m.layout, m.state_size, &mut rng);
+    session.set_state(&state0)?;
+    drop(state0);
+
+    let batch = m.spec.batch;
+    let n_train_batches = ds.spec.train_samples.div_ceil(batch);
+    let eval_every = if cfg.eval_every > 0 {
+        cfg.eval_every
+    } else {
+        n_train_batches.div_ceil(6).max(1) // paper: ~6 evals per epoch
+    };
+    // clustering schedule: `ct` events, every `cf` batches (cf=0 → epoch end)
+    let cluster_every = if cfg.cluster_every > 0 { cfg.cluster_every } else { n_train_batches };
+    let clustering_enabled = m.spec.t >= 2 && matches!(indexer.kind, MethodKind::RowWise);
+
+    let mut out = TrainOutcome {
+        artifact: cfg.artifact.clone(),
+        seed: cfg.seed,
+        embedding_params: m.spec.embedding_params,
+        best_val_bce: f64::INFINITY,
+        ..Default::default()
+    };
+    if let MethodKind::RowWise = indexer.kind {
+        out.compression_total = indexer.plan.compression_total();
+        out.compression_largest = indexer.plan.compression_largest();
+    }
+
+    let mut rows = vec![0i32; session.emb_elems("train")?];
+    let mut hashes: Vec<f32> = Vec::new();
+    if matches!(indexer.kind, MethodKind::Dhe) {
+        hashes = vec![0f32; session.emb_elems("train")?];
+    }
+
+    // checkpoints pair the state with its contemporaneous index maps:
+    // clustering events rewrite both, and they are only valid together
+    let mut best_state: Option<(Vec<f32>, Indexer)> = None;
+    let mut global_step = 0usize;
+    let mut last_metrics = (0f64, 0f64); // (loss_sum, examples) at last curve sample
+    let mut prev_epoch_best = f64::INFINITY;
+    let t_start = Instant::now();
+    let mut eval_secs = 0f64;
+    let pool_field = m.layout.iter().find(|f| f.name == "pool").cloned();
+
+    'epochs: for epoch in 0..cfg.epochs {
+        out.epochs_run = epoch + 1;
+        let shuffle = cfg.shuffle.then(|| cfg.seed ^ 0xE90C ^ epoch as u64);
+        let mut pipe = BatchPipeline::start(
+            &ds,
+            Split::Train,
+            batch,
+            shuffle,
+            cfg.pipeline_workers,
+            cfg.pipeline_depth,
+        );
+        let mut epoch_best = f64::INFINITY;
+        let mut batch_in_epoch = 0usize;
+        while let Some(b) = pipe.next() {
+            // padding in the final train batch: train on it anyway (the
+            // duplicated sample adds negligible bias at these scales)
+            match indexer.kind {
+                MethodKind::RowWise => {
+                    indexer.fill_rowwise(&b.cats, batch, &mut rows);
+                    session.train_step(&b.dense, EmbInput::Rows(&rows), &b.labels)?;
+                }
+                MethodKind::ElementWise => {
+                    indexer.fill_elementwise(&b.cats, batch, &mut rows);
+                    session.train_step(&b.dense, EmbInput::Rows(&rows), &b.labels)?;
+                }
+                MethodKind::Dhe => {
+                    indexer.fill_dhe(&b.cats, batch, &mut hashes);
+                    session.train_step(&b.dense, EmbInput::Hashes(&hashes), &b.labels)?;
+                }
+            }
+            global_step += 1;
+            batch_in_epoch += 1;
+
+            // CCE clustering event
+            if clustering_enabled
+                && out.clusterings_run < cfg.cluster_times
+                && global_step % cluster_every == 0
+            {
+                let t0 = Instant::now();
+                let mut state = session.pull_state()?;
+                let pf = pool_field.as_ref().expect("rowwise artifact without pool field");
+                let cc = ClusterConfig {
+                    kmeans_iters: cfg.kmeans_iters,
+                    points_per_centroid: cfg.kmeans_points_per_centroid,
+                    seed: cfg.seed ^ 0xC1C ^ out.clusterings_run as u64,
+                };
+                let res = cluster_event(&mut state, pf, &mut indexer, &cc);
+                session.set_state(&state)?;
+                out.clusterings_run += 1;
+                out.cluster_secs += t0.elapsed().as_secs_f64();
+                log::info!(
+                    "clustering #{} at step {global_step}: {} subtables, inertia {:.3e}, {:.2}s",
+                    out.clusterings_run,
+                    res.subtables_clustered,
+                    res.total_inertia,
+                    res.elapsed_secs
+                );
+            }
+
+            // periodic validation + train-curve sampling
+            if batch_in_epoch % eval_every == 0 || batch_in_epoch == pipe.n_batches {
+                let te = Instant::now();
+                let met = session.metrics()?;
+                let (ls, ex) = (met[0] as f64, met[1] as f64);
+                let window_bce = (ls - last_metrics.0) / (ex - last_metrics.1).max(1.0);
+                last_metrics = (ls, ex);
+                out.train_curve.push((global_step, window_bce));
+                let vacc = evaluate(&session, &indexer, &ds, Split::Val)?;
+                let vbce = vacc.bce();
+                out.val_curve.push((global_step, vbce));
+                epoch_best = epoch_best.min(vbce);
+                if vbce < out.best_val_bce {
+                    out.best_val_bce = vbce;
+                    best_state = Some((session.pull_state()?, indexer.clone()));
+                }
+                eval_secs += te.elapsed().as_secs_f64();
+                log::info!(
+                    "step {global_step}: train {window_bce:.5}, val {vbce:.5} (best {:.5})",
+                    out.best_val_bce
+                );
+            }
+
+            if cfg.max_batches > 0 && global_step >= cfg.max_batches {
+                break 'epochs;
+            }
+        }
+        // paper's early stopping: stop when this epoch's best val BCE fails
+        // to beat the previous epoch's best
+        if cfg.early_stop && epoch > 0 && prev_epoch_best <= epoch_best {
+            log::info!("early stop after epoch {}: {prev_epoch_best:.5} <= {epoch_best:.5}", epoch + 1);
+            break;
+        }
+        prev_epoch_best = epoch_best;
+    }
+    out.steps_run = global_step;
+    out.train_secs = t_start.elapsed().as_secs_f64() - eval_secs - out.cluster_secs;
+    out.throughput = (global_step * batch) as f64 / out.train_secs.max(1e-9);
+
+    // restore the best (state, maps) checkpoint and evaluate on test
+    if let Some((bs, bix)) = best_state {
+        session.set_state(&bs)?;
+        indexer = bix;
+    }
+    let tacc = evaluate(&session, &indexer, &ds, Split::Test)?;
+    out.test_bce = tacc.bce();
+    out.test_auc = tacc.auc();
+    Ok(out)
+}

@@ -1,0 +1,11 @@
+//! Synthetic Criteo-like click-log generation (the paper's datasets are
+//! proprietary-scale downloads; see DESIGN.md §3 for why this substitution
+//! preserves the comparison structure).
+
+pub mod batch;
+pub mod synthetic;
+pub mod zipf;
+
+pub use batch::{Batch, BatchIter, Split};
+pub use synthetic::{DatasetSpec, SyntheticDataset};
+pub use zipf::Zipf;

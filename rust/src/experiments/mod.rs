@@ -1,0 +1,9 @@
+//! Experiment harness shared by the paper-table benches and the CLI:
+//! sweep running, result tables, and CSV persistence.
+
+pub mod pq;
+pub mod report;
+pub mod sweep;
+
+pub use report::Table;
+pub use sweep::{run_sweep, SweepPoint as SweepRun, SweepSpec};

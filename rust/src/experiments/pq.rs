@@ -1,0 +1,118 @@
+//! The Product-Quantization baseline for the fig4 curves: train the FULL
+//! model once, then post-hoc quantize its tables at each budget and
+//! re-evaluate — a post-training method can never beat the model it
+//! quantizes, which is exactly the paper's point about PQ in Figure 4a.
+
+use crate::baselines::pq::pq_quantize_pool;
+use crate::config::TrainConfig;
+use crate::coordinator::eval::evaluate;
+use crate::coordinator::trainer::build_indexer;
+use crate::data::batch::Split;
+use crate::data::SyntheticDataset;
+use crate::runtime::{ArtifactStore, DlrmSession};
+use crate::tables::layout::TablePlan;
+use anyhow::{anyhow, Result};
+
+/// One PQ budget point.
+#[derive(Clone, Debug)]
+pub struct PqPoint {
+    /// codewords per block (the budget knob; rows in Table-1 units)
+    pub k: usize,
+    /// effective parameter count (codebooks + ½-word index pointers)
+    pub params: f64,
+    pub test_bce: f64,
+    pub test_auc: f64,
+}
+
+/// Train the full artifact, then evaluate PQ at each `k` (codewords per
+/// block, `c_blocks` blocks). Returns (full-model outcome BCE, pq points).
+pub fn pq_curve(
+    store: &ArtifactStore,
+    full_artifact: &str,
+    cfg: &TrainConfig,
+    ks: &[usize],
+    c_blocks: usize,
+) -> Result<(f64, Vec<PqPoint>)> {
+    let mut cfg = cfg.clone();
+    cfg.artifact = full_artifact.to_string();
+    cfg.cluster_times = 0;
+    // `coordinator::train` drops its session (and with it the trained
+    // state), so the PQ curve uses a pull-aware variant of the loop.
+    let (state, test_bce) = train_and_pull(store, &cfg)?;
+
+    let mut session = DlrmSession::open(store, full_artifact)?;
+    let m = session.manifest.clone();
+    let ds = SyntheticDataset::new(store.dataset(&m.dataset, cfg.seed)?);
+    let indexer = build_indexer(&m, cfg.seed)?;
+    let plan = TablePlan::new(&m.vocabs, usize::MAX, 1, 1, m.spec.dc);
+    let pool = m.field("pool")?.clone();
+
+    let mut points = Vec::new();
+    for &k in ks {
+        let mut quantized = state.clone();
+        let report =
+            pq_quantize_pool(&mut quantized, &pool, &plan, k, c_blocks, 25, cfg.seed ^ 0x9A);
+        session.set_state(&quantized)?;
+        let acc = evaluate(&session, &indexer, &ds, Split::Test)?;
+        points.push(PqPoint {
+            k,
+            params: report.codebook_params as f64 + report.index_entries as f64 * 0.5,
+            test_bce: acc.bce(),
+            test_auc: acc.auc(),
+        });
+        log::info!("pq k={k}: test BCE {:.5}", points.last().unwrap().test_bce);
+    }
+    Ok((test_bce, points))
+}
+
+/// Train and return (final best state, its test BCE). Mirrors
+/// `coordinator::train` but keeps the state. Used only by the PQ curve.
+fn train_and_pull(store: &ArtifactStore, cfg: &TrainConfig) -> Result<(Vec<f32>, f64)> {
+    use crate::coordinator::pipeline::BatchPipeline;
+    use crate::runtime::session::EmbInput;
+    use crate::tables::init::init_state;
+    use crate::util::Rng;
+
+    let mut session = DlrmSession::open(store, &cfg.artifact)?;
+    let m = session.manifest.clone();
+    let ds = SyntheticDataset::new(store.dataset(&m.dataset, cfg.seed)?);
+    let indexer = build_indexer(&m, cfg.seed)?;
+    let mut rng = Rng::new(cfg.seed ^ 0x57A7E);
+    session.set_state(&init_state(&m.layout, m.state_size, &mut rng))?;
+    let batch = m.spec.batch;
+    let mut rows = vec![0i32; session.emb_elems("train")?];
+    let mut best: Option<(f64, Vec<f32>)> = None;
+    let n_train_batches = ds.spec.train_samples.div_ceil(batch);
+    let eval_every =
+        if cfg.eval_every > 0 { cfg.eval_every } else { n_train_batches.div_ceil(6).max(1) };
+    let mut step = 0usize;
+    'outer: for epoch in 0..cfg.epochs {
+        let shuffle = cfg.shuffle.then(|| cfg.seed ^ 0xE90C ^ epoch as u64);
+        let mut pipe = BatchPipeline::start(
+            &ds,
+            Split::Train,
+            batch,
+            shuffle,
+            cfg.pipeline_workers,
+            cfg.pipeline_depth,
+        );
+        while let Some(b) = pipe.next() {
+            indexer.fill_rowwise(&b.cats, batch, &mut rows);
+            session.train_step(&b.dense, EmbInput::Rows(&rows), &b.labels)?;
+            step += 1;
+            if step % eval_every == 0 {
+                let v = evaluate(&session, &indexer, &ds, Split::Val)?.bce();
+                if best.as_ref().map(|(bv, _)| v < *bv).unwrap_or(true) {
+                    best = Some((v, session.pull_state()?));
+                }
+            }
+            if cfg.max_batches > 0 && step >= cfg.max_batches {
+                break 'outer;
+            }
+        }
+    }
+    let (_, state) = best.ok_or_else(|| anyhow!("no evaluation happened; raise max_batches"))?;
+    session.set_state(&state)?;
+    let bce = evaluate(&session, &indexer, &ds, Split::Test)?.bce();
+    Ok((state, bce))
+}

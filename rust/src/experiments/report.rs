@@ -1,0 +1,142 @@
+//! ASCII table + CSV output for experiment results — the benches print
+//! the same rows/series the paper's tables and figures report.
+
+use std::fmt::Write as _;
+
+/// A simple column-aligned table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:<w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.header);
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<w$}|", "", w = w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write CSV under `bench_results/<name>.csv` (best effort).
+    pub fn save_csv(&self, name: &str) {
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{name}.csv")), self.to_csv());
+        }
+    }
+}
+
+/// Format a compression factor the way Table 1 does: `8,500×` or a
+/// `127-155×` range.
+pub fn fmt_compression(optimistic: f64, conservative: Option<f64>) -> String {
+    let fmt1 = |x: f64| {
+        if x >= 1000.0 {
+            format!("{:.0},{:03.0}", (x / 1000.0).floor(), x % 1000.0)
+        } else if x >= 10.0 {
+            format!("{x:.0}")
+        } else {
+            format!("{x:.1}")
+        }
+    };
+    match conservative {
+        None => format!("{}x", fmt1(optimistic)),
+        Some(c) if !c.is_finite() || c <= 0.0 => format!("<{}x", fmt1(optimistic)),
+        Some(c) => format!("{}-{}x", fmt1(c.min(optimistic)), fmt1(optimistic.max(c))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_table() {
+        let mut t = Table::new("demo", &["method", "bce"]);
+        t.row(vec!["cce".into(), "0.4500".into()]);
+        t.row(vec!["hashing trick".into(), "0.4600".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| cce           |"));
+        assert!(s.lines().count() == 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["has,comma".into(), "has\"quote".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn compression_formatting() {
+        assert_eq!(fmt_compression(8500.0, None), "8,500x");
+        assert_eq!(fmt_compression(155.0, Some(127.0)), "127-155x");
+        assert_eq!(fmt_compression(25.0, Some(f64::INFINITY)), "<25x");
+        assert_eq!(fmt_compression(4.2, None), "4.2x");
+    }
+}

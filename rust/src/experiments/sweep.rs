@@ -1,0 +1,160 @@
+//! Figure-4-style sweeps: (method × parameter budget × seed) training runs
+//! collected into per-method curves, feeding Table 1's compression math.
+
+use crate::config::TrainConfig;
+use crate::coordinator::trainer::{train, TrainOutcome};
+use crate::metrics::extrapolate::{params_to_reach, Crossing, SweepPoint as XPoint};
+use crate::runtime::ArtifactStore;
+use anyhow::Result;
+
+/// One sweep cell result.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub method: String,
+    pub cap: usize,
+    pub seed: u64,
+    pub outcome: TrainOutcome,
+}
+
+/// What to sweep.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    /// dataset preset prefix used in artifact names (e.g. "kaggle_small")
+    pub dataset: String,
+    pub methods: Vec<String>,
+    pub caps: Vec<usize>,
+    pub seeds: Vec<u64>,
+    /// base train config (epochs / clustering / early stop)
+    pub base: TrainConfig,
+}
+
+impl SweepSpec {
+    pub fn artifact_name(&self, method: &str, cap: usize) -> String {
+        if method == "full" {
+            format!("sweep_{}_full_0", self.dataset)
+        } else {
+            format!("sweep_{}_{}_{}", self.dataset, method, cap)
+        }
+    }
+}
+
+/// Run the sweep serially (each run already parallelizes internally).
+/// Missing artifacts are reported, not fatal — so a partial
+/// `artifacts-sweep` build still produces the available rows.
+pub fn run_sweep(store: &ArtifactStore, spec: &SweepSpec) -> Result<Vec<SweepPoint>> {
+    let mut out = Vec::new();
+    for method in &spec.methods {
+        let caps: Vec<usize> =
+            if method == "full" { vec![0] } else { spec.caps.clone() };
+        for &cap in &caps {
+            let name = spec.artifact_name(method, cap);
+            if !store.has(&name) {
+                log::warn!("skipping {name}: artifact not built (run `make artifacts-sweep`)");
+                continue;
+            }
+            for &seed in &spec.seeds {
+                let mut cfg = spec.base.clone();
+                cfg.artifact = name.clone();
+                cfg.seed = seed;
+                // clustering only applies to CCE
+                if method != "cce" {
+                    cfg.cluster_times = 0;
+                }
+                log::info!("sweep: {name} seed {seed}");
+                let outcome = train(store, &cfg)?;
+                out.push(SweepPoint { method: method.clone(), cap, seed, outcome });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Mean test BCE per (method, cap) over seeds, sorted by params.
+pub fn curve_for(points: &[SweepPoint], method: &str) -> Vec<(f64, f64, f64, f64)> {
+    // (params, mean, min, max)
+    let mut by_cap: std::collections::BTreeMap<usize, Vec<&SweepPoint>> = Default::default();
+    for p in points.iter().filter(|p| p.method == method) {
+        by_cap.entry(p.cap).or_default().push(p);
+    }
+    by_cap
+        .values()
+        .map(|ps| {
+            let params = ps[0].outcome.embedding_params as f64;
+            let bces: Vec<f64> = ps.iter().map(|p| p.outcome.test_bce).collect();
+            let mean = bces.iter().sum::<f64>() / bces.len() as f64;
+            let min = bces.iter().cloned().fold(f64::INFINITY, f64::min);
+            let max = bces.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            (params, mean, min, max)
+        })
+        .collect()
+}
+
+/// Table-1 crossing estimate for a method against a baseline BCE.
+pub fn crossing_for(points: &[SweepPoint], method: &str, baseline: f64) -> Option<Crossing> {
+    let curve = curve_for(points, method);
+    if curve.len() < 2 {
+        return None;
+    }
+    let pts: Vec<XPoint> =
+        curve.iter().map(|&(p, m, _, _)| XPoint { params: p, bce: m }).collect();
+    Some(params_to_reach(&pts, baseline))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_point(method: &str, cap: usize, seed: u64, params: usize, bce: f64) -> SweepPoint {
+        SweepPoint {
+            method: method.into(),
+            cap,
+            seed,
+            outcome: TrainOutcome {
+                embedding_params: params,
+                test_bce: bce,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn curve_aggregates_seeds() {
+        let pts = vec![
+            fake_point("cce", 64, 0, 1000, 0.50),
+            fake_point("cce", 64, 1, 1000, 0.52),
+            fake_point("cce", 256, 0, 4000, 0.45),
+            fake_point("hash", 64, 0, 1000, 0.55),
+        ];
+        let c = curve_for(&pts, "cce");
+        assert_eq!(c.len(), 2);
+        assert!((c[0].1 - 0.51).abs() < 1e-12);
+        assert_eq!(c[0].2, 0.50);
+        assert_eq!(c[0].3, 0.52);
+        assert_eq!(c[1].0, 4000.0);
+    }
+
+    #[test]
+    fn crossing_detected() {
+        let pts = vec![
+            fake_point("cce", 64, 0, 1000, 0.50),
+            fake_point("cce", 256, 0, 4000, 0.40),
+        ];
+        match crossing_for(&pts, "cce", 0.45) {
+            Some(Crossing::Measured(p)) => assert!(p > 1000.0 && p < 4000.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn artifact_naming() {
+        let spec = SweepSpec {
+            dataset: "kaggle_small".into(),
+            methods: vec![],
+            caps: vec![],
+            seeds: vec![],
+            base: TrainConfig::default(),
+        };
+        assert_eq!(spec.artifact_name("cce", 64), "sweep_kaggle_small_cce_64");
+        assert_eq!(spec.artifact_name("full", 0), "sweep_kaggle_small_full_0");
+    }
+}

@@ -1,0 +1,228 @@
+//! Hash functions and index maps for compressed embedding tables.
+//!
+//! The paper's framework (§2.1) represents every compression method as a
+//! sparse matrix `H`: the Hashing Trick has one random 1 per row, Hash
+//! Embeddings two, CE one per column block, and CCE replaces random rows of
+//! `H` with *learned* cluster assignments. This module implements both
+//! halves: universal hashing (the random `H`) and `IndexMap` (the learned
+//! one), plus count-sketch signs, ROBE windows, and DHE feature hashing.
+
+mod universal;
+
+pub use universal::UniversalHash;
+
+use crate::util::Rng;
+
+/// One (feature, term, column) subtable's id→row mapping: either a random
+/// universal hash (the "sketch" half of CCE, all of CE/hash-trick/hash-emb)
+/// or a learned assignment table from clustering (the "clustered" half).
+#[derive(Clone, Debug)]
+pub enum IndexMap {
+    /// `row = hash(id) % k`
+    Hash(UniversalHash),
+    /// `row = table[id]`; `len == vocab`, values `< k`.
+    Learned(Vec<u32>),
+}
+
+impl IndexMap {
+    /// Fresh random map into `[0, k)`.
+    pub fn random(rng: &mut Rng, k: u32) -> IndexMap {
+        IndexMap::Hash(UniversalHash::new(rng, k))
+    }
+
+    #[inline]
+    pub fn map(&self, id: u32) -> u32 {
+        match self {
+            IndexMap::Hash(h) => h.hash(id),
+            IndexMap::Learned(t) => t[id as usize],
+        }
+    }
+
+    /// Whether this map came from clustering.
+    pub fn is_learned(&self) -> bool {
+        matches!(self, IndexMap::Learned(_))
+    }
+
+    /// Host memory the map occupies (Appendix E accounting — learned maps
+    /// cost `vocab` u32s; universal hashes cost two u64s).
+    pub fn host_bytes(&self, _vocab: usize) -> usize {
+        match self {
+            IndexMap::Hash(_) => 16,
+            IndexMap::Learned(t) => t.len() * 4,
+        }
+    }
+
+    /// Materialize as an assignment table (for entropy metrics).
+    pub fn materialize(&self, vocab: usize) -> Vec<u32> {
+        match self {
+            IndexMap::Hash(h) => (0..vocab as u32).map(|v| h.hash(v)).collect(),
+            IndexMap::Learned(t) => {
+                assert_eq!(t.len(), vocab);
+                t.clone()
+            }
+        }
+    }
+}
+
+/// Count-sketch sign function σ: [n] → {−1, +1} (Appendix D). The paper
+/// notes signs are unnecessary when M is trained directly; we keep them
+/// available for the least-squares experiments where they matter.
+#[derive(Clone, Debug)]
+pub struct SignHash {
+    h: UniversalHash,
+}
+
+impl SignHash {
+    pub fn new(rng: &mut Rng) -> SignHash {
+        SignHash { h: UniversalHash::new(rng, 2) }
+    }
+
+    #[inline]
+    pub fn sign(&self, id: u32) -> f32 {
+        if self.h.hash(id) == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+/// ROBE-style window indexing (Desai et al. 2022): each column `j` of an
+/// id's embedding is a contiguous run of `dc` elements starting at a hashed
+/// offset inside the feature's flat region, wrapping around the region end.
+#[derive(Clone, Debug)]
+pub struct RobeWindows {
+    /// start hash per column
+    starts: Vec<UniversalHash>,
+    /// region size in elements
+    pub region: u32,
+    /// chunk length (d/c)
+    pub dc: u32,
+}
+
+impl RobeWindows {
+    pub fn new(rng: &mut Rng, region: u32, c: u32, dc: u32) -> RobeWindows {
+        assert!(region >= dc, "ROBE region {region} smaller than chunk {dc}");
+        RobeWindows {
+            starts: (0..c).map(|_| UniversalHash::new(rng, region)).collect(),
+            region,
+            dc,
+        }
+    }
+
+    /// Write the `c*dc` element offsets (relative to the region base) for
+    /// one id into `out`.
+    pub fn fill(&self, id: u32, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.starts.len() * self.dc as usize);
+        for (j, h) in self.starts.iter().enumerate() {
+            let s = h.hash(id);
+            for e in 0..self.dc {
+                out[j * self.dc as usize + e as usize] = (s + e) % self.region;
+            }
+        }
+    }
+}
+
+/// DHE feature hashing (Kang et al. 2021): k independent hashes mapped to
+/// `[-1, 1]` floats that feed the per-feature MLP.
+#[derive(Clone, Debug)]
+pub struct DheHasher {
+    seeds: Vec<u64>,
+}
+
+impl DheHasher {
+    pub fn new(rng: &mut Rng, n_hash: usize) -> DheHasher {
+        DheHasher { seeds: (0..n_hash).map(|_| rng.next_u64() | 1).collect() }
+    }
+
+    /// Fill `out` (len n_hash) with the id's hash features in `[-1, 1]`.
+    pub fn fill(&self, id: u32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.seeds.len());
+        for (o, &s) in out.iter_mut().zip(&self.seeds) {
+            let mut x = (id as u64 ^ 0x9E3779B97F4A7C15).wrapping_mul(s);
+            x ^= x >> 29;
+            x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+            x ^= x >> 32;
+            // map the top 24 bits to [-1, 1) — plenty of resolution, exact in f32
+            *o = ((x >> 40) as f32) / (1u32 << 23) as f32 - 1.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_map_learned_roundtrip() {
+        let m = IndexMap::Learned(vec![3, 1, 4, 1, 5]);
+        assert_eq!(m.map(2), 4);
+        assert!(m.is_learned());
+        assert_eq!(m.materialize(5), vec![3, 1, 4, 1, 5]);
+        assert_eq!(m.host_bytes(5), 20);
+    }
+
+    #[test]
+    fn index_map_hash_in_range() {
+        let mut rng = Rng::new(1);
+        let m = IndexMap::random(&mut rng, 17);
+        for id in 0..10_000u32 {
+            assert!(m.map(id) < 17);
+        }
+        assert!(!m.is_learned());
+    }
+
+    #[test]
+    fn sign_hash_is_pm_one_and_balanced() {
+        let mut rng = Rng::new(2);
+        let s = SignHash::new(&mut rng);
+        let pos: usize = (0..100_000u32).filter(|&i| s.sign(i) > 0.0).count();
+        assert!((pos as i64 - 50_000).abs() < 2_000, "pos={pos}");
+    }
+
+    #[test]
+    fn robe_windows_wrap() {
+        let mut rng = Rng::new(3);
+        let w = RobeWindows::new(&mut rng, 10, 2, 4);
+        let mut out = vec![0u32; 8];
+        // find an id whose window wraps
+        let mut wrapped = false;
+        for id in 0..1000 {
+            w.fill(id, &mut out);
+            assert!(out.iter().all(|&e| e < 10));
+            // consecutive within a chunk modulo region
+            for j in 0..2 {
+                for e in 1..4 {
+                    assert_eq!(out[j * 4 + e], (out[j * 4] + e as u32) % 10);
+                }
+            }
+            if out[1] < out[0] {
+                wrapped = true;
+            }
+        }
+        assert!(wrapped, "no window ever wrapped — region too small to test");
+    }
+
+    #[test]
+    fn dhe_features_in_unit_ball_and_deterministic() {
+        let mut rng = Rng::new(4);
+        let h = DheHasher::new(&mut rng, 16);
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        h.fill(12345, &mut a);
+        h.fill(12345, &mut b);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        h.fill(12346, &mut b);
+        assert_ne!(a, b);
+        // roughly centered
+        let mean: f32 = (0..1000u32)
+            .map(|id| {
+                h.fill(id, &mut a);
+                a.iter().sum::<f32>() / 16.0
+            })
+            .sum::<f32>()
+            / 1000.0;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+    }
+}

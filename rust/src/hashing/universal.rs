@@ -1,0 +1,100 @@
+//! Multiply-shift universal hashing (Dietzfelbinger et al. 1997) — the
+//! paper's Appendix D recommendation: as strong as needed for count-sketch
+//! guarantees and two instructions per hash.
+
+use crate::util::Rng;
+
+/// `h(x) = ((a*x + b) >> 32) % k` over u64 arithmetic with odd `a`.
+#[derive(Clone, Debug)]
+pub struct UniversalHash {
+    a: u64,
+    b: u64,
+    k: u32,
+}
+
+impl UniversalHash {
+    pub fn new(rng: &mut Rng, k: u32) -> UniversalHash {
+        assert!(k > 0);
+        UniversalHash { a: rng.next_u64() | 1, b: rng.next_u64(), k }
+    }
+
+    /// Construct with explicit parameters (for tests / serialization).
+    pub fn from_params(a: u64, b: u64, k: u32) -> UniversalHash {
+        UniversalHash { a: a | 1, b, k }
+    }
+
+    #[inline]
+    pub fn hash(&self, x: u32) -> u32 {
+        let m = (self.a.wrapping_mul(x as u64).wrapping_add(self.b)) >> 32;
+        // multiply-shift gives 32 uniform bits; reduce by multiply-shift
+        // again instead of `%` (no division on the hot path)
+        ((m * self.k as u64) >> 32) as u32
+    }
+
+    pub fn range(&self) -> u32 {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_in_range() {
+        let mut rng = Rng::new(0);
+        for k in [1u32, 2, 7, 1000, u32::MAX / 2] {
+            let h = UniversalHash::new(&mut rng, k);
+            for x in (0..50_000u32).step_by(7) {
+                assert!(h.hash(x) < k);
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_is_roughly_uniform() {
+        let mut rng = Rng::new(1);
+        let k = 64u32;
+        let h = UniversalHash::new(&mut rng, k);
+        let mut counts = vec![0u32; k as usize];
+        let n = 640_000u32;
+        for x in 0..n {
+            counts[h.hash(x) as usize] += 1;
+        }
+        let expect = (n / k) as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < expect * 0.2, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn pairwise_collision_rate_near_universal_bound() {
+        // collision probability for x≠y should be ≈ 1/k over random draws
+        let k = 128u32;
+        let mut rng = Rng::new(2);
+        let trials = 3_000;
+        let mut collisions = 0u32;
+        for _ in 0..trials {
+            let h = UniversalHash::new(&mut rng, k);
+            let x = rng.next_u32() >> 8;
+            let mut y = rng.next_u32() >> 8;
+            if y == x {
+                y ^= 1;
+            }
+            if h.hash(x) == h.hash(y) {
+                collisions += 1;
+            }
+        }
+        let rate = collisions as f64 / trials as f64;
+        assert!(rate < 3.0 / k as f64, "rate {rate} vs 1/k {}", 1.0 / k as f64);
+    }
+
+    #[test]
+    fn deterministic_given_params() {
+        let h1 = UniversalHash::from_params(123456789, 42, 1000);
+        let h2 = UniversalHash::from_params(123456789, 42, 1000);
+        for x in 0..1000 {
+            assert_eq!(h1.hash(x), h2.hash(x));
+        }
+    }
+}

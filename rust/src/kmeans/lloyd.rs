@@ -1,0 +1,239 @@
+//! kmeans++ seeding + Lloyd iterations with FAISS-style point subsampling
+//! and empty-cluster repair.
+
+use crate::kmeans::{assign, inertia};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct KmeansConfig {
+    pub k: usize,
+    /// Lloyd iterations (paper: niter=50; 300 gave no measurable benefit)
+    pub n_iter: usize,
+    /// subsample to `max_points_per_centroid * k` points (paper: 256)
+    pub max_points_per_centroid: usize,
+    pub seed: u64,
+    /// stop early when relative inertia improvement falls below this
+    pub tol: f64,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        KmeansConfig { k: 8, n_iter: 50, max_points_per_centroid: 256, seed: 0, tol: 1e-4 }
+    }
+}
+
+#[derive(Debug)]
+pub struct KmeansResult {
+    /// `[k, d]` row-major
+    pub centroids: Vec<f32>,
+    /// assignment of every INPUT point (not just the subsample)
+    pub assignments: Vec<u32>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Full K-means: subsample → kmeans++ seed → Lloyd → assign all points.
+pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
+    let n = points.len() / d;
+    assert!(n > 0 && cfg.k > 0);
+    assert_eq!(points.len(), n * d);
+    let k = cfg.k.min(n);
+    let mut rng = Rng::new(cfg.seed);
+
+    // -- subsample (FAISS rule) ---------------------------------------------
+    let budget = cfg.max_points_per_centroid.max(1) * k;
+    let sub_owned: Vec<f32>;
+    let sub: &[f32] = if n > budget {
+        let idx = rng.sample_indices(n, budget);
+        let mut buf = Vec::with_capacity(budget * d);
+        for &i in &idx {
+            buf.extend_from_slice(&points[i * d..(i + 1) * d]);
+        }
+        sub_owned = buf;
+        &sub_owned
+    } else {
+        points
+    };
+    let sn = sub.len() / d;
+
+    // -- kmeans++ seeding -----------------------------------------------------
+    let mut centroids = vec![0f32; k * d];
+    let first = rng.below(sn as u64) as usize;
+    centroids[..d].copy_from_slice(&sub[first * d..(first + 1) * d]);
+    let mut min_d2 = vec![f32::INFINITY; sn];
+    for j in 1..k {
+        // update distances to the newest centroid
+        let c = &centroids[(j - 1) * d..j * d];
+        for i in 0..sn {
+            let x = &sub[i * d..(i + 1) * d];
+            let mut s = 0f32;
+            for e in 0..d {
+                let diff = x[e] - c[e];
+                s += diff * diff;
+            }
+            if s < min_d2[i] {
+                min_d2[i] = s;
+            }
+        }
+        let total: f64 = min_d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.below(sn as u64) as usize
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut pick = sn - 1;
+            for (i, &w) in min_d2.iter().enumerate() {
+                target -= w as f64;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centroids[j * d..(j + 1) * d].copy_from_slice(&sub[pick * d..(pick + 1) * d]);
+    }
+
+    // -- Lloyd ----------------------------------------------------------------
+    let mut asg = vec![0u32; sn];
+    let mut prev_inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.n_iter {
+        iterations = it + 1;
+        assign(sub, &centroids, d, &mut asg);
+        // centroid update
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for i in 0..sn {
+            let j = asg[i] as usize;
+            counts[j] += 1;
+            for e in 0..d {
+                sums[j * d + e] += sub[i * d + e] as f64;
+            }
+        }
+        // empty-cluster repair: reseed from the point furthest from its centroid
+        for j in 0..k {
+            if counts[j] == 0 {
+                let far = (0..sn)
+                    .max_by(|&a, &b| {
+                        d2(sub, &centroids, d, a, asg[a]).total_cmp(&d2(
+                            sub, &centroids, d, b, asg[b],
+                        ))
+                    })
+                    .unwrap();
+                centroids[j * d..(j + 1) * d].copy_from_slice(&sub[far * d..(far + 1) * d]);
+            } else {
+                for e in 0..d {
+                    centroids[j * d + e] = (sums[j * d + e] / counts[j] as f64) as f32;
+                }
+            }
+        }
+        let cur = inertia(sub, &centroids, d, &asg);
+        if prev_inertia.is_finite() && (prev_inertia - cur) <= cfg.tol * prev_inertia.abs() {
+            break;
+        }
+        prev_inertia = cur;
+    }
+
+    // -- final assignment over ALL input points -------------------------------
+    let mut assignments = vec![0u32; n];
+    assign(points, &centroids, d, &mut assignments);
+    let total_inertia = inertia(points, &centroids, d, &assignments);
+    KmeansResult { centroids, assignments, inertia: total_inertia, iterations }
+}
+
+#[inline]
+fn d2(points: &[f32], centroids: &[f32], d: usize, i: usize, j: u32) -> f64 {
+    let x = &points[i * d..(i + 1) * d];
+    let c = &centroids[j as usize * d..][..d];
+    let mut s = 0f64;
+    for e in 0..d {
+        let diff = (x[e] - c[e]) as f64;
+        s += diff * diff;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// three well-separated gaussian blobs
+    fn blobs(n_per: usize, seed: u64) -> (Vec<f32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let centers = [[0.0f32, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let mut pts = Vec::new();
+        let mut truth = Vec::new();
+        for (g, c) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                pts.push(c[0] + rng.normal() as f32 * 0.3);
+                pts.push(c[1] + rng.normal() as f32 * 0.3);
+                truth.push(g as u32);
+            }
+        }
+        (pts, truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (pts, truth) = blobs(100, 0);
+        let res = kmeans(&pts, 2, &KmeansConfig { k: 3, seed: 1, ..Default::default() });
+        // each true blob maps to exactly one cluster id
+        for g in 0..3 {
+            let ids: std::collections::HashSet<u32> = truth
+                .iter()
+                .zip(&res.assignments)
+                .filter(|(t, _)| **t == g)
+                .map(|(_, &a)| a)
+                .collect();
+            assert_eq!(ids.len(), 1, "blob {g} split across clusters");
+        }
+        assert!(res.inertia < 300.0 * 0.5, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (pts, _) = blobs(50, 2);
+        let cfg = KmeansConfig { k: 3, seed: 9, ..Default::default() };
+        let a = kmeans(&pts, 2, &cfg);
+        let b = kmeans(&pts, 2, &cfg);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let pts = [0.0f32, 0.0, 1.0, 1.0];
+        let res = kmeans(&pts, 2, &KmeansConfig { k: 10, ..Default::default() });
+        assert_eq!(res.centroids.len() / 2, 2);
+        assert!(res.assignments.iter().all(|&a| a < 2));
+    }
+
+    #[test]
+    fn subsampling_still_assigns_everything() {
+        let (pts, _) = blobs(500, 3); // 1500 points
+        let cfg = KmeansConfig { k: 3, max_points_per_centroid: 10, seed: 4, ..Default::default() };
+        let res = kmeans(&pts, 2, &cfg);
+        assert_eq!(res.assignments.len(), 1500);
+        assert!(res.inertia < 1500.0, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let (pts, _) = blobs(100, 5);
+        let i2 = kmeans(&pts, 2, &KmeansConfig { k: 2, seed: 6, ..Default::default() }).inertia;
+        let i3 = kmeans(&pts, 2, &KmeansConfig { k: 3, seed: 6, ..Default::default() }).inertia;
+        let i8 = kmeans(&pts, 2, &KmeansConfig { k: 8, seed: 6, ..Default::default() }).inertia;
+        assert!(i3 < i2);
+        assert!(i8 < i3);
+    }
+
+    #[test]
+    fn no_empty_clusters_on_duplicated_points() {
+        // all points identical except one outlier → repair must fire
+        let mut pts = vec![1.0f32; 40]; // 20 identical 2-d points
+        pts.extend_from_slice(&[50.0, 50.0]);
+        let res = kmeans(&pts, 2, &KmeansConfig { k: 2, seed: 7, ..Default::default() });
+        let uniq: std::collections::HashSet<u32> = res.assignments.iter().copied().collect();
+        assert_eq!(uniq.len(), 2);
+    }
+}

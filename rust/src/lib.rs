@@ -1,0 +1,30 @@
+//! # CCE — Clustered Compositional Embeddings
+//!
+//! Production-shaped reproduction of *"Clustering the Sketch: Dynamic
+//! Compression for Embedding Tables"* (Tsang & Ahle) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time)**: `python/compile/` lowers the DLRM model
+//!   with Pallas embedding/interaction/K-means kernels to HLO text.
+//! * **Layer 3 (this crate)**: the coordinator — synthetic Criteo-like
+//!   data, per-method index generation, the CCE clustering scheduler,
+//!   training/eval loops over the PJRT runtime, and the paper's
+//!   experiment harness.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod cce;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hashing;
+pub mod kmeans;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod tables;
+pub mod testutil;
+pub mod util;

@@ -1,0 +1,274 @@
+//! Row-major f64 matrix with the operations the CCE least-squares
+//! algorithms need. f64 (not f32) because the convergence experiments
+//! measure losses down to 1e-12 of the optimum (Figure 8).
+
+use crate::util::{threadpool, Rng};
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Blocked, parallel `self · other`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        let out_ptr = SyncPtr(out.data.as_mut_ptr());
+        let threads = if m * n * k > 1 << 18 { threadpool::default_threads() } else { 1 };
+        threadpool::scope_chunks(m, threads, |_, rs, re| {
+            // chunks write disjoint row ranges of `out`
+            let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.get(), m * n) };
+            // i-k-j loop order: streams `other` rows, vectorizes over j
+            for i in rs..re {
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in 0..k {
+                    let a = self.data[i * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let (m, k, n) = (self.cols, self.rows, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (o, &b) in out.data.iter_mut().zip(&other.data) {
+            *o -= b;
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut out = self.clone();
+        for (o, &b) in out.data.iter_mut().zip(&other.data) {
+            *o += b;
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        let mut out = self.clone();
+        for o in out.data.iter_mut() {
+            *o *= s;
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|&x| x * x).sum()
+    }
+
+    pub fn fro(&self) -> f64 {
+        self.fro2().sqrt()
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Column slice `self[:, lo..hi]`.
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Matrix::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        out
+    }
+}
+
+struct SyncPtr(*mut f64);
+unsafe impl Sync for SyncPtr {}
+unsafe impl Send for SyncPtr {}
+impl SyncPtr {
+    fn get(&self) -> *mut f64 {
+        self.0
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Matrix::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(&mut rng, 20, 30);
+        let c = a.matmul(&Matrix::eye(30));
+        for (x, y) in a.data.iter().zip(&c.data) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(&mut rng, 17, 9);
+        let b = Matrix::randn(&mut rng, 17, 5);
+        let c1 = a.t_matmul(&b);
+        let c2 = a.transpose().matmul(&b);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parallel_matmul_matches_serial() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 130, 90); // large enough to parallelize
+        let b = Matrix::randn(&mut rng, 90, 70);
+        let c = a.matmul(&b);
+        // serial reference
+        let mut want = Matrix::zeros(130, 70);
+        for i in 0..130 {
+            for j in 0..70 {
+                let mut s = 0.0;
+                for k in 0..90 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                want[(i, j)] = s;
+            }
+        }
+        for (x, y) in c.data.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fro_and_ops() {
+        let a = Matrix::from_rows(&[&[3.0, 4.0]]);
+        assert!((a.fro() - 5.0).abs() < 1e-12);
+        let b = a.scale(2.0);
+        assert_eq!(b.data, vec![6.0, 8.0]);
+        assert_eq!(b.sub(&a).data, vec![3.0, 4.0]);
+        assert_eq!(b.add(&a).data, vec![9.0, 12.0]);
+    }
+
+    #[test]
+    fn hcat_and_cols_range() {
+        let a = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = Matrix::from_rows(&[&[3.0, 4.0], &[5.0, 6.0]]);
+        let c = a.hcat(&b);
+        assert_eq!(c.row(1), &[2.0, 5.0, 6.0]);
+        assert_eq!(c.cols_range(1, 3), b);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense linear algebra built from scratch (no BLAS/LAPACK offline):
+//! row-major `Matrix`, blocked parallel matmul, Householder-QR least
+//! squares, and one-sided Jacobi SVD. Sized for the paper's least-squares
+//! experiments (d₁ ≤ a few thousand).
+
+mod matrix;
+mod qr;
+mod svd;
+
+pub use matrix::Matrix;
+pub use qr::{lstsq, qr_decompose};
+pub use svd::{svd, Svd};

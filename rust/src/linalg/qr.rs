@@ -1,0 +1,181 @@
+//! Householder QR and least squares.
+//!
+//! `lstsq(A, B)` solves `min_X ‖A X − B‖_F` for full-column-rank tall `A`
+//! — the inner step of both CCE least-squares algorithms (`M_i = argmin
+//! ‖X H_i M − Y‖`).
+
+use crate::linalg::Matrix;
+
+/// Compact QR: returns (Q, R) with `Q: m×n` orthonormal columns and
+/// `R: n×n` upper-triangular, for m ≥ n.
+pub fn qr_decompose(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr needs tall matrix, got {m}x{n}");
+    let mut r = a.clone();
+    // Householder vectors stored per reflection
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // build the reflector for column k below the diagonal
+        let mut norm2 = 0.0;
+        for i in k..m {
+            norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+        for i in k..m {
+            v[i - k] = r[(i, k)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        // apply I − 2vvᵀ/‖v‖² to R[k.., k..]
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * r[(i, j)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[(i, j)] -= f * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+    // extract R (upper n×n), rebuild Q by applying reflectors to I
+    let mut rr = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+    let mut q = Matrix::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q[(i, j)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[(i, j)] -= f * v[i - k];
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Least squares `min_X ‖A X − B‖_F` via QR. Rank-deficient columns of A
+/// (zero diagonal in R) get zero rows in X (minimum-norm-ish fallback,
+/// sufficient for the CCE algorithms where H occasionally has zero
+/// columns, e.g. M'ᵢ = 0 blocks).
+pub fn lstsq(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows);
+    let (q, r) = qr_decompose(a);
+    let qtb = q.t_matmul(b); // n × p
+    let n = a.cols;
+    let p = b.cols;
+    let mut x = Matrix::zeros(n, p);
+    // back substitution, guarding tiny pivots
+    let rmax = (0..n).map(|i| r[(i, i)].abs()).fold(0.0f64, f64::max);
+    let tol = rmax * 1e-12;
+    for j in 0..p {
+        for i in (0..n).rev() {
+            let mut s = qtb[(i, j)];
+            for k2 in (i + 1)..n {
+                s -= r[(i, k2)] * x[(k2, j)];
+            }
+            x[(i, j)] = if r[(i, i)].abs() <= tol { 0.0 } else { s / r[(i, i)] };
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(&mut rng, 30, 8);
+        let (q, r) = qr_decompose(&a);
+        let qr = q.matmul(&r);
+        assert!(qr.sub(&a).fro() < 1e-10 * a.fro());
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(&mut rng, 25, 6);
+        let (q, _) = qr_decompose(&a);
+        let qtq = q.t_matmul(&q);
+        assert!(qtq.sub(&Matrix::eye(6)).fro() < 1e-10);
+    }
+
+    #[test]
+    fn lstsq_exact_for_consistent_system() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 40, 7);
+        let x_true = Matrix::randn(&mut rng, 7, 3);
+        let b = a.matmul(&x_true);
+        let x = lstsq(&a, &b);
+        assert!(x.sub(&x_true).fro() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_residual_is_orthogonal_to_columns() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(&mut rng, 50, 5);
+        let b = Matrix::randn(&mut rng, 50, 2);
+        let x = lstsq(&a, &b);
+        let resid = a.matmul(&x).sub(&b);
+        let proj = a.t_matmul(&resid); // Aᵀr must be 0 at the optimum
+        assert!(proj.fro() < 1e-9, "Aᵀr = {}", proj.fro());
+    }
+
+    #[test]
+    fn lstsq_beats_any_perturbation() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(&mut rng, 30, 4);
+        let b = Matrix::randn(&mut rng, 30, 1);
+        let x = lstsq(&a, &b);
+        let best = a.matmul(&x).sub(&b).fro2();
+        for _ in 0..10 {
+            let dx = Matrix::randn(&mut rng, 4, 1).scale(0.1);
+            let worse = a.matmul(&x.add(&dx)).sub(&b).fro2();
+            assert!(worse >= best - 1e-12);
+        }
+    }
+
+    #[test]
+    fn lstsq_handles_zero_columns() {
+        let mut rng = Rng::new(5);
+        let a0 = Matrix::randn(&mut rng, 20, 3);
+        let a = a0.hcat(&Matrix::zeros(20, 2)); // rank-deficient
+        let b = Matrix::randn(&mut rng, 20, 1);
+        let x = lstsq(&a, &b);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+        // solution must match the reduced system's optimum
+        let x0 = lstsq(&a0, &b);
+        let r_full = a.matmul(&x).sub(&b).fro2();
+        let r_red = a0.matmul(&x0).sub(&b).fro2();
+        assert!((r_full - r_red).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,185 @@
+//! One-sided Jacobi SVD (Hestenes): `A = U Σ Vᵀ`.
+//!
+//! Needed for (i) the "smart noise" variant of dense CCE, which samples
+//! `g = V Σ⁻¹ g'` to get the improved `(1 − 1/d₁)^{ik}` rate (paper
+//! Appendix B / Figure 6), and (ii) computing ρ = σ_min² / ‖X‖_F² in the
+//! Theorem 3.1 bound.
+//!
+//! One-sided Jacobi is simple, numerically robust, and accurate to machine
+//! precision for the moderate sizes the experiments use.
+
+use crate::linalg::Matrix;
+
+pub struct Svd {
+    /// m × r (orthonormal columns)
+    pub u: Matrix,
+    /// singular values, descending, length r = min(m, n)
+    pub s: Vec<f64>,
+    /// n × r (orthonormal columns); A ≈ U diag(S) Vᵀ
+    pub v: Matrix,
+}
+
+/// Compute the thin SVD of `a` (m ≥ n required; transpose first otherwise).
+pub fn svd(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "svd needs tall input, got {m}x{n}");
+    // Work on W = A (copied); rotate columns until pairwise orthogonal.
+    let mut w = a.clone();
+    let mut v = Matrix::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-14;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram entries
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let xp = w[(i, p)];
+                    let xq = w[(i, q)];
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation annihilating the (p, q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = w[(i, p)];
+                    let xq = w[(i, q)];
+                    w[(i, p)] = c * xp - s * xq;
+                    w[(i, q)] = s * xp + c * xq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // singular values = column norms of W; U = W normalized
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    order.sort_by(|&a2, &b| norms[b].total_cmp(&norms[a2]));
+    let mut u = Matrix::zeros(m, n);
+    let mut vv = Matrix::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    for (jj, &j) in order.iter().enumerate() {
+        let nj = norms[j];
+        s.push(nj);
+        for i in 0..m {
+            u[(i, jj)] = if nj > 0.0 { w[(i, j)] / nj } else { 0.0 };
+        }
+        for i in 0..n {
+            vv[(i, jj)] = v[(i, j)];
+        }
+    }
+    Svd { u, s, v: vv }
+}
+
+impl Svd {
+    /// ρ = σ_min² / Σσ² — the rate constant of Theorem 3.1.
+    pub fn rho(&self) -> f64 {
+        let total: f64 = self.s.iter().map(|&x| x * x).sum();
+        let min = self.s.last().copied().unwrap_or(0.0);
+        if total > 0.0 {
+            min * min / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Reconstruct `U diag(S) Vᵀ` (tests).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut us = self.u.clone();
+        for i in 0..us.rows {
+            for j in 0..us.cols {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        us.matmul(&self.v.transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_random_matrix() {
+        let mut rng = Rng::new(0);
+        let a = Matrix::randn(&mut rng, 30, 12);
+        let d = svd(&a);
+        assert!(d.reconstruct().sub(&a).fro() < 1e-9 * a.fro());
+    }
+
+    #[test]
+    fn singular_values_sorted_and_nonnegative() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(&mut rng, 25, 10);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn u_and_v_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(&mut rng, 40, 8);
+        let d = svd(&a);
+        assert!(d.u.t_matmul(&d.u).sub(&Matrix::eye(8)).fro() < 1e-9);
+        assert!(d.v.t_matmul(&d.v).sub(&Matrix::eye(8)).fro() < 1e-9);
+    }
+
+    #[test]
+    fn known_singular_values_of_diagonal() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 4.0], &[0.0, 0.0]]);
+        let d = svd(&a);
+        assert!((d.s[0] - 4.0).abs() < 1e-12);
+        assert!((d.s[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient_has_zero_sigma() {
+        let mut rng = Rng::new(3);
+        let b = Matrix::randn(&mut rng, 20, 3);
+        let c = Matrix::randn(&mut rng, 3, 6);
+        let a = b.matmul(&c); // rank ≤ 3
+        let d = svd(&a);
+        assert!(d.s[3] < 1e-9 * d.s[0], "σ = {:?}", d.s);
+    }
+
+    #[test]
+    fn frobenius_equals_sigma_norm() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(&mut rng, 15, 7);
+        let d = svd(&a);
+        let fro_s: f64 = d.s.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        assert!((fro_s - a.fro()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rho_matches_definition() {
+        let a = Matrix::from_rows(&[&[2.0, 0.0], &[0.0, 1.0]]);
+        let d = svd(&a);
+        assert!((d.rho() - 1.0 / 5.0).abs() < 1e-12);
+    }
+}

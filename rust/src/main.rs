@@ -1,0 +1,291 @@
+//! `cce` — the coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   train    train one artifact (method × budget) with optional clustering
+//!   sweep    fig4-style sweep over methods × caps × seeds
+//!   lsq      least-squares CCE demos (Algorithms 1 & 2, Theorem 3.1)
+//!   entropy  Appendix-H entropy diagnostics (CCE vs circular clustering)
+//!   serve    batched-inference serving loop over a trained artifact
+//!   info     inspect artifacts / dataset presets
+
+use anyhow::{bail, Result};
+use cce::config::TrainConfig;
+use cce::experiments::report::Table;
+use cce::runtime::ArtifactStore;
+use cce::util::{logger, Args};
+
+fn main() {
+    logger::init();
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("lsq") => cmd_lsq(&args),
+        Some("entropy") => cmd_entropy(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            bail!(
+                "unknown subcommand {other:?}; expected one of \
+                 train | sweep | lsq | entropy | serve | info"
+            )
+        }
+    }
+}
+
+fn store(args: &Args) -> Result<ArtifactStore> {
+    let dir = args.str_or("artifacts-dir", ArtifactStore::default_dir().to_str().unwrap());
+    ArtifactStore::open(dir)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.str_opt("config") {
+        cfg = TrainConfig::from_toml(&cce::config::TomlDoc::load(std::path::Path::new(path))?)?;
+    }
+    let cfg = cfg.apply_args(args);
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let out = cce::coordinator::train(&store, &cfg)?;
+    let mut t = Table::new(
+        &format!("train {} (seed {})", out.artifact, out.seed),
+        &["metric", "value"],
+    );
+    t.row(vec!["test BCE".into(), format!("{:.5}", out.test_bce)]);
+    t.row(vec!["test AUC".into(), format!("{:.5}", out.test_auc)]);
+    t.row(vec!["best val BCE".into(), format!("{:.5}", out.best_val_bce)]);
+    t.row(vec!["epochs".into(), out.epochs_run.to_string()]);
+    t.row(vec!["steps".into(), out.steps_run.to_string()]);
+    t.row(vec!["clusterings".into(), out.clusterings_run.to_string()]);
+    t.row(vec!["embedding params".into(), out.embedding_params.to_string()]);
+    t.row(vec!["compression (total)".into(), format!("{:.1}x", out.compression_total)]);
+    t.row(vec!["compression (largest)".into(), format!("{:.1}x", out.compression_largest)]);
+    t.row(vec!["throughput".into(), format!("{:.0} samples/s", out.throughput)]);
+    t.row(vec!["cluster time".into(), format!("{:.2}s", out.cluster_secs)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let dataset = args.str_or("dataset", "kaggle_small");
+    let methods = args.list_or("methods", &["hash", "ce", "cce"]);
+    let caps: Vec<usize> = args
+        .list_or("caps", &["64", "256", "1024", "4096"])
+        .iter()
+        .map(|s| s.parse().expect("caps must be integers"))
+        .collect();
+    let seeds: Vec<u64> = args
+        .list_or("seeds", &["0"])
+        .iter()
+        .map(|s| s.parse().expect("seeds must be integers"))
+        .collect();
+    let base = TrainConfig::default().apply_args(args);
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let spec = cce::experiments::SweepSpec { dataset, methods: methods.clone(), caps, seeds, base };
+    let points = cce::experiments::run_sweep(&store, &spec)?;
+    let mut t = Table::new("sweep results (test BCE)", &["method", "params", "mean", "min", "max"]);
+    for m in &methods {
+        for (params, mean, min, max) in cce::experiments::sweep::curve_for(&points, m) {
+            t.row(vec![
+                m.clone(),
+                format!("{params:.0}"),
+                format!("{mean:.5}"),
+                format!("{min:.5}"),
+                format!("{max:.5}"),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv("sweep");
+    Ok(())
+}
+
+fn cmd_lsq(args: &Args) -> Result<()> {
+    use cce::cce::*;
+    use cce::linalg::Matrix;
+    use cce::util::Rng;
+    let n = args.usize_or("n", 2000);
+    let d1 = args.usize_or("d1", 300);
+    let d2 = args.usize_or("d2", 10);
+    let k = args.usize_or("k", 40);
+    let iters = args.usize_or("iters", 20);
+    let seed = args.u64_or("seed", 0);
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let mut rng = Rng::new(seed);
+    let x = Matrix::randn(&mut rng, n, d1);
+    let y = Matrix::randn(&mut rng, n, d2);
+    let opt = optimal_loss(&x, &y);
+    let bp = theory::bound_params(&x, &y);
+    let dense = dense_cce(
+        &x,
+        &y,
+        &DenseCceOptions { k, iterations: iters, noise: NoiseKind::Iid, half_update: false, seed },
+    );
+    let sparse = sparse_cce(
+        &x,
+        &y,
+        &SparseCceOptions {
+            k,
+            sketch_width: k / 3,
+            iterations: iters,
+            kmeans_iters: 25,
+            signs: false,
+            seed,
+        },
+    );
+    let mut t = Table::new(
+        &format!("least squares CCE (n={n}, d1={d1}, d2={d2}, k={k})"),
+        &["iter", "dense excess", "sparse excess", "theory bound excess"],
+    );
+    for i in 0..=iters {
+        t.row(vec![
+            i.to_string(),
+            format!("{:.4e}", dense.losses[i] - opt),
+            format!("{:.4e}", sparse.losses[i] - opt),
+            format!("{:.4e}", bp.bound_at(i, k, d2, false) - bp.floor),
+        ]);
+    }
+    t.print();
+    println!("optimal loss: {opt:.6e}, rho = {:.3e} (1/d1 = {:.3e})", bp.rho, bp.rho_smart);
+    Ok(())
+}
+
+fn cmd_entropy(args: &Args) -> Result<()> {
+    use cce::baselines::circular_cluster_event;
+    use cce::coordinator::cluster::{cluster_event, ClusterConfig};
+    use cce::metrics::entropy::{h1, h2, max_h1};
+    use cce::runtime::manifest::{FieldDesc, InitSpec};
+    use cce::tables::indexer::Indexer;
+    use cce::tables::layout::{SubtableId, TablePlan};
+    use cce::util::Rng;
+    let vocab = args.usize_or("vocab", 4096);
+    let k = args.usize_or("k", 64);
+    let c = args.usize_or("c", 4);
+    let seed = args.u64_or("seed", 0);
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+
+    let setup = || {
+        let plan = TablePlan::new(&[vocab], k, 2, c, 4);
+        let mut rng = Rng::new(seed);
+        let ix = Indexer::new_rowwise(&mut rng, plan.clone());
+        let size = plan.total_rows * plan.dc;
+        let mut state = vec![0f32; size];
+        Rng::new(seed ^ 1).fill_normal(&mut state, 0.5);
+        let field = FieldDesc {
+            name: "pool".into(),
+            shape: vec![plan.total_rows, plan.dc],
+            offset: 0,
+            size,
+            init: InitSpec::Zeros,
+        };
+        (state, field, ix)
+    };
+    let cfg = ClusterConfig { kmeans_iters: 30, points_per_centroid: 256, seed };
+    let tables = |ix: &Indexer| -> Vec<Vec<u32>> {
+        (0..c).map(|j| ix.materialize(SubtableId { feature: 0, term: 0, column: j })).collect()
+    };
+
+    let mut t = Table::new(
+        &format!("Appendix H entropies (vocab={vocab}, k={k}, c={c}; max H1={:.2})", max_h1(k)),
+        &["method", "H1", "H2", "collapse?"],
+    );
+    let (_, _, ix) = setup();
+    let tb = tables(&ix);
+    t.row(vec![
+        "random hash (CE)".into(),
+        format!("{:.3}", h1(&tb)),
+        format!("{:.3}", h2(&tb)),
+        "no".into(),
+    ]);
+    let (mut s, f, mut ix) = setup();
+    cluster_event(&mut s, &f, &mut ix, &cfg);
+    let tb = tables(&ix);
+    t.row(vec![
+        "CCE clustering".into(),
+        format!("{:.3}", h1(&tb)),
+        format!("{:.3}", h2(&tb)),
+        "no".into(),
+    ]);
+    let (mut s, f, mut ix) = setup();
+    circular_cluster_event(&mut s, &f, &mut ix, &cfg);
+    let tb = tables(&ix);
+    let (h1c, h2c) = (h1(&tb), h2(&tb));
+    t.row(vec![
+        "circular clustering".into(),
+        format!("{h1c:.3}"),
+        format!("{h2c:.3}"),
+        if h2c - h1c < 0.1 { "YES (pairwise)".into() } else { "no".into() },
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let artifact = args.str_or("artifact", "quick_cce");
+    let requests = args.usize_or("requests", 10_000);
+    let fill = args.usize_or("batch-fill", 1024);
+    let seed = args.u64_or("seed", 0);
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let mut session = cce::runtime::DlrmSession::open(&store, &artifact)?;
+    let m = session.manifest.clone();
+    let ds = cce::data::SyntheticDataset::new(store.dataset(&m.dataset, seed)?);
+    let indexer = cce::coordinator::trainer::build_indexer(&m, seed)?;
+    let mut rng = cce::util::Rng::new(seed ^ 0x57A7E);
+    let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
+    session.set_state(&state)?;
+    let rep = cce::coordinator::serve::serve(&session, &indexer, &ds, requests, fill)?;
+    let mut t = Table::new(&format!("serving {artifact}"), &["metric", "value"]);
+    t.row(vec!["requests".into(), rep.requests.to_string()]);
+    t.row(vec!["batches".into(), rep.batches.to_string()]);
+    t.row(vec!["throughput".into(), format!("{:.0} req/s", rep.throughput_rps)]);
+    t.row(vec!["latency".into(), rep.latency.display()]);
+    t.row(vec!["index time".into(), format!("{:.3}s", rep.index_secs)]);
+    t.row(vec!["exec time".into(), format!("{:.3}s", rep.exec_secs)]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let mut t = Table::new(
+        "artifacts",
+        &["name", "method", "dataset", "B", "state", "emb params", "impl"],
+    );
+    for name in store.artifact_names() {
+        if !store.has(&name) {
+            continue;
+        }
+        let m = store.manifest(&name)?;
+        t.row(vec![
+            m.name.clone(),
+            m.method.clone(),
+            m.dataset.clone(),
+            m.spec.batch.to_string(),
+            m.state_size.to_string(),
+            m.spec.embedding_params.to_string(),
+            m.spec.impl_name.clone(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! Assignment-entropy metrics H₁/H₂ for table-collapse detection
+//! (Appendix H). Given the index-pointer tables `h_j: [vocab] → [k]`, H₁ is
+//! the minimum per-column entropy and H₂ the minimum pairwise entropy;
+//! collapsed clusterings (all values in one cluster, or one column a
+//! permutation of another) show up as entropies far below `log k`.
+
+/// Shannon entropy (nats) of the empirical distribution of `values`.
+pub fn empirical_entropy(values: &[u64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut counts: std::collections::HashMap<u64, u64> = Default::default();
+    for &v in values {
+        *counts.entry(v).or_insert(0) += 1;
+    }
+    let n = values.len() as f64;
+    counts
+        .values()
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+/// H₁: minimum single-column entropy over the c index-pointer tables.
+/// `tables[j][v]` is the cluster of value v in column j.
+pub fn h1(tables: &[Vec<u32>]) -> f64 {
+    tables
+        .iter()
+        .map(|t| empirical_entropy(&t.iter().map(|&x| x as u64).collect::<Vec<_>>()))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// H₂: minimum pairwise entropy, where the pair (j₁, j₂) is encoded as
+/// `h_{j1}(v) + max(h_{j1}) · h_{j2}(v)` (Appendix H's construction).
+pub fn h2(tables: &[Vec<u32>]) -> f64 {
+    let c = tables.len();
+    assert!(c >= 2, "H2 needs at least two columns");
+    let mut best = f64::INFINITY;
+    for j1 in 0..c {
+        let m = *tables[j1].iter().max().unwrap_or(&0) as u64 + 1;
+        for j2 in 0..c {
+            if j1 == j2 {
+                continue;
+            }
+            let paired: Vec<u64> = tables[j1]
+                .iter()
+                .zip(&tables[j2])
+                .map(|(&a, &b)| a as u64 + m * b as u64)
+                .collect();
+            best = best.min(empirical_entropy(&paired));
+        }
+    }
+    best
+}
+
+/// The ceiling `log k` that a healthy uniform clustering approaches.
+pub fn max_h1(k: usize) -> f64 {
+    (k as f64).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_of_uniform() {
+        let vals: Vec<u64> = (0..1000).map(|i| i % 8).collect();
+        assert!((empirical_entropy(&vals) - 8f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_of_constant_is_zero() {
+        assert_eq!(empirical_entropy(&[5; 100]), 0.0);
+    }
+
+    #[test]
+    fn h1_detects_column_collapse() {
+        // column 0 collapsed to one cluster, column 1 healthy
+        let collapsed = vec![0u32; 64];
+        let healthy: Vec<u32> = (0..64).map(|i| i % 8).collect();
+        let h = h1(&[collapsed, healthy]);
+        assert_eq!(h, 0.0);
+    }
+
+    #[test]
+    fn h2_detects_pairwise_collapse() {
+        // column 1 is a permutation of column 0 → pair entropy == single
+        // entropy, far below 2 log k
+        let a: Vec<u32> = (0..640).map(|i| i % 8).collect();
+        let b: Vec<u32> = a.iter().map(|&x| (x + 3) % 8).collect();
+        let h_pair = h2(&[a.clone(), b]);
+        assert!((h_pair - 8f64.ln()).abs() < 1e-9, "collapsed pair: {h_pair}");
+        // independent columns approach 2 log k
+        let c: Vec<u32> = (0..640).map(|i| (i / 8) % 8).collect();
+        let h_ind = h2(&[a, c]);
+        assert!((h_ind - (64f64).ln()).abs() < 1e-9, "independent: {h_ind}");
+    }
+
+    #[test]
+    fn healthy_hash_near_log_k() {
+        use crate::hashing::IndexMap;
+        use crate::util::Rng;
+        let mut rng = Rng::new(0);
+        let k = 16u32;
+        let tables: Vec<Vec<u32>> = (0..4)
+            .map(|_| {
+                let m = IndexMap::random(&mut rng, k);
+                (0..4096u32).map(|v| m.map(v)).collect()
+            })
+            .collect();
+        let h = h1(&tables);
+        assert!(h > max_h1(16) * 0.95, "H1={h} vs {}", max_h1(16));
+        let h2v = h2(&tables);
+        assert!(h2v > (16f64 * 16.0).ln() * 0.9, "H2={h2v}");
+    }
+}

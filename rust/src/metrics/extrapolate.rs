@@ -1,0 +1,187 @@
+//! Compression-factor estimation (Table 1's "Reproducibility" procedure).
+//!
+//! Given (params, bce) observations per method, find the parameter count
+//! where the method's curve crosses the baseline BCE. Methods that never
+//! reach baseline inside the tested range get an extrapolated RANGE:
+//! the optimistic bound from a linear fit of the last two points, the
+//! conservative one from a quadratic fit of the last three (the paper's
+//! exact rule, since the loss curves are convex in log-params).
+
+/// One measured sweep point.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub params: f64,
+    pub bce: f64,
+}
+
+/// Result of the crossing estimate, in parameter units.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Crossing {
+    /// baseline is reached inside the measured range at ~this param count
+    Measured(f64),
+    /// extrapolated: (optimistic linear, conservative quadratic)
+    Extrapolated { linear: f64, quadratic: f64 },
+    /// the method is worse than baseline everywhere and diverging
+    Unreachable,
+}
+
+/// Estimate the params needed to reach `baseline` BCE. Points must be
+/// sorted by ascending params; bce is assumed (weakly) decreasing.
+pub fn params_to_reach(points: &[SweepPoint], baseline: f64) -> Crossing {
+    assert!(points.len() >= 2, "need at least two sweep points");
+    // measured crossing: first segment that straddles the baseline
+    for w in points.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if a.bce >= baseline && b.bce <= baseline {
+            // log-linear interpolation within the segment
+            let t = if (a.bce - b.bce).abs() < 1e-15 {
+                0.0
+            } else {
+                (a.bce - baseline) / (a.bce - b.bce)
+            };
+            let lp = a.params.ln() + t * (b.params.ln() - a.params.ln());
+            return Crossing::Measured(lp.exp());
+        }
+    }
+    if points[0].bce <= baseline {
+        // already below baseline at the smallest budget
+        return Crossing::Measured(points[0].params);
+    }
+    // extrapolate in (x = ln params, y = bce) space
+    let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.params.ln(), p.bce)).collect();
+    let n = xy.len();
+    let (x1, y1) = xy[n - 2];
+    let (x2, y2) = xy[n - 1];
+    if y2 >= y1 {
+        return Crossing::Unreachable; // curve is flat or rising
+    }
+    let slope = (y2 - y1) / (x2 - x1);
+    let linear = (x2 + (baseline - y2) / slope).exp();
+    // quadratic through the last three points
+    let quadratic = if n >= 3 {
+        let (x0, y0) = xy[n - 3];
+        quad_crossing(x0, y0, x1, y1, x2, y2, baseline).map(f64::exp)
+    } else {
+        None
+    };
+    Crossing::Extrapolated { linear, quadratic: quadratic.unwrap_or(f64::INFINITY) }
+}
+
+/// Solve the parabola through three points for y = target, returning the
+/// root ≥ x2 (the curve is convex-decreasing, so the crossing beyond the
+/// data — if any — is the smaller-derivative branch). None if the parabola
+/// bottoms out above the target (paper's "only intersects at a higher
+/// parameter count" case maps to a larger, possibly infinite value).
+fn quad_crossing(
+    x0: f64, y0: f64, x1: f64, y1: f64, x2: f64, y2: f64, target: f64,
+) -> Option<f64> {
+    // Lagrange to standard form y = ax² + bx + c
+    let d0 = (x0 - x1) * (x0 - x2);
+    let d1 = (x1 - x0) * (x1 - x2);
+    let d2 = (x2 - x0) * (x2 - x1);
+    let a = y0 / d0 + y1 / d1 + y2 / d2;
+    let b = -y0 * (x1 + x2) / d0 - y1 * (x0 + x2) / d1 - y2 * (x0 + x1) / d2;
+    let c = y0 * x1 * x2 / d0 + y1 * x0 * x2 / d1 + y2 * x0 * x1 / d2;
+    let cc = c - target;
+    if a.abs() < 1e-12 * (b.abs() + 1.0) {
+        // collinear points: the parabola degenerates to the line bx + c
+        let r = -cc / b;
+        return (r >= x2 - 1e-9 && r.is_finite()).then_some(r);
+    }
+    let disc = b * b - 4.0 * a * cc;
+    if disc < 0.0 {
+        return None;
+    }
+    let r1 = (-b + disc.sqrt()) / (2.0 * a);
+    let r2 = (-b - disc.sqrt()) / (2.0 * a);
+    [r1, r2]
+        .into_iter()
+        .filter(|r| *r >= x2 - 1e-9 && r.is_finite())
+        .min_by(|p, q| p.total_cmp(q))
+}
+
+/// Compression factor = full-table params / params-to-reach-baseline.
+pub fn compression_factor(full_params: f64, crossing: Crossing) -> (f64, Option<f64>) {
+    match crossing {
+        Crossing::Measured(p) => (full_params / p, None),
+        Crossing::Extrapolated { linear, quadratic } => {
+            (full_params / linear, Some(full_params / quadratic))
+        }
+        Crossing::Unreachable => (0.0, Some(0.0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<SweepPoint> {
+        v.iter().map(|&(params, bce)| SweepPoint { params, bce }).collect()
+    }
+
+    #[test]
+    fn measured_crossing_interpolates() {
+        let p = pts(&[(100.0, 0.50), (1000.0, 0.40)]);
+        match params_to_reach(&p, 0.45) {
+            Crossing::Measured(x) => {
+                assert!((x.ln() - (100f64.ln() + 1000f64.ln()) / 2.0).abs() < 1e-9)
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn already_below_baseline() {
+        let p = pts(&[(100.0, 0.40), (1000.0, 0.39)]);
+        assert_eq!(params_to_reach(&p, 0.45), Crossing::Measured(100.0));
+    }
+
+    #[test]
+    fn linear_extrapolation_exact_on_linear_data() {
+        // bce = 0.6 − 0.05·ln(params/100)/ln(10): crosses 0.45 at params=100·10³
+        let p = pts(&[
+            (100.0, 0.60),
+            (1_000.0, 0.55),
+            (10_000.0, 0.50),
+        ]);
+        match params_to_reach(&p, 0.45) {
+            Crossing::Extrapolated { linear, quadratic } => {
+                assert!((linear - 100_000.0).abs() / 100_000.0 < 1e-6, "{linear}");
+                // data is exactly linear → quadratic agrees
+                assert!((quadratic - 100_000.0).abs() / 100_000.0 < 1e-6, "{quadratic}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn convex_curve_gives_quadratic_above_linear() {
+        // convex (flattening): quadratic crossing must need MORE params
+        let p = pts(&[(100.0, 0.60), (1_000.0, 0.52), (10_000.0, 0.48)]);
+        match params_to_reach(&p, 0.45) {
+            Crossing::Extrapolated { linear, quadratic } => {
+                assert!(quadratic > linear, "lin {linear} quad {quadratic}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rising_tail_unreachable() {
+        let p = pts(&[(100.0, 0.50), (1_000.0, 0.49), (10_000.0, 0.495)]);
+        assert_eq!(params_to_reach(&p, 0.45), Crossing::Unreachable);
+    }
+
+    #[test]
+    fn compression_factor_ranges() {
+        let (hi, lo) = compression_factor(
+            1e7,
+            Crossing::Extrapolated { linear: 1e4, quadratic: 2e4 },
+        );
+        assert_eq!(hi, 1e3);
+        assert_eq!(lo, Some(500.0));
+        let (m, none) = compression_factor(1e7, Crossing::Measured(1e3));
+        assert_eq!(m, 1e4);
+        assert!(none.is_none());
+    }
+}

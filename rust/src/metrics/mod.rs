@@ -1,0 +1,169 @@
+//! Evaluation metrics: BCE, AUC, assignment-entropy (table-collapse
+//! detection, Appendix H), and the extrapolation used for Table 1's
+//! compression-range estimates.
+
+pub mod entropy;
+pub mod extrapolate;
+
+/// Mean binary cross-entropy from probabilities (clamped for stability).
+pub fn bce(probs: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(probs.len(), labels.len());
+    assert!(!probs.is_empty());
+    let mut acc = 0f64;
+    for (&p, &y) in probs.iter().zip(labels) {
+        let p = (p as f64).clamp(1e-7, 1.0 - 1e-7);
+        acc -= if y > 0.5 { p.ln() } else { (1.0 - p).ln() };
+    }
+    acc / probs.len() as f64
+}
+
+/// Streaming BCE/AUC accumulator, fed batch by batch during eval.
+#[derive(Default, Clone)]
+pub struct EvalAccumulator {
+    scores: Vec<(f32, bool)>,
+    bce_sum: f64,
+}
+
+impl EvalAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, probs: &[f32], labels: &[f32]) {
+        self.bce_sum += bce(probs, labels) * probs.len() as f64;
+        self.scores
+            .extend(probs.iter().zip(labels).map(|(&p, &y)| (p, y > 0.5)));
+    }
+
+    pub fn n(&self) -> usize {
+        self.scores.len()
+    }
+
+    pub fn bce(&self) -> f64 {
+        self.bce_sum / self.scores.len() as f64
+    }
+
+    pub fn auc(&self) -> f64 {
+        auc(&self.scores)
+    }
+}
+
+/// Exact AUC (probability that a random positive scores above a random
+/// negative, ties counted ½) via rank statistics — O(n log n).
+pub fn auc(scores: &[(f32, bool)]) -> f64 {
+    let n_pos = scores.iter().filter(|(_, y)| *y).count();
+    let n_neg = scores.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5; // undefined; conventional fallback
+    }
+    let mut sorted: Vec<&(f32, bool)> = scores.iter().collect();
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
+    // average ranks over tie groups
+    let mut rank_sum_pos = 0f64;
+    let mut i = 0usize;
+    while i < sorted.len() {
+        let mut j = i;
+        while j < sorted.len() && sorted[j].0 == sorted[i].0 {
+            j += 1;
+        }
+        let avg_rank = (i + 1 + j) as f64 / 2.0; // ranks are 1-based
+        for item in &sorted[i..j] {
+            if item.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j;
+    }
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bce_perfect_predictions_near_zero() {
+        let b = bce(&[0.9999999, 0.0000001], &[1.0, 0.0]);
+        assert!(b < 1e-5, "{b}");
+    }
+
+    #[test]
+    fn bce_uniform_is_ln2() {
+        let b = bce(&[0.5; 10], &[1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 1.0, 0.0]);
+        assert!((b - std::f64::consts::LN_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bce_clamps_extremes() {
+        let b = bce(&[0.0, 1.0], &[1.0, 0.0]); // maximally wrong
+        assert!(b.is_finite());
+    }
+
+    #[test]
+    fn auc_perfect_ranking() {
+        let s = [(0.1f32, false), (0.2, false), (0.8, true), (0.9, true)];
+        assert_eq!(auc(&s), 1.0);
+    }
+
+    #[test]
+    fn auc_inverted_ranking() {
+        let s = [(0.9f32, false), (0.8, false), (0.1, true), (0.2, true)];
+        assert_eq!(auc(&s), 0.0);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let mut scores = Vec::new();
+        let mut rng = crate::util::Rng::new(0);
+        for _ in 0..20_000 {
+            scores.push((rng.uniform() as f32, rng.bernoulli(0.3)));
+        }
+        let a = auc(&scores);
+        assert!((a - 0.5).abs() < 0.02, "{a}");
+    }
+
+    #[test]
+    fn auc_ties_count_half() {
+        let s = [(0.5f32, true), (0.5, false)];
+        assert_eq!(auc(&s), 0.5);
+    }
+
+    #[test]
+    fn auc_matches_brute_force() {
+        let mut rng = crate::util::Rng::new(1);
+        let scores: Vec<(f32, bool)> = (0..200)
+            .map(|_| (((rng.below(20) as f32) / 20.0), rng.bernoulli(0.4)))
+            .collect();
+        // brute force pair counting
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for &(sp, yp) in &scores {
+            if !yp {
+                continue;
+            }
+            for &(sn, yn) in &scores {
+                if yn {
+                    continue;
+                }
+                den += 1.0;
+                if sp > sn {
+                    num += 1.0;
+                } else if sp == sn {
+                    num += 0.5;
+                }
+            }
+        }
+        assert!((auc(&scores) - num / den).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulator_combines_batches() {
+        let mut acc = EvalAccumulator::new();
+        acc.push(&[0.9, 0.1], &[1.0, 0.0]);
+        acc.push(&[0.8, 0.2], &[1.0, 0.0]);
+        assert_eq!(acc.n(), 4);
+        assert_eq!(acc.auc(), 1.0);
+        let direct = bce(&[0.9, 0.1, 0.8, 0.2], &[1.0, 0.0, 1.0, 0.0]);
+        assert!((acc.bce() - direct).abs() < 1e-12);
+    }
+}

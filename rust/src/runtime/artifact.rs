@@ -1,0 +1,123 @@
+//! Artifact store: the on-disk `artifacts/` directory produced by
+//! `make artifacts` — manifests, HLO files, and the dataset-preset index.
+
+use crate::data::synthetic::DatasetSpec;
+use crate::runtime::manifest::Manifest;
+use crate::util::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    index: Json,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: impl AsRef<Path>) -> Result<ArtifactStore> {
+        let dir = dir.as_ref().to_path_buf();
+        let index_path = dir.join("index.json");
+        let src = std::fs::read_to_string(&index_path).with_context(|| {
+            format!(
+                "reading {index_path:?} — did you run `make artifacts`?"
+            )
+        })?;
+        let index = Json::parse(&src).map_err(|e| anyhow!("{e}"))?;
+        Ok(ArtifactStore { dir, index })
+    }
+
+    /// Artifact names present in the index.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.index
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.json")).exists()
+    }
+
+    /// Load an artifact's manifest.
+    pub fn manifest(&self, name: &str) -> Result<Manifest> {
+        let path = self.dir.join(format!("{name}.json"));
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading manifest {path:?} — run `make artifacts` (or artifacts-sweep)")
+        })?;
+        Manifest::parse(&src).with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// Compile one of an artifact's executables.
+    pub fn compile(&self, manifest: &Manifest, exec: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let file = manifest
+            .executables
+            .get(exec)
+            .ok_or_else(|| anyhow!("artifact {} has no executable {exec:?}", manifest.name))?;
+        crate::runtime::compile_hlo_file(&self.dir.join(file))
+            .with_context(|| format!("compiling {}:{exec}", manifest.name))
+    }
+
+    /// Dataset preset from the index (the single source of truth shared
+    /// with `python/compile/specs.py`).
+    pub fn dataset(&self, name: &str, seed: u64) -> Result<DatasetSpec> {
+        let ds = self
+            .index
+            .get("datasets")
+            .and_then(|d| d.get(name))
+            .ok_or_else(|| anyhow!("dataset preset {name:?} not in index.json"))?;
+        Ok(DatasetSpec {
+            name: name.to_string(),
+            vocabs: ds.usize_array("vocabs")?,
+            n_dense: ds.usize_field("n_dense")?,
+            train_samples: ds.usize_field("train_samples")?,
+            val_samples: ds.usize_field("val_samples")?,
+            test_samples: ds.usize_field("test_samples")?,
+            latent_clusters: ds.usize_field("latent_clusters")?,
+            zipf_exponent: ds.f64_field("zipf_exponent")?,
+            label_noise: ds.f64_field("label_noise")?,
+            seed,
+        })
+    }
+
+    /// Default artifacts directory: `$CCE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CCE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_gives_actionable_error() {
+        let err = ArtifactStore::open("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn index_round_trip(){
+        let dir = std::env::temp_dir().join(format!("cce_store_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"artifacts": ["a", "b"], "kmeans": [],
+                "datasets": {"d": {"vocabs": [3, 5], "n_dense": 2,
+                  "train_samples": 10, "val_samples": 2, "test_samples": 2,
+                  "latent_clusters": 2, "zipf_exponent": 1.05,
+                  "label_noise": 0.1}}}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.artifact_names(), vec!["a", "b"]);
+        let ds = store.dataset("d", 3).unwrap();
+        assert_eq!(ds.vocabs, vec![3, 5]);
+        assert_eq!(ds.seed, 3);
+        assert!(store.dataset("missing", 0).is_err());
+        assert!(!store.has("a"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

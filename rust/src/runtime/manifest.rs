@@ -1,0 +1,345 @@
+//! Artifact manifests — the contract between `python/compile/aot.py` and
+//! the coordinator: state layout, input/output shapes, hyperparameters.
+//! Parsed with the in-repo JSON parser; every field access is validated so
+//! a stale or hand-edited manifest fails loudly instead of aborting inside
+//! PJRT (execute with wrong shapes is a process-fatal CHECK).
+
+use crate::util::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of an executable input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// Initialization spec for one layout field (applied by `tables::init`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Normal(f32),
+    Uniform(f32),
+}
+
+/// One field of the packed state vector.
+#[derive(Clone, Debug)]
+pub struct FieldDesc {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: InitSpec,
+}
+
+/// One executable input.
+#[derive(Clone, Debug)]
+pub struct InputDesc {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl InputDesc {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Hyperparameters of a DLRM artifact (mirror of `specs.ArtifactSpec`).
+#[derive(Clone, Debug)]
+pub struct DlrmSpec {
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub dim: usize,
+    pub dc: usize,
+    pub t: usize,
+    pub c: usize,
+    pub cap: usize,
+    pub lr: f64,
+    pub n_features: usize,
+    pub n_dense: usize,
+    pub pool_rows: usize,
+    pub dhe_hidden: usize,
+    pub n_hash: usize,
+    pub impl_name: String,
+    pub embedding_params: usize,
+}
+
+/// A parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub family: String,
+    pub kind: String,
+    pub dataset: String,
+    pub method: String,
+    pub spec: DlrmSpec,
+    pub vocabs: Vec<usize>,
+    pub state_size: usize,
+    pub layout: Vec<FieldDesc>,
+    pub metrics_offset: usize,
+    pub metric_names: Vec<String>,
+    /// executable kind → hlo file name
+    pub executables: std::collections::BTreeMap<String, String>,
+    /// executable kind → ordered inputs
+    pub inputs: std::collections::BTreeMap<String, Vec<InputDesc>>,
+    /// executable kind → output element count
+    pub output_elems: std::collections::BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn parse(src: &str) -> Result<Manifest> {
+        let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
+        let name = j.str_field("name")?.to_string();
+        let family = j.str_field("family")?.to_string();
+        let kind = j
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .unwrap_or("kmeans")
+            .to_string();
+        let dataset = j.get("dataset").and_then(|k| k.as_str()).unwrap_or("").to_string();
+        let method = j.get("method").and_then(|k| k.as_str()).unwrap_or("").to_string();
+
+        let sj = j.req("spec")?;
+        let spec = DlrmSpec {
+            batch: sj.get("batch").and_then(|v| v.as_usize()).unwrap_or(0),
+            eval_batch: sj.get("eval_batch").and_then(|v| v.as_usize()).unwrap_or(0),
+            dim: sj.get("dim").and_then(|v| v.as_usize()).unwrap_or(0),
+            dc: sj.get("dc").and_then(|v| v.as_usize()).unwrap_or(0),
+            t: sj.get("t").and_then(|v| v.as_usize()).unwrap_or(0),
+            c: sj.get("c").and_then(|v| v.as_usize()).unwrap_or(0),
+            cap: sj.get("cap").and_then(|v| v.as_usize()).unwrap_or(0),
+            lr: sj.get("lr").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            n_features: sj.get("n_features").and_then(|v| v.as_usize()).unwrap_or(0),
+            n_dense: sj.get("n_dense").and_then(|v| v.as_usize()).unwrap_or(0),
+            pool_rows: sj.get("pool_rows").and_then(|v| v.as_usize()).unwrap_or(0),
+            dhe_hidden: sj.get("dhe_hidden").and_then(|v| v.as_usize()).unwrap_or(0),
+            n_hash: sj.get("n_hash").and_then(|v| v.as_usize()).unwrap_or(0),
+            impl_name: sj.get("impl").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+            embedding_params: sj
+                .get("embedding_params")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+        };
+
+        let vocabs = j
+            .get("vocabs")
+            .map(|v| {
+                v.as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default()
+            })
+            .unwrap_or_default();
+
+        let state_size = j.get("state_size").and_then(|v| v.as_usize()).unwrap_or(0);
+
+        let mut layout = Vec::new();
+        if let Some(fields) = j.get("layout").and_then(|v| v.as_arr()) {
+            for f in fields {
+                let init_arr = f
+                    .req("init")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("init not an array"))?;
+                let init = match init_arr
+                    .first()
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("init[0] not a string"))?
+                {
+                    "zeros" => InitSpec::Zeros,
+                    "normal" => InitSpec::Normal(
+                        init_arr.get(1).and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                    ),
+                    "uniform" => InitSpec::Uniform(
+                        init_arr.get(1).and_then(|x| x.as_f64()).unwrap_or(0.0) as f32,
+                    ),
+                    other => bail!("unknown init {other:?}"),
+                };
+                layout.push(FieldDesc {
+                    name: f.str_field("name")?.to_string(),
+                    shape: f.usize_array("shape")?,
+                    offset: f.usize_field("offset")?,
+                    size: f.usize_field("size")?,
+                    init,
+                });
+            }
+        }
+
+        let (metrics_offset, metric_names) = match j.get("metrics") {
+            Some(m) => (
+                m.usize_field("offset")?,
+                m.req("names")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("metric names"))?
+                    .iter()
+                    .filter_map(|x| x.as_str().map(String::from))
+                    .collect(),
+            ),
+            None => (0, Vec::new()),
+        };
+
+        let mut executables = std::collections::BTreeMap::new();
+        for (k, v) in j
+            .req("executables")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("executables not an object"))?
+        {
+            executables.insert(
+                k.clone(),
+                v.as_str().ok_or_else(|| anyhow!("executable path"))?.to_string(),
+            );
+        }
+
+        let mut inputs = std::collections::BTreeMap::new();
+        for (k, v) in j
+            .req("inputs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("inputs not an object"))?
+        {
+            let descs = v
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs[{k}] not an array"))?
+                .iter()
+                .map(|d| -> Result<InputDesc> {
+                    Ok(InputDesc {
+                        name: d.str_field("name")?.to_string(),
+                        dtype: DType::parse(d.str_field("dtype")?)?,
+                        shape: d.usize_array("shape")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("inputs[{k}]"))?;
+            inputs.insert(k.clone(), descs);
+        }
+
+        let mut output_elems = std::collections::BTreeMap::new();
+        if let Some(outs) = j.get("outputs").and_then(|v| v.as_obj()) {
+            for (k, v) in outs {
+                let n: usize = v.usize_array("shape")?.iter().product();
+                output_elems.insert(k.clone(), n);
+            }
+        }
+
+        // cross-validation: layout must tile the state exactly
+        if !layout.is_empty() {
+            let mut off = 0usize;
+            for f in &layout {
+                if f.offset != off {
+                    bail!("layout field {} at offset {} (expected {off})", f.name, f.offset);
+                }
+                let expect: usize = f.shape.iter().product();
+                if expect != f.size {
+                    bail!("layout field {} size mismatch", f.name);
+                }
+                off += f.size;
+            }
+            if off != state_size {
+                bail!("layout covers {off} of {state_size} state elements");
+            }
+        }
+
+        Ok(Manifest {
+            name,
+            family,
+            kind,
+            dataset,
+            method,
+            spec,
+            vocabs,
+            state_size,
+            layout,
+            metrics_offset,
+            metric_names,
+            executables,
+            inputs,
+            output_elems,
+        })
+    }
+
+    pub fn field(&self, name: &str) -> Result<&FieldDesc> {
+        self.layout
+            .iter()
+            .find(|f| f.name == name)
+            .ok_or_else(|| anyhow!("no layout field {name:?} in {}", self.name))
+    }
+
+    pub fn inputs_for(&self, exec: &str) -> Result<&[InputDesc]> {
+        Ok(self
+            .inputs
+            .get(exec)
+            .ok_or_else(|| anyhow!("no inputs for executable {exec:?}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "t", "family": "dlrm", "kind": "rowwise",
+      "dataset": "smoke", "method": "cce",
+      "spec": {"batch": 64, "eval_batch": 128, "dim": 8, "dc": 2, "t": 2,
+               "c": 4, "cap": 32, "lr": 0.05, "n_features": 4, "n_dense": 13,
+               "pool_rows": 856, "dhe_hidden": 0, "n_hash": 0,
+               "impl": "pallas", "embedding_params": 1712},
+      "vocabs": [11, 50, 200, 1000],
+      "state_size": 20,
+      "layout": [
+        {"name": "pool", "shape": [4, 4], "offset": 0, "size": 16,
+         "init": ["normal", 0.125]},
+        {"name": "metrics", "shape": [4], "offset": 16, "size": 4,
+         "init": ["zeros"]}
+      ],
+      "metrics": {"offset": 16, "names": ["loss_sum", "examples", "steps", "last_loss"]},
+      "executables": {"train": "t.train.hlo.txt"},
+      "inputs": {"train": [
+        {"name": "state", "dtype": "f32", "shape": [20]},
+        {"name": "emb", "dtype": "i32", "shape": [64, 4, 2, 4]}
+      ]},
+      "outputs": {"train": {"dtype": "f32", "shape": [20]}}
+    }"#;
+
+    #[test]
+    fn parses_complete_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.spec.batch, 64);
+        assert_eq!(m.vocabs, vec![11, 50, 200, 1000]);
+        assert_eq!(m.layout.len(), 2);
+        assert_eq!(m.field("pool").unwrap().init, InitSpec::Normal(0.125));
+        assert_eq!(m.metrics_offset, 16);
+        let ins = m.inputs_for("train").unwrap();
+        assert_eq!(ins[1].dtype, DType::I32);
+        assert_eq!(ins[1].elems(), 64 * 4 * 2 * 4);
+        assert_eq!(m.output_elems["train"], 20);
+    }
+
+    #[test]
+    fn rejects_bad_layout_offsets() {
+        let bad = SAMPLE.replace("\"offset\": 16", "\"offset\": 17");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_layout_not_covering_state() {
+        let bad = SAMPLE.replace("\"state_size\": 20", "\"state_size\": 21");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_inputs_for_unknown_exec() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.inputs_for("predict").is_err());
+        assert!(m.field("nope").is_err());
+    }
+}

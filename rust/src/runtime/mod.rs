@@ -1,0 +1,43 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and drives them
+//! with the packed-state calling convention (DESIGN.md §7).
+
+pub mod artifact;
+pub mod manifest;
+pub mod session;
+
+pub use artifact::ArtifactStore;
+pub use manifest::{DType, InitSpec, InputDesc, Manifest};
+pub use session::DlrmSession;
+
+use anyhow::Result;
+
+thread_local! {
+    static CLIENT: std::cell::OnceCell<xla::PjRtClient> = const { std::cell::OnceCell::new() };
+}
+
+/// Thread-local PJRT CPU client.
+///
+/// The `xla` crate's `PjRtClient` is an `Rc` wrapper (not `Send`/`Sync`),
+/// so all PJRT objects — client, buffers, executables — must live on the
+/// thread that created them. The coordinator keeps every PJRT interaction
+/// on a single exec thread by construction; producer threads only build
+/// host arrays. `with_client` runs `f` against this thread's client,
+/// creating it on first use.
+pub fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu()?;
+            let _ = cell.set(c);
+        }
+        f(cell.get().unwrap())
+    })
+}
+
+/// Compile an HLO-text file on this thread's client.
+pub fn compile_hlo_file(path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+    )?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    with_client(|c| Ok(c.compile(&comp)?))
+}

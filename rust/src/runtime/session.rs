@@ -1,0 +1,160 @@
+//! Packed-state training session over one DLRM artifact.
+//!
+//! Owns the state device buffer and chains `execute_b` step-to-step with
+//! no host round-trips; metrics come from the tiny `readout` executable.
+//! Every call validates input sizes/dtypes against the manifest FIRST —
+//! PJRT aborts the process on shape mismatch (DESIGN.md §7.2), so the
+//! validation here is what turns config bugs into `Err` instead of SIGABRT.
+
+use crate::runtime::manifest::{DType, Manifest};
+use crate::runtime::ArtifactStore;
+use anyhow::{anyhow, bail, Result};
+
+/// The embedding-side input of one batch (dtype depends on method kind).
+pub enum EmbInput<'a> {
+    Rows(&'a [i32]),
+    Hashes(&'a [f32]),
+}
+
+pub struct DlrmSession {
+    pub manifest: Manifest,
+    train: xla::PjRtLoadedExecutable,
+    predict: xla::PjRtLoadedExecutable,
+    readout: xla::PjRtLoadedExecutable,
+    state: Option<xla::PjRtBuffer>,
+    /// steps executed since the last `set_state`
+    pub steps_since_upload: u64,
+}
+
+impl DlrmSession {
+    /// Load + compile an artifact's executables. Compilation happens once;
+    /// all steps reuse the loaded executables.
+    pub fn open(store: &ArtifactStore, name: &str) -> Result<DlrmSession> {
+        let manifest = store.manifest(name)?;
+        let train = store.compile(&manifest, "train")?;
+        let predict = store.compile(&manifest, "predict")?;
+        let readout = store.compile(&manifest, "readout")?;
+        Ok(DlrmSession { manifest, train, predict, readout, state: None, steps_since_upload: 0 })
+    }
+
+    /// Upload a fresh state vector (initialization or post-clustering).
+    pub fn set_state(&mut self, state: &[f32]) -> Result<()> {
+        if state.len() != self.manifest.state_size {
+            bail!(
+                "state has {} elements, artifact {} expects {}",
+                state.len(),
+                self.manifest.name,
+                self.manifest.state_size
+            );
+        }
+        self.state = Some(crate::runtime::with_client(|c| {
+            Ok(c.buffer_from_host_buffer(state, &[state.len()], None)?)
+        })?);
+        self.steps_since_upload = 0;
+        Ok(())
+    }
+
+    /// Download the full state vector (clustering events, checkpoints).
+    pub fn pull_state(&self) -> Result<Vec<f32>> {
+        let buf = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    fn validate(&self, exec: &str, name: &str, dtype: DType, len: usize) -> Result<()> {
+        let descs = self.manifest.inputs_for(exec)?;
+        let d = descs
+            .iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| anyhow!("executable {exec} has no input {name}"))?;
+        if d.dtype != dtype {
+            bail!("{exec}:{name} dtype mismatch: manifest {:?}, got {dtype:?}", d.dtype);
+        }
+        if d.elems() != len {
+            bail!(
+                "{exec}:{name} size mismatch: manifest {} elements {:?}, got {len}",
+                d.elems(),
+                d.shape
+            );
+        }
+        Ok(())
+    }
+
+    fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        crate::runtime::with_client(|c| Ok(c.buffer_from_host_buffer(data, shape, None)?))
+    }
+
+    fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        crate::runtime::with_client(|c| Ok(c.buffer_from_host_buffer(data, shape, None)?))
+    }
+
+    fn emb_buffer(&self, exec: &str, emb: &EmbInput) -> Result<xla::PjRtBuffer> {
+        let desc = self
+            .manifest
+            .inputs_for(exec)?
+            .iter()
+            .find(|d| d.name == "emb")
+            .ok_or_else(|| anyhow!("{exec} has no emb input"))?
+            .clone();
+        match emb {
+            EmbInput::Rows(idx) => {
+                self.validate(exec, "emb", DType::I32, idx.len())?;
+                self.upload_i32(idx, &desc.shape)
+            }
+            EmbInput::Hashes(h) => {
+                self.validate(exec, "emb", DType::F32, h.len())?;
+                self.upload_f32(h, &desc.shape)
+            }
+        }
+    }
+
+    /// One fused fwd+bwd+SGD step. The state buffer advances in place.
+    pub fn train_step(&mut self, dense: &[f32], emb: EmbInput, labels: &[f32]) -> Result<()> {
+        let state = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        self.validate("train", "dense", DType::F32, dense.len())?;
+        self.validate("train", "labels", DType::F32, labels.len())?;
+        let spec = &self.manifest.spec;
+        let dense_b = self.upload_f32(dense, &[spec.batch, spec.n_dense])?;
+        let emb_b = self.emb_buffer("train", &emb)?;
+        let labels_b = self.upload_f32(labels, &[spec.batch])?;
+        let outs = self.train.execute_b(&[state, &dense_b, &emb_b, &labels_b])?;
+        let new_state = outs
+            .into_iter()
+            .next()
+            .and_then(|r| r.into_iter().next())
+            .ok_or_else(|| anyhow!("train step returned no buffers"))?;
+        self.state = Some(new_state);
+        self.steps_since_upload += 1;
+        Ok(())
+    }
+
+    /// Read the in-graph metric slots: [loss_sum, examples, steps, last_loss].
+    pub fn metrics(&self) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        let outs = self.readout.execute_b(&[state])?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Batched prediction: probabilities for `eval_batch` samples.
+    pub fn predict(&self, dense: &[f32], emb: EmbInput) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        self.validate("predict", "dense", DType::F32, dense.len())?;
+        let spec = &self.manifest.spec;
+        let dense_b = self.upload_f32(dense, &[spec.eval_batch, spec.n_dense])?;
+        let emb_b = self.emb_buffer("predict", &emb)?;
+        let outs = self.predict.execute_b(&[state, &dense_b, &emb_b])?;
+        let lit = outs[0][0].to_literal_sync()?;
+        Ok(lit.to_vec::<f32>()?)
+    }
+
+    /// Shapes of the embedding input per executable (for buffer sizing).
+    pub fn emb_elems(&self, exec: &str) -> Result<usize> {
+        Ok(self
+            .manifest
+            .inputs_for(exec)?
+            .iter()
+            .find(|d| d.name == "emb")
+            .ok_or_else(|| anyhow!("no emb input"))?
+            .elems())
+    }
+}

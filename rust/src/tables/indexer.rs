@@ -1,0 +1,373 @@
+//! Per-method embedding-index generation — the L3 hot path.
+//!
+//! Every step, the coordinator turns a batch of raw categorical ids
+//! `[B, F]` into whatever the lowered graph consumes:
+//!   * row-wise methods → global row ids `i32[B, F, T, c]`
+//!   * ROBE             → element ids `i32[B, F, d]`
+//!   * DHE              → hash features `f32[B, F, n_hash]`
+//!
+//! For CCE this is where the system contribution lives: the `IndexMap`s of
+//! term 0 get *replaced by learned cluster assignments* at every clustering
+//! event while term 1 gets a fresh random hash (Algorithm 3 lines 14–16).
+
+use crate::hashing::{DheHasher, IndexMap, RobeWindows};
+use crate::tables::layout::{SubtableId, TablePlan};
+use crate::util::Rng;
+
+/// Which graph family the indexer feeds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    RowWise,
+    ElementWise,
+    Dhe,
+}
+
+impl MethodKind {
+    pub fn parse(s: &str) -> anyhow::Result<MethodKind> {
+        Ok(match s {
+            "rowwise" => MethodKind::RowWise,
+            "elementwise" => MethodKind::ElementWise,
+            "dhe" => MethodKind::Dhe,
+            other => anyhow::bail!("unknown method kind {other:?}"),
+        })
+    }
+}
+
+/// Index state for one model. The maps are indexed `[feature][term][column]`.
+#[derive(Clone)]
+pub struct Indexer {
+    pub kind: MethodKind,
+    pub plan: TablePlan,
+    /// row-wise: one map per (f, t, j)
+    maps: Vec<IndexMap>,
+    /// identity maps (full tables) bypass hashing entirely
+    identity: Vec<bool>,
+    /// elementwise (ROBE): windows + region base per feature
+    robe: Vec<RobeWindows>,
+    robe_base: Vec<usize>,
+    dim: usize,
+    /// DHE hashers per feature
+    dhe: Vec<DheHasher>,
+    pub n_hash: usize,
+}
+
+impl Indexer {
+    /// Row-wise indexer with all-random maps (training start).
+    ///
+    /// Features whose vocab fits under the cap (`vocab <= cap`) get
+    /// *identity* maps — a full table, exactly the paper's setup where only
+    /// large tables are compressed.
+    pub fn new_rowwise(rng: &mut Rng, plan: TablePlan) -> Indexer {
+        let mut maps = Vec::new();
+        let mut identity = Vec::new();
+        for id in plan.subtables() {
+            let k = plan.subtable_rows(id.feature) as u32;
+            let ident = plan.vocabs[id.feature] <= plan.k[id.feature];
+            identity.push(ident);
+            maps.push(if ident {
+                // placeholder; identity maps short-circuit in `map_row`
+                IndexMap::Learned((0..k).collect())
+            } else {
+                IndexMap::random(&mut rng.fork(maps.len() as u64), k)
+            });
+        }
+        Indexer {
+            kind: MethodKind::RowWise,
+            plan,
+            maps,
+            identity,
+            robe: Vec::new(),
+            robe_base: Vec::new(),
+            dim: 0,
+            dhe: Vec::new(),
+            n_hash: 0,
+        }
+    }
+
+    /// ROBE indexer: per-feature flat regions of `min(vocab, cap) * dim`
+    /// elements, c windows of d/c elements each.
+    pub fn new_robe(rng: &mut Rng, vocabs: &[usize], cap: usize, dim: usize, c: usize) -> Indexer {
+        assert_eq!(dim % c, 0);
+        let dc = dim / c;
+        let mut robe = Vec::new();
+        let mut robe_base = Vec::new();
+        let mut acc = 0usize;
+        for (f, &v) in vocabs.iter().enumerate() {
+            let region = (v.min(cap) * dim) as u32;
+            robe.push(RobeWindows::new(&mut rng.fork(f as u64), region, c as u32, dc as u32));
+            robe_base.push(acc);
+            acc += region as usize;
+        }
+        // plan is only used for vocab bookkeeping in the elementwise case
+        let plan = TablePlan::new(vocabs, cap, 1, c, dc);
+        Indexer {
+            kind: MethodKind::ElementWise,
+            plan,
+            maps: Vec::new(),
+            identity: Vec::new(),
+            robe,
+            robe_base,
+            dim,
+            dhe: Vec::new(),
+            n_hash: 0,
+        }
+    }
+
+    /// DHE indexer: per-feature hash-feature generators.
+    pub fn new_dhe(rng: &mut Rng, vocabs: &[usize], n_hash: usize) -> Indexer {
+        let dhe = (0..vocabs.len())
+            .map(|f| DheHasher::new(&mut rng.fork(f as u64), n_hash))
+            .collect();
+        let plan = TablePlan::new(vocabs, 1, 1, 1, 1);
+        Indexer {
+            kind: MethodKind::Dhe,
+            plan,
+            maps: Vec::new(),
+            identity: Vec::new(),
+            robe: Vec::new(),
+            robe_base: Vec::new(),
+            dim: 0,
+            dhe,
+            n_hash,
+        }
+    }
+
+    #[inline]
+    fn map_index(&self, id: SubtableId) -> usize {
+        (id.feature * self.plan.t + id.term) * self.plan.c + id.column
+    }
+
+    /// Local row for an id in one subtable.
+    #[inline]
+    pub fn local_row(&self, id: SubtableId, value: u32) -> u32 {
+        let mi = self.map_index(id);
+        if self.identity[mi] {
+            value
+        } else {
+            self.maps[mi].map(value)
+        }
+    }
+
+    /// Global pool row for an id in one subtable.
+    #[inline]
+    pub fn global_row(&self, id: SubtableId, value: u32) -> u32 {
+        self.plan.global_row(id, self.local_row(id, value))
+    }
+
+    /// Fill row indices for a batch: `cats` is `[B, F]` raw values,
+    /// `out` is `[B, F, T, c]` i32.
+    pub fn fill_rowwise(&self, cats: &[u32], batch: usize, out: &mut [i32]) {
+        let f_n = self.plan.n_features();
+        let (t_n, c_n) = (self.plan.t, self.plan.c);
+        assert_eq!(cats.len(), batch * f_n);
+        assert_eq!(out.len(), batch * f_n * t_n * c_n);
+        let mut o = 0usize;
+        for b in 0..batch {
+            for f in 0..f_n {
+                let v = cats[b * f_n + f];
+                debug_assert!((v as usize) < self.plan.vocabs[f], "value {v} out of vocab");
+                for t in 0..t_n {
+                    for j in 0..c_n {
+                        let id = SubtableId { feature: f, term: t, column: j };
+                        out[o] = self.global_row(id, v) as i32;
+                        o += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fill element indices for ROBE: `out` is `[B, F, d]` i32.
+    pub fn fill_elementwise(&self, cats: &[u32], batch: usize, out: &mut [i32]) {
+        let f_n = self.plan.n_features();
+        assert_eq!(out.len(), batch * f_n * self.dim);
+        let mut tmp = vec![0u32; self.dim];
+        let mut o = 0usize;
+        for b in 0..batch {
+            for f in 0..f_n {
+                let v = cats[b * f_n + f];
+                self.robe[f].fill(v, &mut tmp);
+                let base = self.robe_base[f] as i32;
+                for &e in &tmp {
+                    out[o] = base + e as i32;
+                    o += 1;
+                }
+            }
+        }
+    }
+
+    /// Fill DHE hash features: `out` is `[B, F, n_hash]` f32.
+    pub fn fill_dhe(&self, cats: &[u32], batch: usize, out: &mut [f32]) {
+        let f_n = self.plan.n_features();
+        assert_eq!(out.len(), batch * f_n * self.n_hash);
+        for b in 0..batch {
+            for f in 0..f_n {
+                let v = cats[b * f_n + f];
+                let off = (b * f_n + f) * self.n_hash;
+                self.dhe[f].fill(v, &mut out[off..off + self.n_hash]);
+            }
+        }
+    }
+
+    /// ROBE total pool elements.
+    pub fn robe_pool_elems(&self) -> usize {
+        self.robe_base.last().map(|&b| b).unwrap_or(0)
+            + self.robe.last().map(|w| w.region as usize).unwrap_or(0)
+    }
+
+    // -- CCE clustering hooks ------------------------------------------------
+
+    /// Replace one subtable's map with learned assignments (Algorithm 3
+    /// line 14). `assignments[v]` must be a local row `< k_f`.
+    pub fn set_learned(&mut self, id: SubtableId, assignments: Vec<u32>) {
+        assert_eq!(assignments.len(), self.plan.vocabs[id.feature]);
+        let k = self.plan.subtable_rows(id.feature) as u32;
+        assert!(assignments.iter().all(|&a| a < k), "assignment out of range");
+        let mi = self.map_index(id);
+        self.identity[mi] = false;
+        self.maps[mi] = IndexMap::Learned(assignments);
+    }
+
+    /// Replace one subtable's map with a fresh random hash (line 16).
+    pub fn set_random(&mut self, id: SubtableId, rng: &mut Rng) {
+        let k = self.plan.subtable_rows(id.feature) as u32;
+        let mi = self.map_index(id);
+        self.identity[mi] = false;
+        self.maps[mi] = IndexMap::random(rng, k);
+    }
+
+    /// Is this subtable's map an identity (full-table) map?
+    pub fn is_identity(&self, id: SubtableId) -> bool {
+        self.identity[self.map_index(id)]
+    }
+
+    pub fn is_learned(&self, id: SubtableId) -> bool {
+        let mi = self.map_index(id);
+        !self.identity[mi] && self.maps[mi].is_learned()
+    }
+
+    /// Materialized assignment table for entropy metrics (Appendix H).
+    pub fn materialize(&self, id: SubtableId) -> Vec<u32> {
+        let mi = self.map_index(id);
+        self.maps[mi].materialize(self.plan.vocabs[id.feature])
+    }
+
+    /// Host memory for all index maps (Appendix E accounting).
+    pub fn host_bytes(&self) -> usize {
+        self.maps
+            .iter()
+            .enumerate()
+            .map(|(mi, m)| m.host_bytes(self.plan.vocabs[mi / (self.plan.t * self.plan.c)]))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> TablePlan {
+        TablePlan::new(&[5, 40], 8, 2, 2, 4)
+    }
+
+    #[test]
+    fn small_vocab_gets_identity_map() {
+        let mut rng = Rng::new(0);
+        let ix = Indexer::new_rowwise(&mut rng, plan());
+        let id = SubtableId { feature: 0, term: 0, column: 0 };
+        assert!(ix.is_identity(id));
+        for v in 0..5u32 {
+            assert_eq!(ix.local_row(id, v), v);
+        }
+        let big = SubtableId { feature: 1, term: 0, column: 0 };
+        assert!(!ix.is_identity(big));
+    }
+
+    #[test]
+    fn fill_rowwise_produces_in_range_rows() {
+        let mut rng = Rng::new(1);
+        let ix = Indexer::new_rowwise(&mut rng, plan());
+        let cats = [0u32, 10, 4, 39, 2, 0];
+        let mut out = vec![0i32; 3 * 2 * 2 * 2];
+        ix.fill_rowwise(&cats, 3, &mut out);
+        let total = ix.plan.total_rows as i32;
+        assert!(out.iter().all(|&r| (0..total).contains(&r)));
+    }
+
+    #[test]
+    fn rowwise_rows_land_in_their_subtable() {
+        let mut rng = Rng::new(2);
+        let ix = Indexer::new_rowwise(&mut rng, plan());
+        for f in 0..2 {
+            for t in 0..2 {
+                for j in 0..2 {
+                    let id = SubtableId { feature: f, term: t, column: j };
+                    let base = ix.plan.subtable_base(id);
+                    let rows = ix.plan.subtable_rows(f);
+                    for v in 0..ix.plan.vocabs[f] as u32 {
+                        let g = ix.global_row(id, v) as usize;
+                        assert!(g >= base && g < base + rows);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn learned_assignments_take_effect() {
+        let mut rng = Rng::new(3);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan());
+        let id = SubtableId { feature: 1, term: 0, column: 1 };
+        let assignments: Vec<u32> = (0..40).map(|v| (v * 7 % 8) as u32).collect();
+        ix.set_learned(id, assignments.clone());
+        assert!(ix.is_learned(id));
+        for v in 0..40u32 {
+            assert_eq!(ix.local_row(id, v), assignments[v as usize]);
+        }
+        // other subtables unchanged semantics-wise
+        let other = SubtableId { feature: 1, term: 1, column: 1 };
+        assert!(!ix.is_learned(other));
+    }
+
+    #[test]
+    #[should_panic(expected = "assignment out of range")]
+    fn learned_assignments_validated() {
+        let mut rng = Rng::new(4);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan());
+        ix.set_learned(SubtableId { feature: 1, term: 0, column: 0 }, vec![99; 40]);
+    }
+
+    #[test]
+    fn robe_elements_in_pool() {
+        let mut rng = Rng::new(5);
+        let ix = Indexer::new_robe(&mut rng, &[30, 100], 50, 8, 2);
+        let total = ix.robe_pool_elems() as i32;
+        assert_eq!(total, (30 * 8 + 50 * 8) as i32);
+        let cats = [3u32, 77, 29, 0];
+        let mut out = vec![0i32; 2 * 2 * 8];
+        ix.fill_elementwise(&cats, 2, &mut out);
+        assert!(out.iter().all(|&e| (0..total).contains(&e)));
+        // feature 1 elements land in feature 1's region
+        assert!(out[8..16].iter().all(|&e| e >= 30 * 8));
+    }
+
+    #[test]
+    fn dhe_features_filled() {
+        let mut rng = Rng::new(6);
+        let ix = Indexer::new_dhe(&mut rng, &[10, 10], 8);
+        let cats = [1u32, 2, 3, 4];
+        let mut out = vec![0f32; 2 * 2 * 8];
+        ix.fill_dhe(&cats, 2, &mut out);
+        assert!(out.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+        assert!(out.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn host_bytes_grows_with_learning() {
+        let mut rng = Rng::new(7);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan());
+        let before = ix.host_bytes();
+        ix.set_learned(SubtableId { feature: 1, term: 0, column: 0 }, vec![0; 40]);
+        assert!(ix.host_bytes() > before);
+    }
+}

@@ -1,0 +1,93 @@
+//! State-vector initialization from a manifest layout.
+//!
+//! Initialization lives on the Rust side (not baked into HLO) so the
+//! coordinator can re-initialize regions during CCE clustering events:
+//! `M_i ← centroids`, `M'_i ← 0`, and everything else untouched.
+
+use crate::runtime::manifest::{FieldDesc, InitSpec};
+use crate::util::Rng;
+
+/// Allocate and initialize a fresh state vector for a layout.
+pub fn init_state(fields: &[FieldDesc], state_size: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut out = vec![0f32; state_size];
+    for f in fields {
+        let dst = &mut out[f.offset..f.offset + f.size];
+        match f.init {
+            InitSpec::Zeros => {}
+            InitSpec::Normal(std) => rng.fill_normal(dst, std),
+            InitSpec::Uniform(limit) => rng.fill_uniform(dst, limit),
+        }
+    }
+    out
+}
+
+/// Re-initialize a single field in place (used at clustering events).
+pub fn reinit_field(state: &mut [f32], f: &FieldDesc, rng: &mut Rng) {
+    let dst = &mut state[f.offset..f.offset + f.size];
+    match f.init {
+        InitSpec::Zeros => dst.fill(0.0),
+        InitSpec::Normal(std) => rng.fill_normal(dst, std),
+        InitSpec::Uniform(limit) => rng.fill_uniform(dst, limit),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fields() -> Vec<FieldDesc> {
+        vec![
+            FieldDesc {
+                name: "pool".into(),
+                shape: vec![10, 4],
+                offset: 0,
+                size: 40,
+                init: InitSpec::Normal(0.5),
+            },
+            FieldDesc {
+                name: "b".into(),
+                shape: vec![8],
+                offset: 40,
+                size: 8,
+                init: InitSpec::Zeros,
+            },
+            FieldDesc {
+                name: "w".into(),
+                shape: vec![4, 4],
+                offset: 48,
+                size: 16,
+                init: InitSpec::Uniform(0.1),
+            },
+        ]
+    }
+
+    #[test]
+    fn init_respects_specs() {
+        let mut rng = Rng::new(0);
+        let s = init_state(&fields(), 64, &mut rng);
+        assert_eq!(s.len(), 64);
+        assert!(s[0..40].iter().any(|&x| x != 0.0));
+        assert!(s[40..48].iter().all(|&x| x == 0.0));
+        assert!(s[48..64].iter().all(|&x| x.abs() <= 0.1));
+        assert!(s[48..64].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_is_deterministic_per_seed() {
+        let a = init_state(&fields(), 64, &mut Rng::new(9));
+        let b = init_state(&fields(), 64, &mut Rng::new(9));
+        let c = init_state(&fields(), 64, &mut Rng::new(10));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn reinit_zeroes_field() {
+        let fs = fields();
+        let mut rng = Rng::new(1);
+        let mut s = init_state(&fs, 64, &mut rng);
+        s[40..48].copy_from_slice(&[1.0; 8]);
+        reinit_field(&mut s, &fs[1], &mut rng);
+        assert!(s[40..48].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,170 @@
+//! Pool-row layout for row-wise methods — the EXACT mirror of
+//! `python/compile/specs.py::rows_for` and the packing order documented
+//! there: subtables are laid out feature-major, then term, then column,
+//! each with `min(vocab_f, cap)` rows of width `d/c`.
+//!
+//! The Rust side owns all offset arithmetic; the lowered HLO only ever sees
+//! global row ids into one `[R, d/c]` pool.
+
+/// Identifies one (feature, term, column) subtable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SubtableId {
+    pub feature: usize,
+    pub term: usize,
+    pub column: usize,
+}
+
+/// Row layout of the parameter pool for a row-wise artifact.
+#[derive(Clone, Debug)]
+pub struct TablePlan {
+    pub vocabs: Vec<usize>,
+    pub cap: usize,
+    pub t: usize,
+    pub c: usize,
+    pub dc: usize,
+    /// per-feature subtable row count: `min(vocab, cap)`
+    pub k: Vec<usize>,
+    /// base row of feature f's first subtable
+    feature_base: Vec<usize>,
+    pub total_rows: usize,
+}
+
+impl TablePlan {
+    pub fn new(vocabs: &[usize], cap: usize, t: usize, c: usize, dc: usize) -> TablePlan {
+        assert!(t >= 1 && c >= 1 && dc >= 1);
+        let k: Vec<usize> = vocabs.iter().map(|&v| v.min(cap)).collect();
+        let mut feature_base = Vec::with_capacity(vocabs.len());
+        let mut acc = 0usize;
+        for &kf in &k {
+            feature_base.push(acc);
+            acc += t * c * kf;
+        }
+        TablePlan { vocabs: vocabs.to_vec(), cap, t, c, dc, k, feature_base, total_rows: acc }
+    }
+
+    /// Base (first global row) of a subtable.
+    #[inline]
+    pub fn subtable_base(&self, id: SubtableId) -> usize {
+        debug_assert!(id.term < self.t && id.column < self.c);
+        self.feature_base[id.feature] + (id.term * self.c + id.column) * self.k[id.feature]
+    }
+
+    /// Rows in a subtable (same for every (t, j) of a feature).
+    #[inline]
+    pub fn subtable_rows(&self, feature: usize) -> usize {
+        self.k[feature]
+    }
+
+    /// Global row for (feature, term, column, local row).
+    #[inline]
+    pub fn global_row(&self, id: SubtableId, local: u32) -> u32 {
+        debug_assert!((local as usize) < self.k[id.feature]);
+        (self.subtable_base(id) + local as usize) as u32
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.vocabs.len()
+    }
+
+    /// Total embedding parameters (pool_rows × dc) — Table 1 accounting.
+    pub fn params(&self) -> usize {
+        self.total_rows * self.dc
+    }
+
+    /// Parameters a FULL table would need (the compression numerator):
+    /// `sum(vocab) × d` where `d = c × dc`.
+    pub fn full_params(&self) -> usize {
+        self.vocabs.iter().sum::<usize>() * self.c * self.dc
+    }
+
+    /// Paper measure 1 (Figure 4a): total vocab / total compressed rows,
+    /// both sides counted in d-dim row units.
+    pub fn compression_total(&self) -> f64 {
+        let full_rows: usize = self.vocabs.iter().sum();
+        let comp_rows = self.total_rows as f64 / (self.t * self.c) as f64;
+        full_rows as f64 / comp_rows
+    }
+
+    /// Paper measure 2 (the intro's "11,000×"): largest vocab / its rows.
+    pub fn compression_largest(&self) -> f64 {
+        let (f, &v) = self
+            .vocabs
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .expect("no features");
+        v as f64 / self.k[f] as f64
+    }
+
+    /// All subtable ids in pool order.
+    pub fn subtables(&self) -> impl Iterator<Item = SubtableId> + '_ {
+        (0..self.n_features()).flat_map(move |f| {
+            (0..self.t).flat_map(move |t| {
+                (0..self.c).map(move |j| SubtableId { feature: f, term: t, column: j })
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_python_rows_for() {
+        // specs.rows_for([10, 100], cap=50, t=2, c=4) == 2*4*(10+50)
+        let p = TablePlan::new(&[10, 100], 50, 2, 4, 4);
+        assert_eq!(p.total_rows, 2 * 4 * (10 + 50));
+        assert_eq!(p.k, vec![10, 50]);
+    }
+
+    #[test]
+    fn subtable_layout_is_feature_term_column() {
+        let p = TablePlan::new(&[10, 100], 50, 2, 3, 4);
+        // feature 0: base 0; its 6 subtables of 10 rows each
+        assert_eq!(p.subtable_base(SubtableId { feature: 0, term: 0, column: 0 }), 0);
+        assert_eq!(p.subtable_base(SubtableId { feature: 0, term: 0, column: 1 }), 10);
+        assert_eq!(p.subtable_base(SubtableId { feature: 0, term: 1, column: 0 }), 30);
+        // feature 1 starts after 2*3*10 rows
+        assert_eq!(p.subtable_base(SubtableId { feature: 1, term: 0, column: 0 }), 60);
+        assert_eq!(p.subtable_base(SubtableId { feature: 1, term: 1, column: 2 }), 60 + 5 * 50);
+        assert_eq!(p.total_rows, 60 + 6 * 50);
+    }
+
+    #[test]
+    fn subtables_cover_pool_exactly() {
+        let p = TablePlan::new(&[7, 20, 33], 25, 2, 4, 2);
+        let mut next = 0usize;
+        for id in p.subtables() {
+            assert_eq!(p.subtable_base(id), next, "{id:?}");
+            next += p.subtable_rows(id.feature);
+        }
+        assert_eq!(next, p.total_rows);
+    }
+
+    #[test]
+    fn global_rows_in_range() {
+        let p = TablePlan::new(&[7, 20], 10, 2, 2, 4);
+        for id in p.subtables() {
+            for local in 0..p.subtable_rows(id.feature) as u32 {
+                assert!((p.global_row(id, local) as usize) < p.total_rows);
+            }
+        }
+    }
+
+    #[test]
+    fn compression_measures() {
+        // vocabs 10, 100, 10^6 capped at 500 rows (paper's Reproducibility example)
+        let p = TablePlan::new(&[10, 100, 1_000_000], 500, 1, 1, 16);
+        assert!((p.compression_total() - 1_000_110.0 / 610.0).abs() < 1e-9);
+        assert!((p.compression_largest() - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_table_plan_is_identity_sized() {
+        let p = TablePlan::new(&[10, 100], usize::MAX, 1, 1, 16);
+        assert_eq!(p.total_rows, 110);
+        assert_eq!(p.params(), 110 * 16);
+        assert!((p.compression_total() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Embedding-table state management: pool layout, per-method indexers,
+//! state initialization, and parameter accounting.
+
+pub mod indexer;
+pub mod init;
+pub mod layout;
+
+pub use indexer::{Indexer, MethodKind};
+pub use layout::{SubtableId, TablePlan};

@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted. Unknown flags are an error, which keeps
+//! typos from silently running the wrong experiment.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if stripped.is_empty() {
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key)
+            .and_then(|s| s.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.str_opt(key)
+            .and_then(|s| s.replace('_', "").parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.str_opt(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Comma-separated list.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.str_opt(key) {
+            Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Error if any flag was provided that no accessor ever looked at.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<_> = self.flags.keys().filter(|k| !seen.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --preset kaggle_small --seed 7 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("preset", ""), "kaggle_small");
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_underscores() {
+        let a = parse("bench --steps=10_000 --lr=0.05");
+        assert_eq!(a.usize_or("steps", 0), 10_000);
+        assert!((a.f64_or("lr", 0.0) - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("sweep --methods hash,cce , --caps 64,256");
+        assert_eq!(a.list_or("methods", &[]), vec!["hash", "cce"]);
+        assert_eq!(a.list_or("caps", &[]), vec!["64", "256"]);
+        assert_eq!(a.list_or("missing", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse("run --real-flag 1 --typo-flag 2");
+        let _ = a.str_opt("real-flag");
+        assert!(a.reject_unknown().is_err());
+        let _ = a.str_opt("typo-flag");
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn positional_after_doubledash() {
+        let a = parse("run --x 1 -- --not-a-flag pos2");
+        let _ = a.str_opt("x");
+        assert_eq!(a.positional, vec!["--not-a-flag", "pos2"]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Foundation utilities built from scratch (the usual crates — rand, serde,
+//! rayon, clap, criterion — are unavailable in this offline environment; see
+//! DESIGN.md §3).
+
+pub mod args;
+pub mod json;
+pub mod logger;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+pub use args::Args;
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,141 @@
+//! Minimal scoped thread pool (rayon/tokio are unavailable offline).
+//!
+//! Supports the two patterns the system needs:
+//!   * `scope_chunks` — data-parallel map over index ranges (K-means,
+//!     synthetic data generation, linalg).
+//!   * long-lived worker threads with bounded channels live in
+//!     `coordinator::pipeline`, built on std primitives directly.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of worker threads to use by default (cores, capped).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(chunk_index, start, end)` in parallel over `n` items divided into
+/// `n_chunks` contiguous ranges. `f` runs on borrowed state — this is a
+/// scoped fork-join, no 'static bound needed.
+pub fn scope_chunks<F>(n: usize, n_chunks: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let n_chunks = n_chunks.clamp(1, n);
+    if n_chunks == 1 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(n_chunks);
+    std::thread::scope(|s| {
+        for c in 0..n_chunks {
+            let start = c * chunk;
+            let end = ((c + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(c, start, end));
+        }
+    });
+}
+
+/// Parallel map over items with a dynamic work queue (better balance than
+/// fixed chunks when item costs vary, e.g. per-feature K-means with very
+/// different k).
+pub fn par_for_each_dynamic<F>(n: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let n_threads = n_threads.clamp(1, n);
+    if n_threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            let next = Arc::clone(&next);
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map collecting results in order.
+pub fn par_map<T, F>(n: usize, n_threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        par_for_each_dynamic(n, n_threads, |i| {
+            let mut slot = slots[i].lock().unwrap();
+            **slot = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scope_chunks_covers_all_items_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        scope_chunks(1000, 7, |_, s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn scope_chunks_handles_edge_sizes() {
+        for (n, c) in [(0, 4), (1, 4), (3, 8), (8, 3)] {
+            let count = AtomicU64::new(0);
+            scope_chunks(n, c, |_, s, e| {
+                count.fetch_add((e - s) as u64, Ordering::Relaxed);
+            });
+            assert_eq!(count.load(Ordering::Relaxed), n as u64);
+        }
+    }
+
+    #[test]
+    fn dynamic_queue_processes_everything() {
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        par_for_each_dynamic(257, 5, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,147 @@
+//! Timing utilities for the custom bench harness (criterion is unavailable
+//! offline): warmup + repeated measurement with robust summary statistics.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of timed runs.
+#[derive(Debug, Clone, Copy)]
+pub struct TimingStats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub max_ns: f64,
+}
+
+impl TimingStats {
+    pub fn from_samples(mut ns: Vec<f64>) -> TimingStats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        TimingStats {
+            n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: ns[0],
+            p50_ns: percentile(&ns, 0.50),
+            p99_ns: percentile(&ns, 0.99),
+            max_ns: ns[n - 1],
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// Human-readable "mean ± std [min, p99]" line.
+    pub fn display(&self) -> String {
+        format!(
+            "{} ± {} (min {}, p50 {}, p99 {}, n={})",
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.n
+        )
+    }
+}
+
+/// `percentile` over a sorted slice with linear interpolation.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `iters` measured.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    TimingStats::from_samples(samples)
+}
+
+/// Benchmark for a minimum duration instead of a fixed iteration count.
+pub fn bench_for<F: FnMut()>(warmup: usize, min_time: Duration, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_time || samples.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if samples.len() > 1_000_000 {
+            break;
+        }
+    }
+    TimingStats::from_samples(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = TimingStats::from_samples(vec![100.0; 10]);
+        assert_eq!(s.mean_ns, 100.0);
+        assert_eq!(s.std_ns, 0.0);
+        assert_eq!(s.p99_ns, 100.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = vec![0.0, 10.0, 20.0, 30.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 30.0);
+        assert!((percentile(&xs, 0.5) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_requested_iters() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+}

@@ -1,0 +1,257 @@
+//! Property tests over coordinator invariants (own mini-framework in
+//! `cce::testutil::prop`; proptest is unavailable offline).
+
+use cce::data::batch::{BatchIter, Split};
+use cce::data::synthetic::{DatasetSpec, SyntheticDataset};
+use cce::kmeans;
+use cce::metrics::extrapolate::{params_to_reach, Crossing, SweepPoint};
+use cce::tables::indexer::Indexer;
+use cce::tables::layout::{SubtableId, TablePlan};
+use cce::testutil::prop;
+use cce::util::Rng;
+
+#[test]
+fn prop_rowwise_indices_always_in_their_subtable() {
+    prop::check(60, |g| {
+        let n_features = g.usize(1..5);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(1..500)).collect();
+        let cap = g.usize(1..64);
+        let t = g.usize(1..3);
+        let c = *g.pick(&[1usize, 2, 4]);
+        let plan = TablePlan::new(&vocabs, cap, t, c, 4);
+        let mut rng = Rng::new(g.u64());
+        let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
+        // randomly learn some maps
+        for f in 0..n_features {
+            if g.bool() && vocabs[f] > plan.k[f] {
+                let assignments = g.vec_u32(vocabs[f], plan.k[f] as u32);
+                ix.set_learned(SubtableId { feature: f, term: 0, column: 0 }, assignments);
+            }
+        }
+        let batch = g.usize(1..16);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut out = vec![0i32; batch * n_features * t * c];
+        ix.fill_rowwise(&cats, batch, &mut out);
+        let mut o = 0;
+        for b in 0..batch {
+            for f in 0..n_features {
+                for tt in 0..t {
+                    for j in 0..c {
+                        let id = SubtableId { feature: f, term: tt, column: j };
+                        let base = plan.subtable_base(id) as i32;
+                        let rows = plan.subtable_rows(f) as i32;
+                        let v = out[o];
+                        prop::prop_assert!(
+                            g,
+                            v >= base && v < base + rows,
+                            "row {v} outside subtable [{base}, {}) b={b} f={f}",
+                            base + rows
+                        );
+                        o += 1;
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_plan_rows_equal_sum_of_subtables() {
+    prop::check(100, |g| {
+        let n = g.usize(1..8);
+        let vocabs: Vec<usize> = (0..n).map(|_| g.usize(1..100_000)).collect();
+        let cap = g.usize(1..20_000);
+        let t = g.usize(1..4);
+        let c = g.usize(1..5);
+        let plan = TablePlan::new(&vocabs, cap, t, c, 4);
+        let total: usize = plan.subtables().map(|id| plan.subtable_rows(id.feature)).sum();
+        assert_eq!(total, plan.total_rows);
+        // mirror of specs.rows_for
+        let formula: usize = vocabs.iter().map(|&v| t * c * v.min(cap)).sum();
+        assert_eq!(formula, plan.total_rows);
+    });
+}
+
+#[test]
+fn prop_batcher_covers_split_exactly_once() {
+    prop::check(25, |g| {
+        let train = g.usize(1..400);
+        let batch = g.usize(1..40);
+        let ds = SyntheticDataset::new(DatasetSpec {
+            name: "p".into(),
+            vocabs: vec![7, 19],
+            n_dense: 2,
+            train_samples: train,
+            val_samples: 3,
+            test_samples: 3,
+            latent_clusters: 2,
+            zipf_exponent: 1.05,
+            label_noise: 0.0,
+            seed: g.u64(),
+        });
+        let shuffle = g.bool().then(|| g.u64());
+        let mut it = BatchIter::new(&ds, Split::Train, batch, shuffle);
+        let mut b = it.alloc_batch();
+        let mut total = 0usize;
+        let mut batches = 0usize;
+        while it.next_into(&mut b) {
+            prop::prop_assert!(g, b.real >= 1 && b.real <= batch, "real {}", b.real);
+            total += b.real;
+            batches += 1;
+        }
+        assert_eq!(total, train, "sample coverage");
+        assert_eq!(batches, train.div_ceil(batch), "batch count");
+    });
+}
+
+#[test]
+fn prop_kmeans_assignment_is_nearest_brute_force() {
+    prop::check(40, |g| {
+        let n = g.usize(2..120);
+        let d = g.usize(1..6);
+        let k = g.usize(1..10);
+        let pts = g.vec_f32(n * d, -3.0..3.0);
+        let cen = g.vec_f32(k * d, -3.0..3.0);
+        let mut asg = vec![0u32; n];
+        kmeans::assign(&pts, &cen, d, &mut asg);
+        for i in 0..n {
+            let dist = |j: usize| -> f64 {
+                (0..d)
+                    .map(|e| (pts[i * d + e] as f64 - cen[j * d + e] as f64).powi(2))
+                    .sum()
+            };
+            let best = (0..k)
+                .min_by(|&a, &b| dist(a).partial_cmp(&dist(b)).unwrap())
+                .unwrap();
+            // allow exact ties
+            prop::prop_assert!(
+                g,
+                (dist(asg[i] as usize) - dist(best)).abs() < 1e-9,
+                "point {i}: assigned {} (d={}), best {best} (d={})",
+                asg[i],
+                dist(asg[i] as usize),
+                dist(best)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_kmeans_inertia_never_worse_than_random_centroids() {
+    prop::check(20, |g| {
+        let n = g.usize(20..200);
+        let d = g.usize(1..5);
+        let k = g.usize(1..8).min(n);
+        let pts = g.vec_f32(n * d, -2.0..2.0);
+        let res = kmeans::kmeans(
+            &pts,
+            d,
+            &kmeans::KmeansConfig { k, n_iter: 15, seed: g.u64(), ..Default::default() },
+        );
+        // compare against centroids = first k points
+        let naive_cen: Vec<f32> = pts[..k * d].to_vec();
+        let mut naive_asg = vec![0u32; n];
+        kmeans::assign(&pts, &naive_cen, d, &mut naive_asg);
+        let naive = kmeans::inertia(&pts, &naive_cen, d, &naive_asg);
+        prop::prop_assert!(
+            g,
+            res.inertia <= naive + 1e-6,
+            "kmeans {} worse than naive {}",
+            res.inertia,
+            naive
+        );
+    });
+}
+
+#[test]
+fn prop_extrapolation_monotone_in_baseline() {
+    // a lower (harder) baseline can never need FEWER parameters
+    prop::check(60, |g| {
+        let n = g.usize(3..7);
+        let mut params = 100.0;
+        let mut bce = g.f64(0.5..0.8);
+        let mut pts = Vec::new();
+        for _ in 0..n {
+            pts.push(SweepPoint { params, bce });
+            params *= g.f64(2.0..10.0);
+            bce -= g.f64(0.005..0.05); // strictly decreasing
+        }
+        let b1 = g.f64(0.2..0.79);
+        let b2 = b1 - g.f64(0.001..0.1);
+        let p = |b: f64| match params_to_reach(&pts, b) {
+            Crossing::Measured(x) => x,
+            Crossing::Extrapolated { linear, .. } => linear,
+            Crossing::Unreachable => f64::INFINITY,
+        };
+        prop::prop_assert!(
+            g,
+            p(b2) >= p(b1) * 0.999,
+            "baseline {b2} needs {} < {} for easier {b1}",
+            p(b2),
+            p(b1)
+        );
+    });
+}
+
+#[test]
+fn prop_entropy_bounded_by_log_k() {
+    prop::check(50, |g| {
+        let k = g.usize(2..64) as u32;
+        let n = g.usize(10..2000);
+        let table = g.vec_u32(n, k);
+        let h = cce::metrics::entropy::empirical_entropy(
+            &table.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+        );
+        prop::prop_assert!(
+            g,
+            h <= (k as f64).ln() + 1e-9,
+            "H {h} exceeds log k {}",
+            (k as f64).ln()
+        );
+        prop::prop_assert!(g, h >= 0.0, "negative entropy");
+    });
+}
+
+#[test]
+fn prop_auc_invariant_under_monotone_transform() {
+    prop::check(30, |g| {
+        let n = g.usize(5..200);
+        let scores: Vec<(f32, bool)> =
+            (0..n).map(|_| (g.f64(0.0..1.0) as f32, g.bool())).collect();
+        let a1 = cce::metrics::auc(&scores);
+        let transformed: Vec<(f32, bool)> =
+            scores.iter().map(|&(s, y)| (s * s * 0.5 + 0.1, y)).collect(); // monotone on [0,1]
+        let a2 = cce::metrics::auc(&transformed);
+        prop::prop_assert!(g, (a1 - a2).abs() < 1e-9, "AUC changed: {a1} vs {a2}");
+    });
+}
+
+#[test]
+fn prop_dataset_values_always_in_vocab() {
+    prop::check(15, |g| {
+        let vocabs: Vec<usize> = (0..g.usize(1..4)).map(|_| g.usize(1..5000)).collect();
+        let ds = SyntheticDataset::new(DatasetSpec {
+            name: "p".into(),
+            vocabs: vocabs.clone(),
+            n_dense: 3,
+            train_samples: 50,
+            val_samples: 5,
+            test_samples: 5,
+            latent_clusters: g.usize(1..16),
+            zipf_exponent: g.f64(1.01..1.5),
+            label_noise: g.f64(0.0..0.3),
+            seed: g.u64(),
+        });
+        let mut dense = vec![0f32; 3];
+        let mut cats = vec![0u32; vocabs.len()];
+        for i in 0..60 {
+            let y = ds.sample_into(i, &mut dense, &mut cats);
+            prop::prop_assert!(g, y == 0.0 || y == 1.0, "label {y}");
+            for (f, &v) in cats.iter().enumerate() {
+                prop::prop_assert!(g, (v as usize) < vocabs[f], "f={f} v={v}");
+            }
+        }
+    });
+}
