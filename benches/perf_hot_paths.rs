@@ -15,8 +15,9 @@ use cce::experiments::report::Table;
 use cce::kmeans::{kmeans, KmeansConfig};
 use cce::runtime::session::EmbInput;
 use cce::runtime::{ArtifactStore, DlrmSession};
+use cce::serving::{self, CountingExecutor, EngineConfig, ServingSnapshot, TrafficGen};
 use cce::tables::indexer::Indexer;
-use cce::tables::layout::TablePlan;
+use cce::tables::layout::{SubtableId, TablePlan};
 use cce::util::timer::{bench, bench_for, fmt_ns};
 use cce::util::Rng;
 use std::time::Duration;
@@ -67,6 +68,72 @@ fn main() -> anyhow::Result<()> {
             s.display(),
             format!("{:.1} M hash/s", (b * f * 64) as f64 / s.mean_ns * 1e3),
         ]);
+    }
+
+    // ---------------- serving: baked snapshot vs live indexer ----------
+    {
+        let plan = TablePlan::new(&vocabs, 4096, 2, 4, 4);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
+        // learn half the term-0 subtables so the baked path covers the
+        // post-clustering map mix a deployed CCE model actually has
+        for f in (0..vocabs.len()).step_by(2) {
+            if plan.vocabs[f] > plan.k[f] {
+                let assignments: Vec<u32> =
+                    (0..plan.vocabs[f]).map(|v| (v % plan.k[f]) as u32).collect();
+                ix.set_learned(SubtableId { feature: f, term: 0, column: 0 }, assignments);
+            }
+        }
+        let snap = ServingSnapshot::bake(&ix);
+        let mut out = vec![0i32; b * f * 2 * 4];
+        let s_live = bench(3, 50, || ix.fill_rowwise(&cats, b, &mut out));
+        let s_baked = bench(3, 50, || snap.fill_rowwise(&cats, b, &mut out));
+        t.row(vec![
+            "serving: index gen LIVE indexer (B=256, T=2, c=4)".into(),
+            s_live.display(),
+            format!("{:.1} M idx/s", (b * f * 8) as f64 / s_live.mean_ns * 1e3),
+        ]);
+        t.row(vec![
+            "serving: index gen BAKED snapshot (B=256, T=2, c=4)".into(),
+            s_baked.display(),
+            format!(
+                "{:.1} M idx/s, {:.2}x vs live",
+                (b * f * 8) as f64 / s_baked.mean_ns * 1e3,
+                s_live.mean_ns / s_baked.mean_ns
+            ),
+        ]);
+    }
+
+    // ---------------- serving: engine throughput vs skew × workers ------
+    {
+        let ds = SyntheticDataset::new(store.dataset("kaggle_small", 0)?);
+        let mut rng = Rng::new(7);
+        let plan = TablePlan::new(&ds.spec.vocabs, 4096, 2, 4, 4);
+        let ix = Indexer::new_rowwise(&mut rng, plan);
+        let snap = ServingSnapshot::bake(&ix);
+        let requests = 20_000;
+        for skew in [0.0f64, 0.99] {
+            for workers in [1usize, 4] {
+                let cfg = EngineConfig {
+                    workers,
+                    max_batch: 256,
+                    max_wait: Duration::from_micros(200),
+                    queue_depth: 4096,
+                };
+                let mut exec = CountingExecutor::new(256);
+                let traffic = TrafficGen::new(&ds, skew, 11);
+                let rep = serving::run(&mut exec, &snap, traffic, &cfg, requests)?;
+                t.row(vec![
+                    format!("serving: engine zipf={skew} workers={workers} (20k req)"),
+                    format!(
+                        "{:.0}k req/s, p50 {}, p99 {}",
+                        rep.throughput_rps / 1e3,
+                        fmt_ns(rep.latency.p50_ns),
+                        fmt_ns(rep.latency.p99_ns)
+                    ),
+                    format!("{} batches, {} padded", rep.batches, rep.padded_rows),
+                ]);
+            }
+        }
     }
 
     // ---------------- L3: batch generation ------------------------------

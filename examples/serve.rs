@@ -1,10 +1,11 @@
-//! Serving demo: train briefly, then serve batched prediction requests and
-//! report latency/throughput — the deployment shape of Appendix E (index
-//! pointers on CPU, model on the accelerator).
+//! Serving demo: train briefly, bake a `ServingSnapshot`, then drive the
+//! multi-worker engine with Zipf-skewed traffic and report per-request
+//! latency/throughput — the deployment shape of Appendix E (index gather on
+//! CPU, model on the accelerator).
 //!
 //! Run: `make artifacts && cargo run --release --example serve`
 
-use cce::config::TrainConfig;
+use cce::config::{ServeConfig, TrainConfig};
 use cce::coordinator::serve::serve;
 use cce::coordinator::trainer::build_indexer;
 use cce::data::SyntheticDataset;
@@ -38,15 +39,25 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0x57A7E);
     session.set_state(&init_state(&m.layout, m.state_size, &mut rng))?;
 
-    println!("-- serving 20,000 requests, dynamic batches of ≤{} --", m.spec.eval_batch);
-    let rep = serve(&session, &indexer, &ds, 20_000, m.spec.eval_batch)?;
-    println!("requests     : {}", rep.requests);
-    println!("batches      : {}", rep.batches);
-    println!("throughput   : {:.0} req/s", rep.throughput_rps);
-    println!("latency      : {}", rep.latency.display());
+    let scfg = ServeConfig { artifact: artifact.into(), requests: 20_000, ..Default::default() };
     println!(
-        "index gen    : {:.1}% of wall time (Appendix E: the CPU-side cost is small)",
-        100.0 * rep.index_secs / rep.elapsed_secs
+        "-- serving {} requests (zipf skew {}, {} workers, batches ≤{}) --",
+        scfg.requests, scfg.zipf_skew, scfg.workers, m.spec.eval_batch
+    );
+    let rep = serve(&session, &indexer, &ds, &scfg)?;
+    println!("requests     : {}", rep.requests);
+    println!("batches      : {} ({} padded rows, tail only)", rep.batches, rep.padded_rows);
+    println!("throughput   : {:.0} req/s", rep.throughput_rps);
+    println!("latency e2e  : {}", rep.latency.display());
+    println!("queue wait   : {}", rep.queue_wait.display());
+    println!(
+        "snapshot     : {} KiB baked in {:.3}s",
+        rep.snapshot_bytes / 1024,
+        rep.bake_secs
+    );
+    println!(
+        "index gen    : {:.3}s summed over {} workers (Appendix E: the CPU-side cost is small)",
+        rep.index_secs, rep.workers
     );
     println!("device exec  : {:.1}% of wall time", 100.0 * rep.exec_secs / rep.elapsed_secs);
     Ok(())

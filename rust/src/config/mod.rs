@@ -3,8 +3,10 @@
 //! Experiments are launched either from presets (`--preset kaggle_small`)
 //! or from a config file (`--config run.toml`); CLI flags override both.
 
+mod serve;
 mod toml;
 
+pub use serve::ServeConfig;
 pub use toml::TomlDoc;
 
 use crate::util::Args;

@@ -1,0 +1,154 @@
+//! Serving-engine configuration: the `[serve]` TOML section and the
+//! `cce serve` CLI flags, mirroring how `TrainConfig` is layered
+//! (defaults ← TOML ← CLI overrides).
+
+use crate::config::TomlDoc;
+use crate::util::Args;
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Everything the serving engine needs besides the baked snapshot.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// artifact name (selects model, dataset shapes, eval batch)
+    pub artifact: String,
+    pub seed: u64,
+    /// total requests the synthetic traffic source emits
+    pub requests: usize,
+    /// admitted requests per device batch; 0 = the artifact's `eval_batch`
+    pub max_batch: usize,
+    /// admission fill window (microseconds): once a worker picks up the
+    /// first request of a batch it waits at most this long for the batch to
+    /// fill to `max_batch` before dispatching what accumulated (time spent
+    /// queued before pickup is NOT counted against this window)
+    pub max_wait_us: u64,
+    /// index-generation worker threads feeding the device
+    pub workers: usize,
+    /// bounded request-queue depth (admission backpressure)
+    pub queue_depth: usize,
+    /// Zipf exponent of the traffic source's sample popularity; 0 = uniform.
+    /// Higher skew concentrates traffic on hot ids — the CAFE-style serving
+    /// scenario the snapshot must stay fast under.
+    pub zipf_skew: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifact: "quick_cce".into(),
+            seed: 0,
+            requests: 10_000,
+            max_batch: 0,
+            max_wait_us: 200,
+            workers: 4,
+            queue_depth: 4096,
+            zipf_skew: 0.99,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply CLI overrides on top of this config.
+    pub fn apply_args(mut self, args: &Args) -> ServeConfig {
+        self.artifact = args.str_or("artifact", &self.artifact);
+        self.seed = args.u64_or("seed", self.seed);
+        self.requests = args.usize_or("requests", self.requests);
+        self.max_batch = args.usize_or("max-batch", self.max_batch);
+        self.max_wait_us = args.u64_or("max-wait-us", self.max_wait_us);
+        self.workers = args.usize_or("workers", self.workers);
+        self.queue_depth = args.usize_or("queue-depth", self.queue_depth);
+        self.zipf_skew = args.f64_or("zipf", self.zipf_skew);
+        self
+    }
+
+    /// Load from a TOML-subset file ([serve] section).
+    pub fn from_toml(doc: &TomlDoc) -> Result<ServeConfig> {
+        let mut c = ServeConfig::default();
+        for (k, v) in doc.section("serve") {
+            match k.as_str() {
+                "artifact" => c.artifact = v.as_str().to_string(),
+                "seed" => c.seed = v.as_u64()?,
+                "requests" => c.requests = v.as_u64()? as usize,
+                "max_batch" => c.max_batch = v.as_u64()? as usize,
+                "max_wait_us" => c.max_wait_us = v.as_u64()?,
+                "workers" => c.workers = v.as_u64()? as usize,
+                "queue_depth" => c.queue_depth = v.as_u64()? as usize,
+                "zipf_skew" => c.zipf_skew = v.as_f64()?,
+                other => bail!("unknown [serve] key {other:?}"),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Admission deadline as a `Duration`.
+    pub fn max_wait(&self) -> Duration {
+        Duration::from_micros(self.max_wait_us)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            bail!("requests must be ≥ 1");
+        }
+        if self.workers == 0 || self.queue_depth == 0 {
+            bail!("serve workers/queue depth must be ≥ 1");
+        }
+        if !self.zipf_skew.is_finite() || self.zipf_skew < 0.0 {
+            bail!("zipf skew must be a finite value ≥ 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_override_defaults() {
+        let args = Args::parse(
+            "x --requests 500 --max-batch 64 --workers 8 --zipf 1.2 --max-wait-us 50"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = ServeConfig::default().apply_args(&args);
+        assert_eq!(c.requests, 500);
+        assert_eq!(c.max_batch, 64);
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.max_wait_us, 50);
+        assert!((c.zipf_skew - 1.2).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.max_wait(), Duration::from_micros(50));
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let doc = TomlDoc::parse(
+            "[serve]\nartifact = \"smoke_cce\"\nrequests = 2000\nzipf_skew = 0.0\nworkers = 2\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.artifact, "smoke_cce");
+        assert_eq!(c.requests, 2000);
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.zipf_skew, 0.0);
+    }
+
+    #[test]
+    fn unknown_toml_key_rejected() {
+        let doc = TomlDoc::parse("[serve]\nbogus = 1\n").unwrap();
+        assert!(ServeConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn validation_catches_zeroes() {
+        let c = ServeConfig { requests: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ServeConfig { workers: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ServeConfig { zipf_skew: -0.1, ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ServeConfig { zipf_skew: f64::NAN, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+}

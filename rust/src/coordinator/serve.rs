@@ -1,92 +1,43 @@
-//! Batched inference serving loop (the `examples/serve.rs` backend).
+//! Thin adapter from the coordinator to the `serving` subsystem: bake the
+//! live `Indexer` into a `ServingSnapshot`, wire the session into a
+//! `SessionExecutor`, and run the multi-worker engine.
 //!
-//! A toy but complete serving path: a request source emits single
-//! (dense, cats) queries; the dynamic batcher packs up to `eval_batch`
-//! requests (padding the remainder), runs `predict`, and records
-//! end-to-end latency per request. This exercises exactly the deployment
-//! shape the paper motivates — index lookup on CPU (Appendix E point 1),
-//! model on the accelerator.
+//! The old 92-line synchronous loop lived here; it replayed dataset batches,
+//! padded every batch to `eval_batch`, dispatched through the training
+//! indexer's per-lookup enum match, and charged each request the whole
+//! burst's latency. All of that now lives — fixed — in `crate::serving`.
 
-use crate::data::batch::{BatchIter, Split};
+use crate::config::ServeConfig;
 use crate::data::synthetic::SyntheticDataset;
-use crate::runtime::session::{DlrmSession, EmbInput};
-use crate::tables::indexer::{Indexer, MethodKind};
-use crate::util::timer::{percentile, TimingStats};
+use crate::runtime::session::DlrmSession;
+use crate::serving::{engine, EngineConfig, ServingSnapshot, SessionExecutor, TrafficGen};
+use crate::tables::indexer::Indexer;
 use anyhow::Result;
-use std::time::Instant;
 
-#[derive(Clone, Debug)]
-pub struct ServeReport {
-    pub requests: usize,
-    pub batches: usize,
-    pub elapsed_secs: f64,
-    pub throughput_rps: f64,
-    /// per-request end-to-end latency
-    pub latency: TimingStats,
-    /// time spent in index generation (the CPU-side cost Appendix E argues
-    /// is cheap) vs device execution
-    pub index_secs: f64,
-    pub exec_secs: f64,
-}
+pub use crate::serving::ServeReport;
 
-/// Serve `n_requests` synthetic queries with dynamic batching of at most
-/// `max_batch_wait` requests per batch (≤ the artifact's eval_batch).
+/// Serve `cfg.requests` Zipf-skewed synthetic queries over a trained
+/// artifact through the multi-worker engine.
 pub fn serve(
     session: &DlrmSession,
     indexer: &Indexer,
     ds: &SyntheticDataset,
-    n_requests: usize,
-    batch_fill: usize,
+    cfg: &ServeConfig,
 ) -> Result<ServeReport> {
-    let eb = session.manifest.spec.eval_batch;
-    let fill = batch_fill.clamp(1, eb);
-    let mut it = BatchIter::new(ds, Split::Test, eb, None);
-    let mut raw = it.alloc_batch();
-    let mut rows = vec![0i32; session.emb_elems("predict")?];
-    let mut hashes = vec![0f32; session.emb_elems("predict")?];
-    let mut latencies = Vec::with_capacity(n_requests);
-    let mut served = 0usize;
-    let mut batches = 0usize;
-    let mut index_secs = 0f64;
-    let mut exec_secs = 0f64;
-    let t_all = Instant::now();
-    while served < n_requests {
-        if !it.next_into(&mut raw) {
-            it = BatchIter::new(ds, Split::Test, eb, None); // wrap around
-            it.next_into(&mut raw);
-        }
-        let n_now = fill.min(n_requests - served).min(raw.real);
-        let t_req = Instant::now(); // arrival of the whole burst
-        let ti = Instant::now();
-        match indexer.kind {
-            MethodKind::RowWise => indexer.fill_rowwise(&raw.cats, eb, &mut rows),
-            MethodKind::ElementWise => indexer.fill_elementwise(&raw.cats, eb, &mut rows),
-            MethodKind::Dhe => indexer.fill_dhe(&raw.cats, eb, &mut hashes),
-        }
-        index_secs += ti.elapsed().as_secs_f64();
-        let te = Instant::now();
-        let _probs = match indexer.kind {
-            MethodKind::Dhe => session.predict(&raw.dense, EmbInput::Hashes(&hashes))?,
-            _ => session.predict(&raw.dense, EmbInput::Rows(&rows))?,
-        };
-        exec_secs += te.elapsed().as_secs_f64();
-        let lat = t_req.elapsed().as_nanos() as f64;
-        for _ in 0..n_now {
-            latencies.push(lat);
-        }
-        served += n_now;
-        batches += 1;
-    }
-    let elapsed = t_all.elapsed().as_secs_f64();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let _ = percentile(&latencies, 0.5);
-    Ok(ServeReport {
-        requests: served,
-        batches,
-        elapsed_secs: elapsed,
-        throughput_rps: served as f64 / elapsed,
-        latency: TimingStats::from_samples(latencies),
-        index_secs,
-        exec_secs,
-    })
+    cfg.validate()?;
+    let t_bake = std::time::Instant::now();
+    let snapshot = ServingSnapshot::bake(indexer);
+    let bake_secs = t_bake.elapsed().as_secs_f64();
+    let eval_batch = session.manifest.spec.eval_batch;
+    let engine_cfg = EngineConfig {
+        workers: cfg.workers,
+        max_batch: if cfg.max_batch == 0 { eval_batch } else { cfg.max_batch },
+        max_wait: cfg.max_wait(),
+        queue_depth: cfg.queue_depth,
+    };
+    let traffic = TrafficGen::new(ds, cfg.zipf_skew, cfg.seed);
+    let mut executor = SessionExecutor::new(session);
+    let mut rep = engine::run(&mut executor, &snapshot, traffic, &engine_cfg, cfg.requests)?;
+    rep.bake_secs = bake_secs;
+    Ok(rep)
 }

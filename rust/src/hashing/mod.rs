@@ -110,6 +110,19 @@ impl RobeWindows {
         }
     }
 
+    /// Number of windows (columns) per id.
+    pub fn n_columns(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Start offset of column `j`'s window for one id — the hashed value a
+    /// baked `ServingSnapshot` materializes per (id, column) so serving can
+    /// expand windows without re-hashing.
+    #[inline]
+    pub fn start(&self, column: usize, id: u32) -> u32 {
+        self.starts[column].hash(id)
+    }
+
     /// Write the `c*dc` element offsets (relative to the region base) for
     /// one id into `out`.
     pub fn fill(&self, id: u32, out: &mut [u32]) {

@@ -25,6 +25,7 @@ pub mod kmeans;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod serving;
 pub mod tables;
 pub mod testutil;
 pub mod util;

@@ -9,7 +9,7 @@
 //!   info     inspect artifacts / dataset presets
 
 use anyhow::{bail, Result};
-use cce::config::TrainConfig;
+use cce::config::{ServeConfig, TrainConfig};
 use cce::experiments::report::Table;
 use cce::runtime::ArtifactStore;
 use cce::util::{logger, Args};
@@ -240,26 +240,37 @@ fn cmd_entropy(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let store = store(args)?;
-    let artifact = args.str_or("artifact", "quick_cce");
-    let requests = args.usize_or("requests", 10_000);
-    let fill = args.usize_or("batch-fill", 1024);
-    let seed = args.u64_or("seed", 0);
+    let mut cfg = ServeConfig::default();
+    if let Some(path) = args.str_opt("config") {
+        cfg = ServeConfig::from_toml(&cce::config::TomlDoc::load(std::path::Path::new(path))?)?;
+    }
+    let cfg = cfg.apply_args(args);
     args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
-    let mut session = cce::runtime::DlrmSession::open(&store, &artifact)?;
+    cfg.validate()?;
+    let mut session = cce::runtime::DlrmSession::open(&store, &cfg.artifact)?;
     let m = session.manifest.clone();
-    let ds = cce::data::SyntheticDataset::new(store.dataset(&m.dataset, seed)?);
-    let indexer = cce::coordinator::trainer::build_indexer(&m, seed)?;
-    let mut rng = cce::util::Rng::new(seed ^ 0x57A7E);
+    let ds = cce::data::SyntheticDataset::new(store.dataset(&m.dataset, cfg.seed)?);
+    let indexer = cce::coordinator::trainer::build_indexer(&m, cfg.seed)?;
+    let mut rng = cce::util::Rng::new(cfg.seed ^ 0x57A7E);
     let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
     session.set_state(&state)?;
-    let rep = cce::coordinator::serve::serve(&session, &indexer, &ds, requests, fill)?;
-    let mut t = Table::new(&format!("serving {artifact}"), &["metric", "value"]);
+    let rep = cce::coordinator::serve::serve(&session, &indexer, &ds, &cfg)?;
+    let mut t = Table::new(
+        &format!("serving {} (zipf skew {}, {} workers)", cfg.artifact, cfg.zipf_skew, cfg.workers),
+        &["metric", "value"],
+    );
     t.row(vec!["requests".into(), rep.requests.to_string()]);
     t.row(vec!["batches".into(), rep.batches.to_string()]);
+    t.row(vec!["padded rows".into(), rep.padded_rows.to_string()]);
     t.row(vec!["throughput".into(), format!("{:.0} req/s", rep.throughput_rps)]);
-    t.row(vec!["latency".into(), rep.latency.display()]);
-    t.row(vec!["index time".into(), format!("{:.3}s", rep.index_secs)]);
+    t.row(vec!["latency e2e".into(), rep.latency.display()]);
+    t.row(vec!["queue wait".into(), rep.queue_wait.display()]);
+    t.row(vec!["index time".into(), format!("{:.3}s (summed over workers)", rep.index_secs)]);
     t.row(vec!["exec time".into(), format!("{:.3}s", rep.exec_secs)]);
+    t.row(vec![
+        "snapshot".into(),
+        format!("{} KiB baked in {:.3}s", rep.snapshot_bytes / 1024, rep.bake_secs),
+    ]);
     t.print();
     Ok(())
 }

@@ -1,0 +1,286 @@
+//! Dynamic batching for the serving engine: a bounded request queue with
+//! max-batch / max-wait admission, fed by a Zipf-skewed synthetic traffic
+//! generator.
+//!
+//! Admission policy (the standard dynamic-batching contract): a worker
+//! blocks until at least one request is queued, then waits up to `max_wait`
+//! for the batch to fill to `max_batch` before dispatching whatever has
+//! accumulated. Under backlog every batch is full; only the tail of a burst
+//! is partial — so device padding is confined to tail batches, unlike the
+//! seed serve loop which padded every batch to `eval_batch`.
+
+use crate::data::synthetic::SyntheticDataset;
+use crate::data::zipf::Zipf;
+use crate::util::Rng;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request: raw features plus its arrival stamp (the clock
+/// per-request latency is measured against).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub dense: Vec<f32>,
+    pub cats: Vec<u32>,
+    pub arrival: Instant,
+}
+
+struct QueueState<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue with batch-draining consumers. Producers block while
+/// full (admission backpressure); consumers drain up to `max_batch` items
+/// after an at-most-`max_wait` fill window.
+pub struct BatchQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(cap: usize) -> BatchQueue<T> {
+        assert!(cap >= 1);
+        BatchQueue {
+            inner: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Enqueue one item, blocking while the queue is full. Returns false if
+    /// the queue was closed (shutdown) instead of accepting the item.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.q.len() < self.cap {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Close the queue: producers unblock and fail, consumers drain the
+    /// remainder and then get `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Dequeue the next batch under the admission policy. Always returns a
+    /// non-empty batch; `None` only after `close()` with the queue fully
+    /// drained.
+    pub fn pop_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        let max_batch = max_batch.max(1);
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            // phase 1: block until something is queued (or shutdown)
+            loop {
+                if !st.q.is_empty() {
+                    break;
+                }
+                if st.closed {
+                    return None;
+                }
+                st = self.not_empty.wait(st).unwrap();
+            }
+            // phase 2: give the batch up to max_wait to fill
+            let deadline = Instant::now() + max_wait;
+            while st.q.len() < max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, timeout) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                if timeout.timed_out() {
+                    break;
+                }
+            }
+            let n = st.q.len().min(max_batch);
+            if n == 0 {
+                // a sibling consumer drained the queue during our fill wait —
+                // go back to waiting rather than dispatching an empty batch
+                continue;
+            }
+            let out: Vec<T> = st.q.drain(..n).collect();
+            drop(st);
+            self.not_full.notify_all();
+            return Some(out);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Synthetic serving traffic over a dataset's test split: which sample gets
+/// requested is drawn Zipf(`skew`) over popularity rank, so rank 0 is the
+/// hottest request — the head-heavy id distribution serving systems must
+/// stay fast under (CAFE's motivating scenario). `skew = 0` is uniform.
+pub struct TrafficGen<'a> {
+    ds: &'a SyntheticDataset,
+    zipf: Option<Zipf>,
+    rng: Rng,
+    base: usize,
+    len: usize,
+}
+
+impl<'a> TrafficGen<'a> {
+    pub fn new(ds: &'a SyntheticDataset, skew: f64, seed: u64) -> TrafficGen<'a> {
+        let s = &ds.spec;
+        let base = s.train_samples + s.val_samples;
+        let len = s.test_samples.max(1);
+        // Zipf::new needs q > 0 and q ≠ 1; nudge the singular point
+        let zipf = if skew <= 1e-9 {
+            None
+        } else {
+            let q = if (skew - 1.0).abs() <= 1e-9 { 1.0 + 1e-6 } else { skew };
+            Some(Zipf::new(len as u64, q))
+        };
+        TrafficGen { ds, zipf, rng: Rng::new(seed ^ 0x7AFF1C), base, len }
+    }
+
+    /// Draw the next request (arrival stamped now).
+    pub fn next_request(&mut self) -> Request {
+        let rank = match &self.zipf {
+            Some(z) => z.sample(&mut self.rng) as usize,
+            None => self.rng.below(self.len as u64) as usize,
+        };
+        let mut dense = vec![0f32; self.ds.spec.n_dense];
+        let mut cats = vec![0u32; self.ds.n_features()];
+        self.ds.sample_into(self.base + rank, &mut dense, &mut cats);
+        Request { dense, cats, arrival: Instant::now() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::DatasetSpec;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn ds() -> SyntheticDataset {
+        SyntheticDataset::new(DatasetSpec {
+            name: "t".into(),
+            vocabs: vec![11, 50],
+            n_dense: 3,
+            train_samples: 60,
+            val_samples: 10,
+            test_samples: 40,
+            latent_clusters: 4,
+            zipf_exponent: 1.05,
+            label_noise: 0.0,
+            seed: 1,
+        })
+    }
+
+    #[test]
+    fn full_batches_cut_at_max_batch() {
+        let q = BatchQueue::new(64);
+        for i in 0..10 {
+            assert!(q.push(i));
+        }
+        let b = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = q.pop_batch(4, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn partial_batch_dispatched_at_deadline() {
+        let q = BatchQueue::new(64);
+        q.push(7u32);
+        let t0 = Instant::now();
+        let b = q.pop_batch(16, Duration::from_millis(5)).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(t0.elapsed() >= Duration::from_millis(5), "returned before deadline");
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = BatchQueue::new(8);
+        q.push(1u32);
+        q.push(2u32);
+        q.close();
+        assert!(!q.push(3u32), "push after close must fail");
+        // closed queue dispatches the remainder without waiting max_wait
+        let t0 = Instant::now();
+        let b = q.pop_batch(16, Duration::from_secs(5)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+        assert!(q.pop_batch(16, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn blocked_producer_unblocks_on_pop() {
+        let q = std::sync::Arc::new(BatchQueue::new(2));
+        q.push(0u32);
+        q.push(1u32);
+        let pushed = std::sync::Arc::new(AtomicUsize::new(0));
+        let (q2, p2) = (q.clone(), pushed.clone());
+        let h = std::thread::spawn(move || {
+            assert!(q2.push(2));
+            p2.fetch_add(1, Ordering::SeqCst);
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(pushed.load(Ordering::SeqCst), 0, "producer should be blocked");
+        let b = q.pop_batch(2, Duration::from_millis(1)).unwrap();
+        assert_eq!(b.len(), 2);
+        h.join().unwrap();
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn traffic_skew_concentrates_on_head() {
+        let ds = ds();
+        let count_head = |skew: f64| {
+            let mut tg = TrafficGen::new(&ds, skew, 9);
+            let want = {
+                // request for rank 0 resolves to the first test sample
+                let mut d = vec![0f32; 3];
+                let mut c = vec![0u32; 2];
+                ds.sample_into(70, &mut d, &mut c);
+                c
+            };
+            (0..2000).filter(|_| tg.next_request().cats == want).count()
+        };
+        let uniform = count_head(0.0);
+        let skewed = count_head(1.2);
+        assert!(skewed > uniform * 3, "skewed {skewed} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn traffic_requests_have_dataset_shape() {
+        let ds = ds();
+        for skew in [0.0, 1.0, 0.99] {
+            let mut tg = TrafficGen::new(&ds, skew, 3);
+            for _ in 0..50 {
+                let r = tg.next_request();
+                assert_eq!(r.dense.len(), 3);
+                assert_eq!(r.cats.len(), 2);
+                for (f, &v) in r.cats.iter().enumerate() {
+                    assert!((v as usize) < ds.spec.vocabs[f]);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! The serving subsystem — Appendix E made first-class.
+//!
+//! The paper's system argument is that CCE's index maps stay cheap to
+//! evaluate on CPU at serving time; the ROADMAP north-star is heavy traffic
+//! from millions of users. This module is the inference half of the stack:
+//!
+//! * [`snapshot`] — bake a trained `(state, Indexer)` into a read-only
+//!   [`ServingSnapshot`]: learned/random/identity maps are materialized into
+//!   flat `u32` gather tables with subtable bases folded in, replacing the
+//!   training indexer's per-lookup enum dispatch.
+//! * [`batcher`] — a bounded request queue with max-batch/max-wait dynamic
+//!   admission, fed by a Zipf-skewed synthetic [`TrafficGen`] (skew is a CLI
+//!   knob, so hot-id scenarios are a flag away, not a code change).
+//! * [`engine`] — N index-generation workers fan the snapshot gather over
+//!   cores and feed one device-execution thread; per-request p50/p95/p99
+//!   latency and queue-wait are captured honestly.
+//!
+//! # Snapshot lifecycle
+//!
+//! 1. **Train** with a live `Indexer`; CCE clustering events rewrite its
+//!    `IndexMap`s freely (`Algorithm 3` lines 14–16).
+//! 2. **Bake** once training (or a clustering event mid-deploy) finishes:
+//!    `ServingSnapshot::bake(&indexer)` materializes every map. The snapshot
+//!    is immutable and `Sync` — workers share it by reference.
+//! 3. **Serve** via `engine::run`; a model update means baking a *new*
+//!    snapshot and swapping it in between runs. Parity with the live
+//!    indexer is bit-exact (pinned by `tests/proptests.rs`), so train-time
+//!    and serve-time index generation can never drift.
+//!
+//! `coordinator::serve` is a thin adapter wiring a `DlrmSession` + dataset
+//! into this module; `cce serve` exposes the knobs via `config::ServeConfig`.
+
+pub mod batcher;
+pub mod engine;
+pub mod snapshot;
+
+pub use batcher::{BatchQueue, Request, TrafficGen};
+pub use engine::{
+    prepare, run, CountingExecutor, EngineConfig, Executor, PreparedBatch, PreparedEmb,
+    ServeReport, SessionExecutor,
+};
+pub use snapshot::ServingSnapshot;

@@ -1,0 +1,328 @@
+//! Baked, read-only serving snapshot of a trained `(state, Indexer)` pair.
+//!
+//! The training `Indexer` answers every lookup through an `IndexMap` enum
+//! match (hash vs learned vs identity) because clustering events rewrite
+//! maps mid-run. At serving time the maps are frozen, so `bake` materializes
+//! them once into flat contiguous arrays and the hot path becomes a
+//! branch-free gather:
+//!
+//!   * row-wise: `rows[feat_off[f] + v * (t*c) ..]` holds the `t*c` GLOBAL
+//!     pool rows of id `v` — subtable bases are folded in at bake time and
+//!     one id's rows are adjacent (one cache line for t=2, c=4).
+//!   * ROBE: per-(id, column) window *starts* are materialized; the serve
+//!     path only does the `(start + e) % region` run expansion.
+//!   * DHE: the full `[vocab, n_hash]` feature table is baked when it fits
+//!     under [`DHE_BAKE_MAX_ELEMS`]; above that the per-feature hashers are
+//!     kept and evaluated live (bit-identical either way).
+//!
+//! Every `fill_*` here is bit-identical to the live `Indexer` equivalent —
+//! pinned by `tests/proptests.rs::prop_snapshot_*` — so a snapshot can be
+//! swapped under `coordinator::serve` with zero behavior change.
+
+use crate::hashing::DheHasher;
+use crate::tables::indexer::{Indexer, MethodKind};
+use crate::tables::layout::SubtableId;
+
+/// Above this many total baked f32s, DHE falls back to live hashing (the
+/// terabyte-sim preset would otherwise bake multi-GB tables; see ROADMAP
+/// "sharded snapshots").
+pub const DHE_BAKE_MAX_ELEMS: usize = 1 << 26;
+
+/// Read-only index-generation state for one frozen model.
+#[derive(Clone)]
+pub struct ServingSnapshot {
+    kind: MethodKind,
+    n_features: usize,
+    vocabs: Vec<usize>,
+    /// row-wise: global rows `[f][v][t*c]`, entry count per id
+    stride: usize,
+    rows: Vec<u32>,
+    feat_off: Vec<usize>,
+    /// ROBE: window starts `[f][v][c]` + per-feature region geometry
+    c: usize,
+    dc: u32,
+    dim: usize,
+    robe_starts: Vec<u32>,
+    robe_off: Vec<usize>,
+    robe_base: Vec<i32>,
+    robe_region: Vec<u32>,
+    /// DHE: baked `[f][v][n_hash]` features, or live hashers when too big
+    n_hash: usize,
+    dhe_table: Vec<f32>,
+    dhe_off: Vec<usize>,
+    dhe_live: Vec<DheHasher>,
+}
+
+impl ServingSnapshot {
+    /// Bake a live indexer's current maps into gather tables.
+    pub fn bake(ix: &Indexer) -> ServingSnapshot {
+        let mut snap = ServingSnapshot {
+            kind: ix.kind,
+            n_features: ix.plan.n_features(),
+            vocabs: ix.plan.vocabs.clone(),
+            stride: 0,
+            rows: Vec::new(),
+            feat_off: Vec::new(),
+            c: 0,
+            dc: 0,
+            dim: 0,
+            robe_starts: Vec::new(),
+            robe_off: Vec::new(),
+            robe_base: Vec::new(),
+            robe_region: Vec::new(),
+            n_hash: 0,
+            dhe_table: Vec::new(),
+            dhe_off: Vec::new(),
+            dhe_live: Vec::new(),
+        };
+        match ix.kind {
+            MethodKind::RowWise => snap.bake_rowwise(ix),
+            MethodKind::ElementWise => snap.bake_robe(ix),
+            MethodKind::Dhe => snap.bake_dhe(ix),
+        }
+        snap
+    }
+
+    fn bake_rowwise(&mut self, ix: &Indexer) {
+        let (t_n, c_n) = (ix.plan.t, ix.plan.c);
+        self.stride = t_n * c_n;
+        let total: usize = self.vocabs.iter().map(|&v| v * self.stride).sum();
+        self.rows = vec![0u32; total];
+        let mut off = 0usize;
+        for f in 0..self.n_features {
+            self.feat_off.push(off);
+            // interleave the feature's t*c subtable maps so one id's rows
+            // are contiguous in the gather table
+            for t in 0..t_n {
+                for j in 0..c_n {
+                    let table =
+                        ix.materialize_global(SubtableId { feature: f, term: t, column: j });
+                    let slot = t * c_n + j;
+                    for (v, &g) in table.iter().enumerate() {
+                        self.rows[off + v * self.stride + slot] = g;
+                    }
+                }
+            }
+            off += self.vocabs[f] * self.stride;
+        }
+    }
+
+    fn bake_robe(&mut self, ix: &Indexer) {
+        self.dim = ix.dim();
+        let mut off = 0usize;
+        for f in 0..self.n_features {
+            let w = ix.robe_windows(f);
+            if f == 0 {
+                self.c = w.n_columns();
+                self.dc = w.dc;
+            }
+            self.robe_off.push(off);
+            self.robe_base.push(ix.robe_region_base(f) as i32);
+            self.robe_region.push(w.region);
+            for v in 0..self.vocabs[f] as u32 {
+                for j in 0..self.c {
+                    self.robe_starts.push(w.start(j, v));
+                }
+            }
+            off += self.vocabs[f] * self.c;
+        }
+    }
+
+    fn bake_dhe(&mut self, ix: &Indexer) {
+        self.n_hash = ix.n_hash;
+        let total: usize = self.vocabs.iter().map(|&v| v * self.n_hash).sum();
+        if total > DHE_BAKE_MAX_ELEMS {
+            self.dhe_live = ix.dhe_hashers().to_vec();
+            return;
+        }
+        self.dhe_table = vec![0f32; total];
+        let mut off = 0usize;
+        for (f, h) in ix.dhe_hashers().iter().enumerate() {
+            self.dhe_off.push(off);
+            for v in 0..self.vocabs[f] {
+                h.fill(v as u32, &mut self.dhe_table[off + v * self.n_hash..][..self.n_hash]);
+            }
+            off += self.vocabs[f] * self.n_hash;
+        }
+    }
+
+    pub fn kind(&self) -> MethodKind {
+        self.kind
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Embedding-input elements per sample (`emb_elems / batch`).
+    pub fn sample_stride(&self) -> usize {
+        match self.kind {
+            MethodKind::RowWise => self.n_features * self.stride,
+            MethodKind::ElementWise => self.n_features * self.dim,
+            MethodKind::Dhe => self.n_features * self.n_hash,
+        }
+    }
+
+    /// Host memory of the baked tables (Appendix E accounting).
+    pub fn host_bytes(&self) -> usize {
+        self.rows.len() * 4
+            + self.robe_starts.len() * 4
+            + self.dhe_table.len() * 4
+            + self.dhe_live.len() * self.n_hash * 8 // live fallback: seed tables
+    }
+
+    /// Row indices for a batch, bit-identical to `Indexer::fill_rowwise`.
+    pub fn fill_rowwise(&self, cats: &[u32], batch: usize, out: &mut [i32]) {
+        let f_n = self.n_features;
+        assert_eq!(cats.len(), batch * f_n);
+        assert_eq!(out.len(), batch * f_n * self.stride);
+        let mut o = 0usize;
+        for b in 0..batch {
+            for f in 0..f_n {
+                let v = cats[b * f_n + f] as usize;
+                debug_assert!(v < self.vocabs[f], "value {v} out of vocab");
+                let block = &self.rows[self.feat_off[f] + v * self.stride..][..self.stride];
+                for &r in block {
+                    out[o] = r as i32;
+                    o += 1;
+                }
+            }
+        }
+    }
+
+    /// Element indices for ROBE, bit-identical to `Indexer::fill_elementwise`.
+    pub fn fill_elementwise(&self, cats: &[u32], batch: usize, out: &mut [i32]) {
+        let f_n = self.n_features;
+        assert_eq!(cats.len(), batch * f_n);
+        assert_eq!(out.len(), batch * f_n * self.dim);
+        let mut o = 0usize;
+        for b in 0..batch {
+            for f in 0..f_n {
+                let v = cats[b * f_n + f] as usize;
+                let starts = &self.robe_starts[self.robe_off[f] + v * self.c..][..self.c];
+                let (base, region) = (self.robe_base[f], self.robe_region[f]);
+                for &s in starts {
+                    for e in 0..self.dc {
+                        out[o] = base + ((s + e) % region) as i32;
+                        o += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// DHE hash features, bit-identical to `Indexer::fill_dhe`.
+    pub fn fill_dhe(&self, cats: &[u32], batch: usize, out: &mut [f32]) {
+        let f_n = self.n_features;
+        assert_eq!(cats.len(), batch * f_n);
+        assert_eq!(out.len(), batch * f_n * self.n_hash);
+        for b in 0..batch {
+            for f in 0..f_n {
+                let v = cats[b * f_n + f] as usize;
+                let dst = &mut out[(b * f_n + f) * self.n_hash..][..self.n_hash];
+                if self.dhe_table.is_empty() {
+                    self.dhe_live[f].fill(v as u32, dst);
+                } else {
+                    let src = self.dhe_off[f] + v * self.n_hash;
+                    dst.copy_from_slice(&self.dhe_table[src..src + self.n_hash]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::layout::TablePlan;
+    use crate::util::Rng;
+
+    fn cats_for(vocabs: &[usize], batch: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * vocabs.len())
+            .map(|i| rng.below(vocabs[i % vocabs.len()] as u64) as u32)
+            .collect()
+    }
+
+    #[test]
+    fn rowwise_bake_matches_live_with_mixed_maps() {
+        let plan = TablePlan::new(&[5, 40, 300], 8, 2, 2, 4);
+        let mut rng = Rng::new(0);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan);
+        // simulate a clustering event: learn one subtable, re-randomize another
+        ix.set_learned(
+            SubtableId { feature: 1, term: 0, column: 1 },
+            (0..40).map(|v| (v * 5 % 8) as u32).collect(),
+        );
+        ix.set_random(SubtableId { feature: 2, term: 1, column: 0 }, &mut rng);
+        let snap = ServingSnapshot::bake(&ix);
+        let batch = 7;
+        let cats = cats_for(&ix.plan.vocabs, batch, 1);
+        let stride = ix.plan.t * ix.plan.c;
+        let mut live = vec![0i32; batch * 3 * stride];
+        let mut baked = vec![0i32; batch * 3 * stride];
+        ix.fill_rowwise(&cats, batch, &mut live);
+        snap.fill_rowwise(&cats, batch, &mut baked);
+        assert_eq!(live, baked);
+        assert_eq!(snap.sample_stride(), 3 * stride);
+        assert!(snap.host_bytes() > 0);
+    }
+
+    #[test]
+    fn rebake_after_clustering_tracks_new_maps() {
+        let plan = TablePlan::new(&[50], 8, 2, 2, 4);
+        let mut rng = Rng::new(2);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan);
+        let before = ServingSnapshot::bake(&ix);
+        ix.set_learned(
+            SubtableId { feature: 0, term: 0, column: 0 },
+            (0..50).map(|v| (v % 8) as u32).collect(),
+        );
+        let after = ServingSnapshot::bake(&ix);
+        // cover the whole vocab so SOME id must map differently post-learning
+        let cats: Vec<u32> = (0..50).collect();
+        let mut a = vec![0i32; 50 * 2 * 2];
+        let mut b = vec![0i32; 50 * 2 * 2];
+        before.fill_rowwise(&cats, 50, &mut a);
+        after.fill_rowwise(&cats, 50, &mut b);
+        assert_ne!(a, b, "stale snapshot should differ from rebaked one");
+        let mut live = vec![0i32; 50 * 2 * 2];
+        ix.fill_rowwise(&cats, 50, &mut live);
+        assert_eq!(live, b);
+    }
+
+    #[test]
+    fn robe_bake_matches_live() {
+        let mut rng = Rng::new(4);
+        let ix = Indexer::new_robe(&mut rng, &[30, 100], 50, 8, 2);
+        let snap = ServingSnapshot::bake(&ix);
+        let cats = cats_for(&[30, 100], 9, 5);
+        let mut live = vec![0i32; 9 * 2 * 8];
+        let mut baked = vec![0i32; 9 * 2 * 8];
+        ix.fill_elementwise(&cats, 9, &mut live);
+        snap.fill_elementwise(&cats, 9, &mut baked);
+        assert_eq!(live, baked);
+    }
+
+    #[test]
+    fn dhe_bake_matches_live_in_both_modes() {
+        let mut rng = Rng::new(6);
+        let ix = Indexer::new_dhe(&mut rng, &[10, 200], 8);
+        let snap = ServingSnapshot::bake(&ix);
+        assert!(!snap.dhe_table.is_empty(), "small vocab should bake");
+        let cats = cats_for(&[10, 200], 5, 7);
+        let mut live = vec![0f32; 5 * 2 * 8];
+        let mut baked = vec![0f32; 5 * 2 * 8];
+        ix.fill_dhe(&cats, 5, &mut live);
+        snap.fill_dhe(&cats, 5, &mut baked);
+        assert_eq!(live, baked);
+        // force the live-fallback path and check parity again
+        let mut fallback = snap.clone();
+        fallback.dhe_table = Vec::new();
+        fallback.dhe_off = Vec::new();
+        fallback.dhe_live = ix.dhe_hashers().to_vec();
+        let mut fb = vec![0f32; 5 * 2 * 8];
+        fallback.fill_dhe(&cats, 5, &mut fb);
+        assert_eq!(live, fb);
+    }
+}

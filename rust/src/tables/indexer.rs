@@ -252,6 +252,36 @@ impl Indexer {
         self.maps[mi].materialize(self.plan.vocabs[id.feature])
     }
 
+    // -- serving-snapshot materialization hooks ------------------------------
+
+    /// Materialized *global* row table for one subtable: entry `v` is exactly
+    /// what `global_row(id, v)` returns. `serving::snapshot` bakes these into
+    /// flat gather arrays so the serve hot path never touches `IndexMap`.
+    pub fn materialize_global(&self, id: SubtableId) -> Vec<u32> {
+        let base = self.plan.subtable_base(id) as u32;
+        (0..self.plan.vocabs[id.feature] as u32).map(|v| base + self.local_row(id, v)).collect()
+    }
+
+    /// ROBE window generator for one feature (elementwise indexers only).
+    pub fn robe_windows(&self, feature: usize) -> &RobeWindows {
+        &self.robe[feature]
+    }
+
+    /// Base element of one feature's ROBE region in the flat pool.
+    pub fn robe_region_base(&self, feature: usize) -> usize {
+        self.robe_base[feature]
+    }
+
+    /// Embedding dimension of an elementwise (ROBE) indexer.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Per-feature DHE hash-feature generators (DHE indexers only).
+    pub fn dhe_hashers(&self) -> &[DheHasher] {
+        &self.dhe
+    }
+
     /// Host memory for all index maps (Appendix E accounting).
     pub fn host_bytes(&self) -> usize {
         self.maps
@@ -360,6 +390,23 @@ mod tests {
         ix.fill_dhe(&cats, 2, &mut out);
         assert!(out.iter().all(|&x| (-1.0..=1.0).contains(&x)));
         assert!(out.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn materialize_global_matches_global_row() {
+        let mut rng = Rng::new(8);
+        let mut ix = Indexer::new_rowwise(&mut rng, plan());
+        ix.set_learned(
+            SubtableId { feature: 1, term: 1, column: 0 },
+            (0..40).map(|v| (v * 3 % 8) as u32).collect(),
+        );
+        for id in ix.plan.subtables() {
+            let table = ix.materialize_global(id);
+            assert_eq!(table.len(), ix.plan.vocabs[id.feature]);
+            for (v, &g) in table.iter().enumerate() {
+                assert_eq!(g, ix.global_row(id, v as u32), "{id:?} v={v}");
+            }
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@ pub struct TimingStats {
     pub std_ns: f64,
     pub min_ns: f64,
     pub p50_ns: f64,
+    pub p95_ns: f64,
     pub p99_ns: f64,
     pub max_ns: f64,
 }
@@ -28,6 +29,7 @@ impl TimingStats {
             std_ns: var.sqrt(),
             min_ns: ns[0],
             p50_ns: percentile(&ns, 0.50),
+            p95_ns: percentile(&ns, 0.95),
             p99_ns: percentile(&ns, 0.99),
             max_ns: ns[n - 1],
         }
@@ -37,14 +39,15 @@ impl TimingStats {
         Duration::from_nanos(self.mean_ns as u64)
     }
 
-    /// Human-readable "mean ± std [min, p99]" line.
+    /// Human-readable "mean ± std [min, p50, p95, p99]" line.
     pub fn display(&self) -> String {
         format!(
-            "{} ± {} (min {}, p50 {}, p99 {}, n={})",
+            "{} ± {} (min {}, p50 {}, p95 {}, p99 {}, n={})",
             fmt_ns(self.mean_ns),
             fmt_ns(self.std_ns),
             fmt_ns(self.min_ns),
             fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
             fmt_ns(self.p99_ns),
             self.n
         )
@@ -118,6 +121,7 @@ mod tests {
         let s = TimingStats::from_samples(vec![100.0; 10]);
         assert_eq!(s.mean_ns, 100.0);
         assert_eq!(s.std_ns, 0.0);
+        assert_eq!(s.p95_ns, 100.0);
         assert_eq!(s.p99_ns, 100.0);
     }
 

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 verify (ROADMAP.md) plus formatting and lint.
+#
+#   scripts/verify.sh          # full gate
+#   scripts/verify.sh --quick  # skip the release build (tests only)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+quick=0
+[[ "${1:-}" == "--quick" ]] && quick=1
+
+if [[ "$quick" -eq 0 ]]; then
+  echo "== cargo build --release =="
+  cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy -- -D warnings =="
+cargo clippy -- -D warnings
+
+echo "verify: OK"

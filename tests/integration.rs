@@ -224,10 +224,19 @@ fn serve_loop_reports_sane_numbers() {
     session.set_state(&init_state(&m.layout, m.state_size, &mut rng)).unwrap();
     let ds = SyntheticDataset::new(store.dataset("smoke", 0).unwrap());
     let ix = cce::coordinator::trainer::build_indexer(&m, 0).unwrap();
-    let rep = cce::coordinator::serve::serve(&session, &ix, &ds, 500, 128).unwrap();
+    let cfg = cce::config::ServeConfig {
+        requests: 500,
+        max_batch: 128,
+        workers: 4,
+        ..Default::default()
+    };
+    let rep = cce::coordinator::serve::serve(&session, &ix, &ds, &cfg).unwrap();
     assert_eq!(rep.requests, 500);
     assert!(rep.throughput_rps > 0.0);
-    assert!(rep.latency.p99_ns >= rep.latency.p50_ns);
+    assert!(rep.latency.p99_ns >= rep.latency.p95_ns);
+    assert!(rep.latency.p95_ns >= rep.latency.p50_ns);
+    assert!(rep.queue_wait.p50_ns <= rep.latency.p50_ns);
+    assert!(rep.snapshot_bytes > 0);
 }
 
 #[test]

@@ -5,6 +5,7 @@ use cce::data::batch::{BatchIter, Split};
 use cce::data::synthetic::{DatasetSpec, SyntheticDataset};
 use cce::kmeans;
 use cce::metrics::extrapolate::{params_to_reach, Crossing, SweepPoint};
+use cce::serving::ServingSnapshot;
 use cce::tables::indexer::Indexer;
 use cce::tables::layout::{SubtableId, TablePlan};
 use cce::testutil::prop;
@@ -54,6 +55,93 @@ fn prop_rowwise_indices_always_in_their_subtable() {
                 }
             }
         }
+    });
+}
+
+#[test]
+fn prop_snapshot_rowwise_bit_identical_to_live_indexer() {
+    // the serving contract: a baked snapshot's gather must reproduce
+    // `Indexer::fill_rowwise` bit-for-bit across random plans, map mixes
+    // (identity / random hash / learned), and mid-run clustering events
+    prop::check(60, |g| {
+        let n_features = g.usize(1..5);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(1..500)).collect();
+        let cap = g.usize(1..64);
+        let t = g.usize(1..3);
+        let c = *g.pick(&[1usize, 2, 4]);
+        let plan = TablePlan::new(&vocabs, cap, t, c, 4);
+        let mut rng = Rng::new(g.u64());
+        let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
+        // a random number of clustering events, each rewriting a random
+        // subtable: term-0 columns get learned maps, term-1 fresh hashes
+        for _ in 0..g.usize(0..6) {
+            let f = g.usize(0..n_features);
+            let tt = g.usize(0..t);
+            let j = g.usize(0..c);
+            let id = SubtableId { feature: f, term: tt, column: j };
+            if g.bool() {
+                ix.set_learned(id, g.vec_u32(vocabs[f], plan.k[f] as u32));
+            } else {
+                ix.set_random(id, &mut rng);
+            }
+        }
+        let snap = ServingSnapshot::bake(&ix);
+        let batch = g.usize(1..16);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut live = vec![0i32; batch * n_features * t * c];
+        let mut baked = vec![0i32; batch * n_features * t * c];
+        ix.fill_rowwise(&cats, batch, &mut live);
+        snap.fill_rowwise(&cats, batch, &mut baked);
+        prop::prop_assert!(g, live == baked, "rowwise snapshot diverged from live indexer");
+    });
+}
+
+#[test]
+fn prop_snapshot_robe_bit_identical_to_live_indexer() {
+    prop::check(40, |g| {
+        let n_features = g.usize(1..4);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(2..300)).collect();
+        let cap = g.usize(2..100);
+        let c = *g.pick(&[1usize, 2, 4]);
+        let dc = g.usize(1..5);
+        let dim = c * dc;
+        let mut rng = Rng::new(g.u64());
+        let ix = Indexer::new_robe(&mut rng, &vocabs, cap, dim, c);
+        let snap = ServingSnapshot::bake(&ix);
+        let batch = g.usize(1..12);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut live = vec![0i32; batch * n_features * dim];
+        let mut baked = vec![0i32; batch * n_features * dim];
+        ix.fill_elementwise(&cats, batch, &mut live);
+        snap.fill_elementwise(&cats, batch, &mut baked);
+        prop::prop_assert!(g, live == baked, "robe snapshot diverged from live indexer");
+    });
+}
+
+#[test]
+fn prop_snapshot_dhe_bit_identical_to_live_indexer() {
+    prop::check(40, |g| {
+        let n_features = g.usize(1..4);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(1..400)).collect();
+        let n_hash = g.usize(1..32);
+        let mut rng = Rng::new(g.u64());
+        let ix = Indexer::new_dhe(&mut rng, &vocabs, n_hash);
+        let snap = ServingSnapshot::bake(&ix);
+        let batch = g.usize(1..12);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut live = vec![0f32; batch * n_features * n_hash];
+        let mut baked = vec![0f32; batch * n_features * n_hash];
+        ix.fill_dhe(&cats, batch, &mut live);
+        snap.fill_dhe(&cats, batch, &mut baked);
+        // f32 equality is intentional: the baked table stores the hasher's
+        // exact output bits
+        prop::prop_assert!(g, live == baked, "dhe snapshot diverged from live indexer");
     });
 }
 
