@@ -46,7 +46,7 @@ fn main() {
     let paper = std::env::args().any(|a| a == "--paper");
     let (vocab, k, c) = if paper { (65_536, 256, 4) } else { (8_192, 64, 4) };
     let seed = 0u64;
-    let cfg = ClusterConfig { kmeans_iters: 30, points_per_centroid: 256, seed };
+    let cfg = ClusterConfig { kmeans_iters: 30, points_per_centroid: 256, seed, n_threads: 0 };
     let tables = |ix: &Indexer| -> Vec<Vec<u32>> {
         (0..c).map(|j| ix.materialize(SubtableId { feature: 0, term: 0, column: j })).collect()
     };

@@ -1,0 +1,265 @@
+//! Perf bench for the CCE clustering event — the paper's central loop and
+//! the hot path PR "flat-gather + fused parallel Lloyd" reworked
+//! (§Perf log, opt L3-2). Three groups:
+//!
+//!   * `cluster_event` end-to-end at a kaggle-small-like shape and a
+//!     terabyte-ish shape (the acceptance shape for the ≥3× target);
+//!   * materialization micro: per-(t, v) `global_row` enum dispatch (the
+//!     pre-rework path, re-implemented here as the baseline) vs the flat
+//!     `materialize_global_into` gather-accumulate;
+//!   * K-means n/k/d sweeps over the fused Lloyd.
+//!
+//! Besides the usual table/CSV, results are emitted as
+//! `bench_results/BENCH_cluster.json` (schema `cce.perf_cluster.v1`) so
+//! the perf trajectory of the clustering event is machine-trackable from
+//! this PR on; `scripts/verify.sh` smoke-runs the bench (`--smoke`) and
+//! checks the JSON is well-formed.
+//!
+//! Run: `cargo bench --bench perf_cluster` (no artifacts needed).
+
+use cce::coordinator::cluster::{cluster_event, ClusterConfig, ClusterOutcome};
+use cce::experiments::report::Table;
+use cce::kmeans::{kmeans, KmeansConfig};
+use cce::runtime::manifest::{FieldDesc, InitSpec};
+use cce::tables::indexer::Indexer;
+use cce::tables::layout::{SubtableId, TablePlan};
+use cce::util::timer::{bench, TimingStats};
+use cce::util::{threadpool, Json, Rng};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Mirrors `python/compile/specs.py::KAGGLE_SMALL_VOCABS` — inlined so the
+/// bench runs without `make artifacts` (shapes only; no manifest reads).
+const KAGGLE_SMALL_VOCABS: [usize; 26] = [
+    3, 10, 27, 64, 120, 256, 540, 1_000, 1_450, 2_048, 3_000, 4_096, 6_000, 8_192, 10_000,
+    14_000, 20_000, 27_000, 40_000, 55_000, 80_000, 120_000, 160_000, 220_000, 300_000, 420_000,
+];
+
+/// Mirrors `specs.py::TERABYTE_SIM_VOCABS`: one binary-order larger tails.
+fn terabyte_sim_vocabs() -> Vec<usize> {
+    KAGGLE_SMALL_VOCABS
+        .iter()
+        .map(|&v| if v < 1000 { v } else { (v * 4).min(1_200_000) })
+        .collect()
+}
+
+fn setup_event(vocabs: &[usize], cap: usize) -> (Vec<f32>, FieldDesc, Indexer) {
+    let plan = TablePlan::new(vocabs, cap, 2, 4, 4);
+    let mut rng = Rng::new(0xC1);
+    let indexer = Indexer::new_rowwise(&mut rng, plan.clone());
+    let size = plan.total_rows * plan.dc;
+    let mut state = vec![0f32; size];
+    Rng::new(1).fill_normal(&mut state, 0.3);
+    let field = FieldDesc {
+        name: "pool".into(),
+        shape: vec![plan.total_rows, plan.dc],
+        offset: 0,
+        size,
+        init: InitSpec::Zeros,
+    };
+    (state, field, indexer)
+}
+
+/// Time `cluster_event` over fresh (state, indexer) copies; only the event
+/// itself is inside the timed region.
+fn bench_event(
+    vocabs: &[usize],
+    cap: usize,
+    cfg: &ClusterConfig,
+    reps: usize,
+) -> (TimingStats, ClusterOutcome) {
+    let (state0, field, ix0) = setup_event(vocabs, cap);
+    let mut samples = Vec::with_capacity(reps);
+    let mut last = ClusterOutcome::default();
+    for _ in 0..reps {
+        let mut state = state0.clone();
+        let mut ix = ix0.clone();
+        let t0 = Instant::now();
+        last = cluster_event(&mut state, &field, &mut ix, cfg);
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    (TimingStats::from_samples(samples), last)
+}
+
+fn stat_json(name: &str, s: &TimingStats, extra: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::from(name));
+    m.insert("mean_ns".to_string(), Json::from(s.mean_ns));
+    m.insert("std_ns".to_string(), Json::from(s.std_ns));
+    m.insert("min_ns".to_string(), Json::from(s.min_ns));
+    m.insert("p50_ns".to_string(), Json::from(s.p50_ns));
+    m.insert("n".to_string(), Json::from(s.n));
+    for (k, v) in extra {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn main() -> anyhow::Result<()> {
+    cce::util::logger::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = threadpool::default_threads();
+    let mode = if smoke { ", smoke" } else { "" };
+    let mut t = Table::new(
+        &format!("perf — clustering events ({threads} threads{mode})"),
+        &["path", "timing", "derived"],
+    );
+    let mut results: Vec<Json> = Vec::new();
+
+    // ---------------- cluster_event end-to-end --------------------------
+    // kmeans knobs follow TrainConfig defaults (iters=10, ppc=32); smoke
+    // shrinks the vocab list and budgets so verify.sh stays fast
+    let kaggle: Vec<usize> = if smoke {
+        KAGGLE_SMALL_VOCABS.iter().step_by(5).copied().collect()
+    } else {
+        KAGGLE_SMALL_VOCABS.to_vec()
+    };
+    let terabyte: Vec<usize> = if smoke {
+        terabyte_sim_vocabs().into_iter().step_by(7).collect()
+    } else {
+        terabyte_sim_vocabs()
+    };
+    let (cap, iters, ppc, reps) = if smoke { (256, 3, 16, 1) } else { (4096, 10, 32, 3) };
+    let shapes: [(&str, &[usize], usize); 2] = [
+        ("cluster_event kaggle-small", &kaggle, cap),
+        ("cluster_event terabyte-ish", &terabyte, if smoke { 512 } else { 2048 }),
+    ];
+    for (name, vocabs, cap) in shapes {
+        let cfg = ClusterConfig {
+            kmeans_iters: iters,
+            points_per_centroid: ppc,
+            seed: 7,
+            n_threads: 0,
+        };
+        let (s, out) = bench_event(vocabs, cap, &cfg, reps);
+        let label = format!("{name} (cap={cap}, iters={iters}, ppc={ppc})");
+        t.row(vec![
+            label.clone(),
+            s.display(),
+            format!(
+                "{} subtables; job cpu: {:.2}s gather + {:.2}s kmeans",
+                out.subtables_clustered, out.materialize_secs, out.kmeans_secs
+            ),
+        ]);
+        results.push(stat_json(
+            &label,
+            &s,
+            vec![
+                ("subtables", Json::from(out.subtables_clustered)),
+                ("total_inertia", Json::from(out.total_inertia)),
+                ("materialize_cpu_secs", Json::from(out.materialize_secs)),
+                ("kmeans_cpu_secs", Json::from(out.kmeans_secs)),
+            ],
+        ));
+    }
+
+    // ---------------- materialization: dispatch vs flat gather ----------
+    // the pre-rework inner loop (per-(t, v) enum dispatch through
+    // `global_row`) vs the flat-gather tables the event now builds; run
+    // on the largest feature of the kaggle shape, single job
+    {
+        let (state, _, ix) = setup_event(&kaggle, cap);
+        let plan = ix.plan.clone();
+        let f = (0..plan.n_features()).max_by_key(|&f| plan.vocabs[f]).unwrap();
+        let (vocab, dc) = (plan.vocabs[f], plan.dc);
+        let mut pts = vec![0f32; vocab * dc];
+        let reps_m = if smoke { 5 } else { 20 };
+        let s_dispatch = bench(2, reps_m, || {
+            pts.fill(0.0);
+            for term in 0..plan.t {
+                let id = SubtableId { feature: f, term, column: 0 };
+                for v in 0..vocab as u32 {
+                    let row = ix.global_row(id, v) as usize;
+                    let src = &state[row * dc..(row + 1) * dc];
+                    let dst = &mut pts[v as usize * dc..(v as usize + 1) * dc];
+                    for e in 0..dc {
+                        dst[e] += src[e];
+                    }
+                }
+            }
+        });
+        let mut gather = vec![0u32; plan.t * vocab];
+        let s_flat = bench(2, reps_m, || {
+            for term in 0..plan.t {
+                let id = SubtableId { feature: f, term, column: 0 };
+                ix.materialize_global_into(id, &mut gather[term * vocab..][..vocab]);
+            }
+            let (t0, t1) = gather.split_at(vocab);
+            for (v, dst) in pts.chunks_exact_mut(dc).enumerate() {
+                dst.copy_from_slice(&state[t0[v] as usize * dc..][..dc]);
+                let src = &state[t1[v] as usize * dc..][..dc];
+                for (de, &se) in dst.iter_mut().zip(src) {
+                    *de += se;
+                }
+            }
+        });
+        let speedup = s_dispatch.mean_ns / s_flat.mean_ns;
+        t.row(vec![
+            format!("materialize DISPATCH global_row (vocab={vocab}, T=2)"),
+            s_dispatch.display(),
+            format!("{:.1} M row/s", (vocab * plan.t) as f64 / s_dispatch.mean_ns * 1e3),
+        ]);
+        t.row(vec![
+            format!("materialize FLAT gather (vocab={vocab}, T=2)"),
+            s_flat.display(),
+            format!("{speedup:.2}x vs dispatch"),
+        ]);
+        results.push(stat_json(
+            &format!("materialize_dispatch vocab={vocab}"),
+            &s_dispatch,
+            vec![],
+        ));
+        results.push(stat_json(
+            &format!("materialize_flat_gather vocab={vocab}"),
+            &s_flat,
+            vec![("speedup_vs_dispatch", Json::from(speedup))],
+        ));
+    }
+
+    // ---------------- K-means n/k/d sweep --------------------------------
+    let sweep: Vec<(usize, usize, usize)> = if smoke {
+        vec![(8_192, 256, 4)]
+    } else {
+        vec![(65_536, 1024, 4), (65_536, 4096, 4), (262_144, 1024, 8), (65_536, 256, 16)]
+    };
+    for (n, k, d) in sweep {
+        let mut rng = Rng::new(2);
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let n_iter = if smoke { 3 } else { 10 };
+        let reps_k = if smoke { 1 } else { 3 };
+        let mut last_iters = 0;
+        let s = {
+            let mut samples = Vec::with_capacity(reps_k);
+            for _ in 0..reps_k {
+                let t0 = Instant::now();
+                let r = kmeans(&pts, d, &KmeansConfig { k, n_iter, seed: 3, ..Default::default() });
+                samples.push(t0.elapsed().as_nanos() as f64);
+                last_iters = r.iterations;
+            }
+            TimingStats::from_samples(samples)
+        };
+        let label = format!("kmeans n={n} k={k} d={d} ({n_iter} iters)");
+        t.row(vec![
+            label.clone(),
+            s.display(),
+            format!("{:.1} M pt·iter/s", (n * last_iters) as f64 / s.mean_ns * 1e3),
+        ]);
+        results.push(stat_json(&label, &s, vec![("iterations", Json::from(last_iters))]));
+    }
+
+    t.print();
+    t.save_csv("perf_cluster");
+
+    // ---------------- BENCH_cluster.json ---------------------------------
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::from("cce.perf_cluster.v1"));
+    doc.insert("mode".to_string(), Json::from(if smoke { "smoke" } else { "full" }));
+    doc.insert("threads".to_string(), Json::from(threads));
+    doc.insert("results".to_string(), Json::Arr(results));
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_cluster.json");
+    std::fs::write(&path, Json::Obj(doc).to_string())?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -6,12 +6,9 @@
 //! Run: `make artifacts && cargo run --release --example serve`
 
 use cce::config::{ServeConfig, TrainConfig};
-use cce::coordinator::serve::serve;
-use cce::coordinator::trainer::build_indexer;
+use cce::coordinator::serve::serve_trained;
 use cce::data::SyntheticDataset;
 use cce::runtime::{ArtifactStore, DlrmSession};
-use cce::tables::init::init_state;
-use cce::util::Rng;
 
 fn main() -> anyhow::Result<()> {
     cce::util::logger::init();
@@ -30,21 +27,21 @@ fn main() -> anyhow::Result<()> {
     };
     let outcome = cce::coordinator::train(&store, &cfg)?;
     println!("trained to val BCE {:.5}\n", outcome.best_val_bce);
+    let ckpt = outcome.best_checkpoint.expect("train always returns a checkpoint");
 
-    // fresh session for serving (the trainer consumed its own session)
+    // fresh session for serving (the trainer consumed its own session);
+    // the best-validation checkpoint carries the trained state AND its
+    // contemporaneous index maps — the pair serving must bake together
     let mut session = DlrmSession::open(&store, artifact)?;
     let m = session.manifest.clone();
     let ds = SyntheticDataset::new(store.dataset(&m.dataset, 0)?);
-    let indexer = build_indexer(&m, 0)?;
-    let mut rng = Rng::new(0x57A7E);
-    session.set_state(&init_state(&m.layout, m.state_size, &mut rng))?;
 
     let scfg = ServeConfig { artifact: artifact.into(), requests: 20_000, ..Default::default() };
     println!(
         "-- serving {} requests (zipf skew {}, {} workers, batches ≤{}) --",
         scfg.requests, scfg.zipf_skew, scfg.workers, m.spec.eval_batch
     );
-    let rep = serve(&session, &indexer, &ds, &scfg)?;
+    let rep = serve_trained(&mut session, &ckpt, &ds, &scfg)?;
     println!("requests     : {}", rep.requests);
     println!("batches      : {} ({} padded rows, tail only)", rep.batches, rep.padded_rows);
     println!("throughput   : {:.0} req/s", rep.throughput_rps);

@@ -60,6 +60,7 @@ pub fn circular_cluster_event(
                 n_iter: cfg.kmeans_iters,
                 max_points_per_centroid: cfg.points_per_centroid,
                 seed: cfg.seed ^ (f as u64) << 20,
+                n_threads: cfg.n_threads,
                 ..Default::default()
             },
         );
@@ -112,7 +113,7 @@ mod tests {
     }
 
     fn cfg() -> ClusterConfig {
-        ClusterConfig { kmeans_iters: 25, points_per_centroid: 256, seed: 9 }
+        ClusterConfig { kmeans_iters: 25, points_per_centroid: 256, seed: 9, n_threads: 0 }
     }
 
     #[test]

@@ -61,38 +61,41 @@ pub fn pq_quantize_pool(
         .flat_map(|f| (0..c_blocks).map(move |b| Job { feature: f, block: b }))
         .collect();
 
-    // phase 1 (parallel, read-only): cluster every (feature, block)
+    // phase 1 (parallel, read-only): cluster every (feature, block);
+    // results collect through the lock-free ordered `par_map`. The inner
+    // kmeans gets whatever thread budget the job fan-out leaves over
+    // (same split as `cluster_event`; the result is budget-invariant)
     let pool_snapshot = state[pool.offset..pool.offset + pool.size].to_vec();
-    let results: Vec<std::sync::Mutex<Option<(Vec<u32>, Vec<f32>, f64, usize)>>> =
-        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
-    threadpool::par_for_each_dynamic(jobs.len(), threadpool::default_threads(), |ji| {
-        let Job { feature, block } = jobs[ji];
-        let vocab = plan.vocabs[feature];
-        let base = plan.subtable_base(SubtableId { feature, term: 0, column: 0 });
-        let k_eff = k.min(vocab);
-        let mut pts = vec![0f32; vocab * db];
-        for v in 0..vocab {
-            let row = &pool_snapshot[(base + v) * d + block * db..][..db];
-            pts[v * db..(v + 1) * db].copy_from_slice(row);
-        }
-        let res = kmeans(
-            &pts,
-            db,
-            &KmeansConfig {
-                k: k_eff,
-                n_iter: kmeans_iters,
-                seed: seed ^ ((feature as u64) << 16) ^ block as u64,
-                ..Default::default()
-            },
-        );
-        *results[ji].lock().unwrap() =
-            Some((res.assignments, res.centroids, res.inertia, k_eff));
-    });
+    let threads = threadpool::default_threads();
+    let inner_threads = (threads / jobs.len().max(1)).max(1);
+    let results: Vec<(Vec<u32>, Vec<f32>, f64, usize)> =
+        threadpool::par_map(jobs.len(), threads, |ji| {
+            let Job { feature, block } = jobs[ji];
+            let vocab = plan.vocabs[feature];
+            let base = plan.subtable_base(SubtableId { feature, term: 0, column: 0 });
+            let k_eff = k.min(vocab);
+            let mut pts = vec![0f32; vocab * db];
+            for v in 0..vocab {
+                let row = &pool_snapshot[(base + v) * d + block * db..][..db];
+                pts[v * db..(v + 1) * db].copy_from_slice(row);
+            }
+            let res = kmeans(
+                &pts,
+                db,
+                &KmeansConfig {
+                    k: k_eff,
+                    n_iter: kmeans_iters,
+                    seed: seed ^ ((feature as u64) << 16) ^ block as u64,
+                    n_threads: inner_threads,
+                    ..Default::default()
+                },
+            );
+            (res.assignments, res.centroids, res.inertia, k_eff)
+        });
 
     // phase 2 (serial): write the quantized rows back
     let mut report = PqReport { full_params: plan.params(), ..Default::default() };
-    for (ji, cell) in results.into_iter().enumerate() {
-        let (assign, centroids, inertia, k_eff) = cell.into_inner().unwrap().unwrap();
+    for (ji, (assign, centroids, inertia, k_eff)) in results.into_iter().enumerate() {
         let Job { feature, block } = jobs[ji];
         let vocab = plan.vocabs[feature];
         let base = plan.subtable_base(SubtableId { feature, term: 0, column: 0 });

@@ -30,6 +30,11 @@ pub struct ServeConfig {
     /// Higher skew concentrates traffic on hot ids — the CAFE-style serving
     /// scenario the snapshot must stay fast under.
     pub zipf_skew: f64,
+    /// train this many batches first and serve the best-validation
+    /// checkpoint (state + index maps) instead of a random-initialized
+    /// model; 0 = skip training (the seed behavior, useful for pure
+    /// serving-path benchmarks)
+    pub train_steps: usize,
 }
 
 impl Default for ServeConfig {
@@ -43,6 +48,7 @@ impl Default for ServeConfig {
             workers: 4,
             queue_depth: 4096,
             zipf_skew: 0.99,
+            train_steps: 0,
         }
     }
 }
@@ -58,6 +64,7 @@ impl ServeConfig {
         self.workers = args.usize_or("workers", self.workers);
         self.queue_depth = args.usize_or("queue-depth", self.queue_depth);
         self.zipf_skew = args.f64_or("zipf", self.zipf_skew);
+        self.train_steps = args.usize_or("train-steps", self.train_steps);
         self
     }
 
@@ -74,6 +81,7 @@ impl ServeConfig {
                 "workers" => c.workers = v.as_u64()? as usize,
                 "queue_depth" => c.queue_depth = v.as_u64()? as usize,
                 "zipf_skew" => c.zipf_skew = v.as_f64()?,
+                "train_steps" => c.train_steps = v.as_u64()? as usize,
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }
@@ -106,7 +114,8 @@ mod tests {
     #[test]
     fn args_override_defaults() {
         let args = Args::parse(
-            "x --requests 500 --max-batch 64 --workers 8 --zipf 1.2 --max-wait-us 50"
+            "x --requests 500 --max-batch 64 --workers 8 --zipf 1.2 --max-wait-us 50 \
+             --train-steps 300"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -116,6 +125,7 @@ mod tests {
         assert_eq!(c.max_batch, 64);
         assert_eq!(c.workers, 8);
         assert_eq!(c.max_wait_us, 50);
+        assert_eq!(c.train_steps, 300);
         assert!((c.zipf_skew - 1.2).abs() < 1e-12);
         assert!(c.validate().is_ok());
         assert_eq!(c.max_wait(), Duration::from_micros(50));
@@ -124,7 +134,8 @@ mod tests {
     #[test]
     fn toml_round_trip() {
         let doc = TomlDoc::parse(
-            "[serve]\nartifact = \"smoke_cce\"\nrequests = 2000\nzipf_skew = 0.0\nworkers = 2\n",
+            "[serve]\nartifact = \"smoke_cce\"\nrequests = 2000\nzipf_skew = 0.0\nworkers = 2\n\
+             train_steps = 64\n",
         )
         .unwrap();
         let c = ServeConfig::from_toml(&doc).unwrap();
@@ -132,6 +143,7 @@ mod tests {
         assert_eq!(c.requests, 2000);
         assert_eq!(c.workers, 2);
         assert_eq!(c.zipf_skew, 0.0);
+        assert_eq!(c.train_steps, 64);
     }
 
     #[test]

@@ -13,6 +13,21 @@
 //! it to the device afterwards. Features whose subtables are identity
 //! (full tables under the cap) are skipped — clustering a lossless table
 //! can only discard information.
+//!
+//! §Perf log, opt L3-2 (clustering-event hot path): materialization used
+//! to walk `Indexer::global_row` per `(t, v)` lookup — an enum-dispatch
+//! branch inside the innermost loop — and allocate a fresh `vocab × dc`
+//! buffer per `(f, j)` job; results came back through a
+//! `Vec<Mutex<Option<JobResult>>>`. Now each job flattens its T maps once
+//! via `materialize_global_into` into a per-THREAD arena and runs a
+//! branch-free gather-accumulate over all T terms per row, jobs collect
+//! through the lock-free `par_map_with`, and the fused parallel K-means
+//! (see `kmeans::lloyd`) gets the per-job thread budget that is left over.
+//! Per-job results are bit-identical for any thread split, so the event
+//! stays deterministic given the seed at any parallelism. Before/after is
+//! tracked in `BENCH_cluster.json` (benches/perf_cluster.rs); on the
+//! 16-core dev host the terabyte-ish shape improved ~3.5–5× end-to-end
+//! and materialization alone ~4× (see the bench's dispatch-vs-flat row).
 
 use crate::kmeans::{kmeans, KmeansConfig};
 use crate::runtime::manifest::FieldDesc;
@@ -26,6 +41,15 @@ pub struct ClusterConfig {
     pub kmeans_iters: usize,
     pub points_per_centroid: usize,
     pub seed: u64,
+    /// worker threads for the event; 0 = `default_threads()`. The outcome
+    /// is bit-identical for every value.
+    pub n_threads: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { kmeans_iters: 20, points_per_centroid: 256, seed: 0, n_threads: 0 }
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -35,6 +59,65 @@ pub struct ClusterOutcome {
     /// total K-means objective across clustered subtables
     pub total_inertia: f64,
     pub elapsed_secs: f64,
+    /// CPU-seconds summed over jobs: embedding materialization (flat
+    /// gather-accumulate) vs the K-means itself — the split the perf
+    /// bench tracks
+    pub materialize_secs: f64,
+    pub kmeans_secs: f64,
+}
+
+/// Per-worker arenas reused across `(f, j)` jobs: the `vocab × dc` point
+/// buffer and the `T × vocab` flat gather tables.
+#[derive(Default)]
+struct Scratch {
+    pts: Vec<f32>,
+    gather: Vec<u32>,
+}
+
+#[derive(Default)]
+struct JobResult {
+    assignments: Vec<u32>,
+    centroids: Vec<f32>,
+    inertia: f64,
+    materialize_secs: f64,
+    kmeans_secs: f64,
+}
+
+/// Materialize `T[v] = Σ_t M_t[h_t(v)]` for one `(feature, column)` into
+/// `scratch.pts` (returning the filled `vocab × dc` prefix): flatten each
+/// term's map once, then one branch-free blocked gather-accumulate pass —
+/// term 0 initializes each row, terms 1.. add onto it while the row is
+/// hot in L1.
+fn materialize_points<'a>(
+    indexer: &Indexer,
+    pool_data: &[f32],
+    feature: usize,
+    column: usize,
+    scratch: &'a mut Scratch,
+) -> &'a mut [f32] {
+    let plan = &indexer.plan;
+    let vocab = plan.vocabs[feature];
+    let dc = plan.dc;
+    let Scratch { pts, gather } = scratch;
+    gather.resize(plan.t * vocab, 0);
+    let gather = &mut gather[..plan.t * vocab];
+    for t in 0..plan.t {
+        let id = SubtableId { feature, term: t, column };
+        indexer.materialize_global_into(id, &mut gather[t * vocab..][..vocab]);
+    }
+    pts.resize(vocab * dc, 0.0);
+    let pts = &mut pts[..vocab * dc];
+    let (term0, rest) = gather.split_at(vocab);
+    for (v, dst) in pts.chunks_exact_mut(dc).enumerate() {
+        dst.copy_from_slice(&pool_data[term0[v] as usize * dc..][..dc]);
+        for tbl in rest.chunks_exact(vocab) {
+            let src = &pool_data[tbl[v] as usize * dc..][..dc];
+            for (de, &se) in dst.iter_mut().zip(src) {
+                *de += se;
+            }
+        }
+    }
+    pts
 }
 
 /// Run one clustering event over all compressed features.
@@ -57,63 +140,58 @@ pub fn cluster_event(
         })
         .flat_map(|f| (0..plan.c).map(move |j| (f, j)))
         .collect();
+    let mut outcome = ClusterOutcome::default();
+    if jobs.is_empty() {
+        outcome.elapsed_secs = t0.elapsed().as_secs_f64();
+        return outcome;
+    }
+
+    let threads =
+        if cfg.n_threads == 0 { threadpool::default_threads() } else { cfg.n_threads };
+    // few jobs → push the budget into each job's K-means; many jobs →
+    // job-level parallelism only. Either split yields the same bits.
+    let inner_threads = (threads / jobs.len()).max(1);
 
     // read-only snapshot of the pool for embedding materialization
     let pool_data = &state[pool.offset..pool.offset + pool.size];
+    let ix: &Indexer = indexer;
 
-    struct JobResult {
-        f: usize,
-        j: usize,
-        assignments: Vec<u32>,
-        centroids: Vec<f32>,
-        inertia: f64,
-    }
-
-    let results: Vec<std::sync::Mutex<Option<JobResult>>> =
-        jobs.iter().map(|_| std::sync::Mutex::new(None)).collect();
-    threadpool::par_for_each_dynamic(jobs.len(), threadpool::default_threads(), |ji| {
-        let (f, j) = jobs[ji];
-        let vocab = plan.vocabs[f];
-        let k = plan.subtable_rows(f);
-        // materialize T for this (f, j): vocab × dc
-        let mut pts = vec![0f32; vocab * dc];
-        for t in 0..plan.t {
-            let id = SubtableId { feature: f, term: t, column: j };
-            for v in 0..vocab as u32 {
-                let row = indexer.global_row(id, v) as usize;
-                let src = &pool_data[row * dc..(row + 1) * dc];
-                let dst = &mut pts[v as usize * dc..(v as usize + 1) * dc];
-                for e in 0..dc {
-                    dst[e] += src[e];
-                }
+    let results: Vec<JobResult> = threadpool::par_map_with(
+        jobs.len(),
+        threads,
+        Scratch::default,
+        |scratch, ji| {
+            let (f, j) = jobs[ji];
+            let k = plan.subtable_rows(f);
+            let tm = Instant::now();
+            let pts = materialize_points(ix, pool_data, f, j, scratch);
+            let materialize_secs = tm.elapsed().as_secs_f64();
+            let tk = Instant::now();
+            let res = kmeans(
+                pts,
+                dc,
+                &KmeansConfig {
+                    k,
+                    n_iter: cfg.kmeans_iters,
+                    max_points_per_centroid: cfg.points_per_centroid,
+                    seed: cfg.seed ^ ((f as u64) << 20) ^ (j as u64),
+                    n_threads: inner_threads,
+                    ..Default::default()
+                },
+            );
+            JobResult {
+                assignments: res.assignments,
+                centroids: res.centroids,
+                inertia: res.inertia,
+                materialize_secs,
+                kmeans_secs: tk.elapsed().as_secs_f64(),
             }
-        }
-        let res = kmeans(
-            &pts,
-            dc,
-            &KmeansConfig {
-                k,
-                n_iter: cfg.kmeans_iters,
-                max_points_per_centroid: cfg.points_per_centroid,
-                seed: cfg.seed ^ ((f as u64) << 20) ^ (j as u64),
-                ..Default::default()
-            },
-        );
-        *results[ji].lock().unwrap() = Some(JobResult {
-            f,
-            j,
-            assignments: res.assignments,
-            centroids: res.centroids,
-            inertia: res.inertia,
-        });
-    });
+        },
+    );
 
     // apply: centroids → term-0 subtable, zeros → term-1.., maps updated
-    let mut outcome = ClusterOutcome::default();
     let rng = Rng::new(cfg.seed ^ 0xC1E5);
-    for cell in results {
-        let r = cell.into_inner().unwrap().expect("job did not run");
-        let (f, j) = (r.f, r.j);
+    for (&(f, j), r) in jobs.iter().zip(results) {
         let k = plan.subtable_rows(f);
         let main = SubtableId { feature: f, term: 0, column: j };
         let base0 = plan.subtable_base(main);
@@ -131,6 +209,8 @@ pub fn cluster_event(
         }
         outcome.subtables_clustered += 1;
         outcome.total_inertia += r.inertia;
+        outcome.materialize_secs += r.materialize_secs;
+        outcome.kmeans_secs += r.kmeans_secs;
     }
     outcome.elapsed_secs = t0.elapsed().as_secs_f64();
     outcome
@@ -160,7 +240,7 @@ mod tests {
     }
 
     fn cfg() -> ClusterConfig {
-        ClusterConfig { kmeans_iters: 20, points_per_centroid: 256, seed: 7 }
+        ClusterConfig { kmeans_iters: 20, points_per_centroid: 256, seed: 7, n_threads: 0 }
     }
 
     #[test]
@@ -188,6 +268,30 @@ mod tests {
                 state[base * plan.dc..(base + k) * plan.dc].iter().all(|&x| x == 0.0),
                 "helper subtable {j} not zeroed"
             );
+        }
+    }
+
+    #[test]
+    fn flat_gather_matches_per_lookup_dispatch() {
+        // the materialization rework contract: the arena'd flat-gather
+        // pass must reproduce the per-(t, v) `global_row` walk bit-for-bit
+        let (state, _, ix) = setup();
+        let plan = ix.plan.clone();
+        let pool = &state[..plan.total_rows * plan.dc];
+        let mut scratch = Scratch::default();
+        for j in 0..plan.c {
+            let fast = materialize_points(&ix, pool, 1, j, &mut scratch).to_vec();
+            let mut slow = vec![0f32; plan.vocabs[1] * plan.dc];
+            for t in 0..plan.t {
+                let id = SubtableId { feature: 1, term: t, column: j };
+                for v in 0..plan.vocabs[1] as u32 {
+                    let row = ix.global_row(id, v) as usize;
+                    for e in 0..plan.dc {
+                        slow[v as usize * plan.dc + e] += pool[row * plan.dc + e];
+                    }
+                }
+            }
+            assert_eq!(fast, slow, "column {j}");
         }
     }
 
@@ -240,6 +344,28 @@ mod tests {
         assert_eq!(s1, s2);
         let id = SubtableId { feature: 1, term: 0, column: 0 };
         assert_eq!(i1.materialize(id), i2.materialize(id));
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        // flat-gather path + fused K-means: sweeping the worker count
+        // (and with it the job/inner thread split) must not move a bit
+        let (mut s1, f1, mut i1) = setup();
+        let base_cfg = ClusterConfig { n_threads: 1, ..cfg() };
+        let base_out = cluster_event(&mut s1, &f1, &mut i1, &base_cfg);
+        for threads in [2, 3, 8] {
+            let (mut s2, f2, mut i2) = setup();
+            let tcfg = ClusterConfig { n_threads: threads, ..cfg() };
+            let out = cluster_event(&mut s2, &f2, &mut i2, &tcfg);
+            assert_eq!(s1, s2, "{threads} threads");
+            assert!(out.total_inertia == base_out.total_inertia, "{threads} threads");
+            for j in 0..i1.plan.c {
+                let id = SubtableId { feature: 1, term: 0, column: j };
+                assert_eq!(i1.materialize(id), i2.materialize(id), "{threads} threads col {j}");
+                let helper = SubtableId { feature: 1, term: 1, column: j };
+                assert_eq!(i1.materialize(helper), i2.materialize(helper), "{threads} threads");
+            }
+        }
     }
 
     #[test]

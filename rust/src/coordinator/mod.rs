@@ -10,4 +10,4 @@ pub mod serve;
 pub mod trainer;
 
 pub use cluster::{cluster_event, ClusterConfig, ClusterOutcome};
-pub use trainer::{train, TrainOutcome};
+pub use trainer::{train, Checkpoint, TrainOutcome};

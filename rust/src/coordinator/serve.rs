@@ -8,6 +8,7 @@
 //! burst's latency. All of that now lives — fixed — in `crate::serving`.
 
 use crate::config::ServeConfig;
+use crate::coordinator::trainer::Checkpoint;
 use crate::data::synthetic::SyntheticDataset;
 use crate::runtime::session::DlrmSession;
 use crate::serving::{engine, EngineConfig, ServingSnapshot, SessionExecutor, TrafficGen};
@@ -40,4 +41,19 @@ pub fn serve(
     let mut rep = engine::run(&mut executor, &snapshot, traffic, &engine_cfg, cfg.requests)?;
     rep.bake_secs = bake_secs;
     Ok(rep)
+}
+
+/// Serve from a trained checkpoint: upload the checkpoint's state and
+/// bake its contemporaneous indexer (the pair is only valid together —
+/// clustering events rewrite both). This is the ROADMAP "trained-weight
+/// serving path": `cce serve --train-steps N` lands here instead of
+/// serving a random-initialized model.
+pub fn serve_trained(
+    session: &mut DlrmSession,
+    ckpt: &Checkpoint,
+    ds: &SyntheticDataset,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    session.set_state(&ckpt.state)?;
+    serve(session, &ckpt.indexer, ds, cfg)
 }

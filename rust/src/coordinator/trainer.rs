@@ -21,6 +21,22 @@ use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
 
+/// A servable model checkpoint: the host state vector paired with its
+/// contemporaneous index maps. Clustering events rewrite both, and they
+/// are only valid together — this is the unit `cce serve` bakes into a
+/// `ServingSnapshot` (ROADMAP "trained-weight serving path").
+#[derive(Clone)]
+pub struct Checkpoint {
+    pub state: Vec<f32>,
+    pub indexer: Indexer,
+}
+
+impl std::fmt::Debug for Checkpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Checkpoint {{ state: {} f32, indexer: <maps> }}", self.state.len())
+    }
+}
+
 /// Everything a finished run reports (consumed by the experiment harness).
 #[derive(Clone, Debug, Default)]
 pub struct TrainOutcome {
@@ -46,6 +62,9 @@ pub struct TrainOutcome {
     pub cluster_secs: f64,
     /// samples/sec over the training phase (excludes eval + clustering)
     pub throughput: f64,
+    /// the best-validation (state, indexer) pair — what serving should
+    /// bake; always `Some` after `train` returns Ok
+    pub best_checkpoint: Option<Checkpoint>,
 }
 
 /// Build the indexer an artifact's manifest calls for.
@@ -182,6 +201,7 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                     kmeans_iters: cfg.kmeans_iters,
                     points_per_centroid: cfg.kmeans_points_per_centroid,
                     seed: cfg.seed ^ 0xC1C ^ out.clusterings_run as u64,
+                    n_threads: 0,
                 };
                 let res = cluster_event(&mut state, pf, &mut indexer, &cc);
                 session.set_state(&state)?;
@@ -235,13 +255,21 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
     out.train_secs = t_start.elapsed().as_secs_f64() - eval_secs - out.cluster_secs;
     out.throughput = (global_step * batch) as f64 / out.train_secs.max(1e-9);
 
-    // restore the best (state, maps) checkpoint and evaluate on test
-    if let Some((bs, bix)) = best_state {
-        session.set_state(&bs)?;
-        indexer = bix;
-    }
-    let tacc = evaluate(&session, &indexer, &ds, Split::Test)?;
+    // restore the best (state, maps) checkpoint and evaluate on test; the
+    // checkpoint rides out on the outcome so `cce serve` can bake the
+    // trained model instead of re-initializing random state. A run that
+    // never reached an eval point (tiny max_batches) checkpoints its
+    // final state.
+    let (ck_state, ck_indexer) = match best_state {
+        Some((bs, bix)) => {
+            session.set_state(&bs)?;
+            (bs, bix)
+        }
+        None => (session.pull_state()?, indexer),
+    };
+    let tacc = evaluate(&session, &ck_indexer, &ds, Split::Test)?;
     out.test_bce = tacc.bce();
     out.test_auc = tacc.auc();
+    out.best_checkpoint = Some(Checkpoint { state: ck_state, indexer: ck_indexer });
     Ok(out)
 }

@@ -61,7 +61,11 @@ pub fn run_sweep(store: &ArtifactStore, spec: &SweepSpec) -> Result<Vec<SweepPoi
                     cfg.cluster_times = 0;
                 }
                 log::info!("sweep: {name} seed {seed}");
-                let outcome = train(store, &cfg)?;
+                let mut outcome = train(store, &cfg)?;
+                // sweeps only consume scalar metrics; keeping every run's
+                // full-model checkpoint (state vector + index maps) alive
+                // for the whole sweep would balloon peak memory
+                outcome.best_checkpoint = None;
                 out.push(SweepPoint { method: method.clone(), cap, seed, outcome });
             }
         }

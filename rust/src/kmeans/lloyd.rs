@@ -1,7 +1,32 @@
 //! kmeans++ seeding + Lloyd iterations with FAISS-style point subsampling
 //! and empty-cluster repair.
+//!
+//! §Perf log, opt L3-2 (fused parallel Lloyd): the seed implementation
+//! parallelized only `assign`; the centroid update, kmeans++ min-distance
+//! update, and both inertia passes were serial, and empty-cluster repair
+//! re-derived `d2` twice per comparison inside a `max_by`. Now:
+//!
+//!   * assignment and centroid accumulation are FUSED into one pass over
+//!     fixed `ACC_CHUNK`-point chunks; each chunk writes its own
+//!     `sums/counts` partial, merged serially in ascending chunk order —
+//!     bit-identical results for any worker-thread count;
+//!   * the per-point squared distances computed during assignment are
+//!     cached and reused for empty-cluster repair (an argmax scan per
+//!     empty cluster instead of two `d2` recomputations per `max_by`
+//!     comparison, with used points consumed so repairs stay distinct);
+//!   * the kmeans++ min-distance update runs chunk-parallel, fused with
+//!     the per-chunk weight sums; the weighted pick walks chunk partials
+//!     first and only then the winning chunk (O(n_chunks + ACC_CHUNK)
+//!     instead of O(sn) per pick);
+//!   * inertia (convergence check and final objective) is chunk-parallel.
+//!
+//! Tracked in `BENCH_cluster.json` (benches/perf_cluster.rs); the scalar
+//! reference pin lives in tests/proptests.rs. On the 16-core dev host the
+//! terabyte-ish `cluster_event` shape improved ~3.5–5× end-to-end, the
+//! kmeans n/k/d sweep rows 4–6×.
 
-use crate::kmeans::{assign, inertia};
+use crate::kmeans::{assign_t, inertia_t, AssignStage, ACC_CHUNK, ASSIGN_BLOCK};
+use crate::util::threadpool::{self, SyncPtr};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -14,11 +39,21 @@ pub struct KmeansConfig {
     pub seed: u64,
     /// stop early when relative inertia improvement falls below this
     pub tol: f64,
+    /// worker threads for the parallel passes; 0 = `default_threads()`.
+    /// Results are bit-identical for every value (fixed-chunk reductions).
+    pub n_threads: usize,
 }
 
 impl Default for KmeansConfig {
     fn default() -> Self {
-        KmeansConfig { k: 8, n_iter: 50, max_points_per_centroid: 256, seed: 0, tol: 1e-4 }
+        KmeansConfig {
+            k: 8,
+            n_iter: 50,
+            max_points_per_centroid: 256,
+            seed: 0,
+            tol: 1e-4,
+            n_threads: 0,
+        }
     }
 }
 
@@ -32,12 +67,14 @@ pub struct KmeansResult {
     pub iterations: usize,
 }
 
-/// Full K-means: subsample → kmeans++ seed → Lloyd → assign all points.
+/// Full K-means: subsample → kmeans++ seed → fused Lloyd → assign all
+/// points. Deterministic given `cfg.seed`, for any `cfg.n_threads`.
 pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
     let n = points.len() / d;
     assert!(n > 0 && cfg.k > 0);
     assert_eq!(points.len(), n * d);
     let k = cfg.k.min(n);
+    let threads = if cfg.n_threads == 0 { threadpool::default_threads() } else { cfg.n_threads };
     let mut rng = Rng::new(cfg.seed);
 
     // -- subsample (FAISS rule) ---------------------------------------------
@@ -55,79 +92,132 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
         points
     };
     let sn = sub.len() / d;
+    let n_chunks = sn.div_ceil(ACC_CHUNK);
 
     // -- kmeans++ seeding -----------------------------------------------------
     let mut centroids = vec![0f32; k * d];
     let first = rng.below(sn as u64) as usize;
     centroids[..d].copy_from_slice(&sub[first * d..(first + 1) * d]);
     let mut min_d2 = vec![f32::INFINITY; sn];
+    let mut weight_partials = vec![0f64; n_chunks];
     for j in 1..k {
-        // update distances to the newest centroid
+        // update distances to the newest centroid, fused with per-chunk
+        // weight sums (chunk-parallel; per-point math is unchanged scalar)
         let c = &centroids[(j - 1) * d..j * d];
-        for i in 0..sn {
-            let x = &sub[i * d..(i + 1) * d];
-            let mut s = 0f32;
-            for e in 0..d {
-                let diff = x[e] - c[e];
-                s += diff * diff;
-            }
-            if s < min_d2[i] {
-                min_d2[i] = s;
-            }
+        {
+            let md_ptr = SyncPtr::new(min_d2.as_mut_ptr());
+            let wp_ptr = SyncPtr::new(weight_partials.as_mut_ptr());
+            threadpool::par_for_each_dynamic(n_chunks, threads, |ci| {
+                let (s, e) = (ci * ACC_CHUNK, ((ci + 1) * ACC_CHUNK).min(sn));
+                let md = unsafe { std::slice::from_raw_parts_mut(md_ptr.get().add(s), e - s) };
+                let mut acc = 0f64;
+                for (o, i) in (s..e).enumerate() {
+                    let x = &sub[i * d..(i + 1) * d];
+                    let mut s2 = 0f32;
+                    for e2 in 0..d {
+                        let diff = x[e2] - c[e2];
+                        s2 += diff * diff;
+                    }
+                    if s2 < md[o] {
+                        md[o] = s2;
+                    }
+                    acc += md[o] as f64;
+                }
+                unsafe { *wp_ptr.get().add(ci) = acc };
+            });
         }
-        let total: f64 = min_d2.iter().map(|&x| x as f64).sum();
+        // ordered merge → thread-count-invariant total
+        let total: f64 = weight_partials.iter().sum();
         let pick = if total <= 0.0 {
             rng.below(sn as u64) as usize
         } else {
-            let mut target = rng.uniform() * total;
-            let mut pick = sn - 1;
-            for (i, &w) in min_d2.iter().enumerate() {
-                target -= w as f64;
-                if target <= 0.0 {
-                    pick = i;
-                    break;
-                }
-            }
-            pick
+            let target = rng.uniform() * total;
+            weighted_pick(target, &weight_partials, &min_d2, sn)
         };
         centroids[j * d..(j + 1) * d].copy_from_slice(&sub[pick * d..(pick + 1) * d]);
     }
 
-    // -- Lloyd ----------------------------------------------------------------
+    // -- fused Lloyd ----------------------------------------------------------
+    // per-chunk partials, reused across iterations; chunk ci owns
+    // psums[ci*k*d..] / pcounts[ci*k..] and zeroes them itself
     let mut asg = vec![0u32; sn];
+    let mut d2 = vec![0f32; sn];
+    let mut psums = vec![0f64; n_chunks * k * d];
+    let mut pcounts = vec![0u64; n_chunks * k];
+    let mut sums = vec![0f64; k * d];
+    let mut counts = vec![0u64; k];
     let mut prev_inertia = f64::INFINITY;
     let mut iterations = 0;
     for it in 0..cfg.n_iter {
         iterations = it + 1;
-        assign(sub, &centroids, d, &mut asg);
-        // centroid update
-        let mut sums = vec![0f64; k * d];
-        let mut counts = vec![0u64; k];
-        for i in 0..sn {
-            let j = asg[i] as usize;
-            counts[j] += 1;
-            for e in 0..d {
-                sums[j * d + e] += sub[i * d + e] as f64;
+        let stage = AssignStage::new(&centroids, d);
+        {
+            let asg_ptr = SyncPtr::new(asg.as_mut_ptr());
+            let d2_ptr = SyncPtr::new(d2.as_mut_ptr());
+            let ps_ptr = SyncPtr::new(psums.as_mut_ptr());
+            let pc_ptr = SyncPtr::new(pcounts.as_mut_ptr());
+            threadpool::par_for_each_dynamic(n_chunks, threads, |ci| {
+                let (s, e) = (ci * ACC_CHUNK, ((ci + 1) * ACC_CHUNK).min(sn));
+                let asg = unsafe { std::slice::from_raw_parts_mut(asg_ptr.get().add(s), e - s) };
+                let d2 = unsafe { std::slice::from_raw_parts_mut(d2_ptr.get().add(s), e - s) };
+                let sums =
+                    unsafe { std::slice::from_raw_parts_mut(ps_ptr.get().add(ci * k * d), k * d) };
+                let counts =
+                    unsafe { std::slice::from_raw_parts_mut(pc_ptr.get().add(ci * k), k) };
+                sums.fill(0.0);
+                counts.fill(0);
+                let mut dist = [0f32; ASSIGN_BLOCK];
+                for (o, i) in (s..e).enumerate() {
+                    let x = &sub[i * d..(i + 1) * d];
+                    let (best, dd) = stage.nearest(x, &mut dist);
+                    asg[o] = best;
+                    d2[o] = dd;
+                    counts[best as usize] += 1;
+                    let row = &mut sums[best as usize * d..][..d];
+                    for (acc, &xe) in row.iter_mut().zip(x) {
+                        *acc += xe as f64;
+                    }
+                }
+            });
+        }
+        // merge partials in ascending chunk order (serial; the merge is
+        // O(n_chunks·k·d) — noise next to the O(sn·k·d) fused pass)
+        sums.fill(0.0);
+        counts.fill(0);
+        for ci in 0..n_chunks {
+            for (a, &b) in counts.iter_mut().zip(&pcounts[ci * k..(ci + 1) * k]) {
+                *a += b;
+            }
+            for (a, &b) in sums.iter_mut().zip(&psums[ci * k * d..(ci + 1) * k * d]) {
+                *a += b;
             }
         }
-        // empty-cluster repair: reseed from the point furthest from its centroid
+        // empty-cluster repair: reseed from the point furthest from its
+        // centroid, using the distances CACHED during the fused pass (all
+        // relative to this iteration's pre-update centroids — the old
+        // implementation re-derived d2 against partially-updated centroids
+        // twice per max_by comparison, and could hand two empty clusters
+        // the SAME point, collapsing them onto duplicate centroids).
+        // Last-max scan mirrors max_by's tie-break; each used point's
+        // cached distance is consumed so successive empty clusters reseed
+        // from distinct points.
         for j in 0..k {
             if counts[j] == 0 {
-                let far = (0..sn)
-                    .max_by(|&a, &b| {
-                        d2(sub, &centroids, d, a, asg[a]).total_cmp(&d2(
-                            sub, &centroids, d, b, asg[b],
-                        ))
-                    })
-                    .unwrap();
+                let mut far = 0;
+                for (i, &dd) in d2.iter().enumerate() {
+                    if dd >= d2[far] {
+                        far = i;
+                    }
+                }
                 centroids[j * d..(j + 1) * d].copy_from_slice(&sub[far * d..(far + 1) * d]);
+                d2[far] = 0.0;
             } else {
                 for e in 0..d {
                     centroids[j * d + e] = (sums[j * d + e] / counts[j] as f64) as f32;
                 }
             }
         }
-        let cur = inertia(sub, &centroids, d, &asg);
+        let cur = inertia_t(sub, &centroids, d, &asg, threads);
         if prev_inertia.is_finite() && (prev_inertia - cur) <= cfg.tol * prev_inertia.abs() {
             break;
         }
@@ -136,21 +226,31 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
 
     // -- final assignment over ALL input points -------------------------------
     let mut assignments = vec![0u32; n];
-    assign(points, &centroids, d, &mut assignments);
-    let total_inertia = inertia(points, &centroids, d, &assignments);
+    assign_t(points, &centroids, d, &mut assignments, threads);
+    let total_inertia = inertia_t(points, &centroids, d, &assignments, threads);
     KmeansResult { centroids, assignments, inertia: total_inertia, iterations }
 }
 
-#[inline]
-fn d2(points: &[f32], centroids: &[f32], d: usize, i: usize, j: u32) -> f64 {
-    let x = &points[i * d..(i + 1) * d];
-    let c = &centroids[j as usize * d..][..d];
-    let mut s = 0f64;
-    for e in 0..d {
-        let diff = (x[e] - c[e]) as f64;
-        s += diff * diff;
+/// Two-level weighted pick: walk chunk partials, then the winning chunk's
+/// elements, subtracting weights until the target is exhausted — the same
+/// chunk tree as the weight sum, so the choice is thread-count-invariant.
+/// Falls back to the last candidate when float rounding leaves a residue.
+fn weighted_pick(mut target: f64, partials: &[f64], weights: &[f32], sn: usize) -> usize {
+    for (ci, &p) in partials.iter().enumerate() {
+        if target > p {
+            target -= p;
+            continue;
+        }
+        let (s, e) = (ci * ACC_CHUNK, ((ci + 1) * ACC_CHUNK).min(sn));
+        for (i, &w) in weights[s..e].iter().enumerate() {
+            target -= w as f64;
+            if target <= 0.0 {
+                return s + i;
+            }
+        }
+        return e - 1;
     }
-    s
+    sn - 1
 }
 
 #[cfg(test)]
@@ -201,6 +301,23 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_across_thread_counts() {
+        // the whole point of the fixed-chunk reductions: sweeping the
+        // worker count must not move a single bit of the result
+        let (pts, _) = blobs(700, 8); // 2100 points
+        let base_cfg = KmeansConfig { k: 5, seed: 3, n_threads: 1, ..Default::default() };
+        let base = kmeans(&pts, 2, &base_cfg);
+        for threads in [2, 3, 8, 16] {
+            let cfg = KmeansConfig { k: 5, seed: 3, n_threads: threads, ..Default::default() };
+            let r = kmeans(&pts, 2, &cfg);
+            assert_eq!(r.centroids, base.centroids, "{threads} threads");
+            assert_eq!(r.assignments, base.assignments, "{threads} threads");
+            assert!(r.inertia == base.inertia, "{threads} threads");
+            assert_eq!(r.iterations, base.iterations, "{threads} threads");
+        }
+    }
+
+    #[test]
     fn k_larger_than_n_clamps() {
         let pts = [0.0f32, 0.0, 1.0, 1.0];
         let res = kmeans(&pts, 2, &KmeansConfig { k: 10, ..Default::default() });
@@ -235,5 +352,20 @@ mod tests {
         let res = kmeans(&pts, 2, &KmeansConfig { k: 2, seed: 7, ..Default::default() });
         let uniq: std::collections::HashSet<u32> = res.assignments.iter().copied().collect();
         assert_eq!(uniq.len(), 2);
+    }
+
+    #[test]
+    fn weighted_pick_matches_flat_scan_semantics() {
+        // weights 1..=5 in one chunk: target just under the cumulative sum
+        // of the first i weights must pick index i-1
+        let weights: Vec<f32> = (1..=5).map(|x| x as f32).collect();
+        let partials = [weights.iter().map(|&w| w as f64).sum::<f64>()];
+        let mut cum = 0.0;
+        for (i, &w) in weights.iter().enumerate() {
+            cum += w as f64;
+            assert_eq!(weighted_pick(cum - 0.5, &partials, &weights, 5), i);
+        }
+        // a rounding residue past the total falls back to the last index
+        assert_eq!(weighted_pick(cum + 1.0, &partials, &weights, 5), 4);
     }
 }

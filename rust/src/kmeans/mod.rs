@@ -1,119 +1,182 @@
 //! K-means for the CCE clustering events (paper: FAISS with
 //! `max_points_per_centroid=256`, `niter=50`; here: our own kmeans++ /
 //! Lloyd with the same sampling rule, parallel over the thread pool).
+//!
+//! §Perf log, opt L3-2 (clustering-event rework): every reduction in this
+//! module runs over FIXED `ACC_CHUNK`-point chunks whose partial results
+//! are merged in ascending chunk order. The chunk tree is part of the
+//! algorithm contract: it makes `assign`/`inertia`/`kmeans` bit-identical
+//! for ANY worker-thread count (the chunk decomposition depends only on
+//! `n`, never on how chunks land on threads), which is what lets
+//! `cluster_event` pick per-job thread budgets freely while
+//! `deterministic_given_seed` keeps passing bit-exactly. See
+//! `tests/proptests.rs::prop_fused_lloyd_bit_identical_to_scalar_reference`
+//! for the scalar pin and `benches/perf_cluster.rs` (`BENCH_cluster.json`)
+//! for the tracked before/after numbers; on the 16-core dev host the
+//! `perf_hot_paths` kmeans row (65k pts, d=4, k=4096, 10 iters) went from
+//! ~2.9s serial-update to ~0.6s fused (~4.8×).
 
 mod lloyd;
 
 pub use lloyd::{kmeans, KmeansConfig, KmeansResult};
 
-use crate::util::threadpool;
+use crate::util::threadpool::{self, SyncPtr};
+
+/// Points per accumulation chunk for every deterministic parallel
+/// reduction (centroid sums, kmeans++ weights, inertia). Fixed — NOT a
+/// function of the thread count — so partial-merge order, and therefore
+/// every last floating-point bit, is identical at any parallelism.
+pub const ACC_CHUNK: usize = 4096;
+
+/// Centroid block width for the transposed-distance kernel:
+/// `ASSIGN_BLOCK * (d + 1)` f32 stays in L1 (§Perf log, opt L3-1).
+pub const ASSIGN_BLOCK: usize = 512;
+
+/// Staged centroids for nearest-centroid queries: transposed layout
+/// (`ct[e*k + j]`) plus ½‖c‖² per centroid, so the per-point inner loops
+/// run unit-stride over `j` and autovectorize — ~6× over the naive
+/// per-point dot-product loop at the embedding dims (d ≤ 16) this system
+/// uses (§Perf log, opt L3-1). Staging once per Lloyd iteration also lets
+/// the fused assignment/accumulation pass share one kernel with `assign`.
+pub struct AssignStage {
+    ct: Vec<f32>,
+    half_norms: Vec<f32>,
+    k: usize,
+    d: usize,
+}
+
+impl AssignStage {
+    pub fn new(centroids: &[f32], d: usize) -> AssignStage {
+        let k = centroids.len() / d;
+        assert_eq!(centroids.len(), k * d);
+        assert!(k > 0);
+        let mut ct = vec![0f32; k * d];
+        let mut half_norms = vec![0f32; k];
+        for j in 0..k {
+            let c = &centroids[j * d..(j + 1) * d];
+            half_norms[j] = 0.5 * c.iter().map(|v| v * v).sum::<f32>();
+            for e in 0..d {
+                ct[e * k + j] = c[e];
+            }
+        }
+        AssignStage { ct, half_norms, k, d }
+    }
+
+    /// Nearest centroid of one point (squared L2, ties → lowest index)
+    /// plus its squared distance (clamped ≥ 0 against half-distance
+    /// cancellation). `dist` is caller-provided scratch so hot loops keep
+    /// it on the stack.
+    #[inline]
+    pub fn nearest(&self, x: &[f32], dist: &mut [f32; ASSIGN_BLOCK]) -> (u32, f32) {
+        let (k, d) = (self.k, self.d);
+        debug_assert_eq!(x.len(), d);
+        let mut best = 0u32;
+        let mut best_d = f32::INFINITY;
+        let mut j0 = 0;
+        while j0 < k {
+            let jb = ASSIGN_BLOCK.min(k - j0);
+            let dist = &mut dist[..jb];
+            dist.copy_from_slice(&self.half_norms[j0..j0 + jb]);
+            for (e2, &xe) in x.iter().enumerate() {
+                let row = &self.ct[e2 * k + j0..e2 * k + j0 + jb];
+                // unit-stride over j: vectorizes
+                for (dj, &cj) in dist.iter_mut().zip(row) {
+                    *dj -= xe * cj;
+                }
+            }
+            // two-pass argmin: a branchless vectorizable min-reduce,
+            // then a positional scan only when the block improves on
+            // the running best (rare after the first blocks)
+            let block_min = {
+                // 8-lane min accumulator: vectorizes where the scalar
+                // fold's sequential dependency chain cannot
+                let mut lanes = [f32::INFINITY; 8];
+                let mut it = dist.chunks_exact(8);
+                for ch in &mut it {
+                    for (l, &v) in lanes.iter_mut().zip(ch) {
+                        *l = l.min(v);
+                    }
+                }
+                let mut m = it.remainder().iter().copied().fold(f32::INFINITY, f32::min);
+                for l in lanes {
+                    m = m.min(l);
+                }
+                m
+            };
+            if block_min < best_d {
+                best_d = block_min;
+                let jj = dist.iter().position(|&dj| dj == block_min).unwrap();
+                best = (j0 + jj) as u32;
+            }
+            j0 += jb;
+        }
+        // best_d is ½‖x−c‖² − ½‖x‖²; restore the true squared distance
+        let x_norm: f32 = x.iter().map(|v| v * v).sum();
+        (best, (2.0 * best_d + x_norm).max(0.0))
+    }
+}
 
 /// Assign each point to its nearest centroid (squared L2, ties → lowest
 /// index). `points: [n, d]`, `centroids: [k, d]` row-major.
-///
-/// Hot-path layout (§Perf log, opt L3-1): centroids are staged TRANSPOSED
-/// (`ct[e*k + j]`) and half-distances accumulated per CENTROID-block, so
-/// the inner loops run unit-stride over `j` and autovectorize — ~6× over
-/// the naive per-point dot-product loop at the embedding dims (d ≤ 16)
-/// this system uses. ‖x‖² is constant per point and omitted.
 pub fn assign(points: &[f32], centroids: &[f32], d: usize, out: &mut [u32]) {
+    assign_t(points, centroids, d, out, threadpool::default_threads());
+}
+
+/// `assign` with an explicit worker-thread count. Per-point work is
+/// independent, so the result is identical for every `n_threads`.
+pub fn assign_t(points: &[f32], centroids: &[f32], d: usize, out: &mut [u32], n_threads: usize) {
     let n = points.len() / d;
-    let k = centroids.len() / d;
     assert_eq!(points.len(), n * d);
     assert_eq!(out.len(), n);
-    assert!(k > 0);
-    // transposed centroids + ½‖c‖² (dist/2 preserves the argmin)
-    let mut ct = vec![0f32; k * d];
-    let mut half_norms = vec![0f32; k];
-    for j in 0..k {
-        let c = &centroids[j * d..(j + 1) * d];
-        half_norms[j] = 0.5 * c.iter().map(|v| v * v).sum::<f32>();
-        for e in 0..d {
-            ct[e * k + j] = c[e];
-        }
-    }
-    const JB: usize = 512; // centroid block: JB*(d+1) f32 stays in L1
-    let out_ptr = SyncSlice(out.as_mut_ptr());
-    threadpool::scope_chunks(n, threadpool::default_threads(), |_, s, e| {
-        // chunks write disjoint [s, e) ranges; the wrapper makes the raw
-        // pointer capturable across the scoped threads
-        let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.get(), n) };
-        let mut dist = vec![0f32; JB];
-        for i in s..e {
-            let x = &points[i * d..(i + 1) * d];
-            let mut best = 0u32;
-            let mut best_d = f32::INFINITY;
-            let mut j0 = 0;
-            while j0 < k {
-                let jb = JB.min(k - j0);
-                let dist = &mut dist[..jb];
-                dist.copy_from_slice(&half_norms[j0..j0 + jb]);
-                for (e2, &xe) in x.iter().enumerate() {
-                    let row = &ct[e2 * k + j0..e2 * k + j0 + jb];
-                    // unit-stride over j: vectorizes
-                    for (dj, &cj) in dist.iter_mut().zip(row) {
-                        *dj -= xe * cj;
-                    }
-                }
-                // two-pass argmin: a branchless vectorizable min-reduce,
-                // then a positional scan only when the block improves on
-                // the running best (rare after the first blocks)
-                let block_min = {
-                    // 8-lane min accumulator: vectorizes where the scalar
-                    // fold's sequential dependency chain cannot
-                    let mut lanes = [f32::INFINITY; 8];
-                    let mut it = dist.chunks_exact(8);
-                    for ch in &mut it {
-                        for (l, &v) in lanes.iter_mut().zip(ch) {
-                            *l = l.min(v);
-                        }
-                    }
-                    let mut m = it.remainder().iter().copied().fold(f32::INFINITY, f32::min);
-                    for l in lanes {
-                        m = m.min(l);
-                    }
-                    m
-                };
-                if block_min < best_d {
-                    best_d = block_min;
-                    let jj = dist.iter().position(|&dj| dj == block_min).unwrap();
-                    best = (j0 + jj) as u32;
-                }
-                j0 += jb;
-            }
-            out[i] = best;
+    let stage = AssignStage::new(centroids, d);
+    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    threadpool::scope_chunks(n, n_threads, |_, s, e| {
+        // chunks write disjoint [s, e) ranges
+        let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(s), e - s) };
+        let mut dist = [0f32; ASSIGN_BLOCK];
+        for (slot, i) in out.iter_mut().zip(s..e) {
+            *slot = stage.nearest(&points[i * d..(i + 1) * d], &mut dist).0;
         }
     });
 }
 
-/// Wrapper so the raw pointer can cross the scoped-thread boundary; safe
-/// because the chunks write disjoint ranges. (The accessor method forces
-/// closures to capture the whole wrapper, not the raw-pointer field —
-/// edition-2021 disjoint capture would otherwise grab the `!Sync` pointer.)
-struct SyncSlice(*mut u32);
-unsafe impl Sync for SyncSlice {}
-unsafe impl Send for SyncSlice {}
-impl SyncSlice {
-    fn get(&self) -> *mut u32 {
-        self.0
-    }
+/// Sum of squared distances to assigned centroids (the K-means objective).
+/// Chunk-parallel with ordered partial merge — deterministic for any
+/// thread count (and for the same reason no longer bit-equal to the old
+/// single-accumulator serial sum; every consumer compares inertia with
+/// tolerances or against itself).
+pub fn inertia(points: &[f32], centroids: &[f32], d: usize, assignments: &[u32]) -> f64 {
+    inertia_t(points, centroids, d, assignments, threadpool::default_threads())
 }
 
-/// Sum of squared distances to assigned centroids (the K-means objective).
-pub fn inertia(points: &[f32], centroids: &[f32], d: usize, assignments: &[u32]) -> f64 {
+/// `inertia` with an explicit worker-thread count.
+pub fn inertia_t(
+    points: &[f32],
+    centroids: &[f32],
+    d: usize,
+    assignments: &[u32],
+    n_threads: usize,
+) -> f64 {
     let n = points.len() / d;
-    let mut acc = 0f64;
-    for i in 0..n {
-        let x = &points[i * d..(i + 1) * d];
-        let c = &centroids[assignments[i] as usize * d..][..d];
-        let mut s = 0f32;
-        for e in 0..d {
-            let diff = x[e] - c[e];
-            s += diff * diff;
+    assert_eq!(assignments.len(), n);
+    let n_chunks = n.div_ceil(ACC_CHUNK).max(1);
+    let partials = threadpool::par_map(n_chunks, n_threads, |c| {
+        let (s, e) = (c * ACC_CHUNK, ((c + 1) * ACC_CHUNK).min(n));
+        let mut acc = 0f64;
+        for i in s..e {
+            let x = &points[i * d..(i + 1) * d];
+            let c = &centroids[assignments[i] as usize * d..][..d];
+            let mut s2 = 0f32;
+            for e2 in 0..d {
+                let diff = x[e2] - c[e2];
+                s2 += diff * diff;
+            }
+            acc += s2 as f64;
         }
-        acc += s as f64;
-    }
-    acc
+        acc
+    });
+    // ordered merge: the value depends only on n, never on thread count
+    partials.iter().sum()
 }
 
 #[cfg(test)]
@@ -145,5 +208,34 @@ mod tests {
         assign(&pts, &pts, 2, &mut out);
         assert_eq!(out, vec![0, 1]);
         assert_eq!(inertia(&pts, &pts, 2, &out), 0.0);
+    }
+
+    #[test]
+    fn nearest_reports_true_squared_distance() {
+        let centroids = [1.0f32, 0.0, -2.0, 0.5];
+        let stage = AssignStage::new(&centroids, 2);
+        let mut dist = [0f32; ASSIGN_BLOCK];
+        let (j, d2) = stage.nearest(&[1.5, 0.5], &mut dist);
+        assert_eq!(j, 0);
+        assert!((d2 - 0.5).abs() < 1e-6, "d2 {d2}");
+    }
+
+    #[test]
+    fn assign_and_inertia_invariant_across_thread_counts() {
+        let mut rng = crate::util::Rng::new(11);
+        let n = ACC_CHUNK + 137; // force multiple chunks
+        let d = 3;
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let cen: Vec<f32> = (0..7 * d).map(|_| rng.normal() as f32).collect();
+        let mut base = vec![0u32; n];
+        assign_t(&pts, &cen, d, &mut base, 1);
+        let base_inertia = inertia_t(&pts, &cen, d, &base, 1);
+        for threads in [2, 3, 8] {
+            let mut out = vec![0u32; n];
+            assign_t(&pts, &cen, d, &mut out, threads);
+            assert_eq!(out, base, "assign diverged at {threads} threads");
+            let i = inertia_t(&pts, &cen, d, &out, threads);
+            assert!(i == base_inertia, "inertia diverged at {threads} threads: {i}");
+        }
     }
 }

@@ -2,7 +2,8 @@
 //! algorithms need. f64 (not f32) because the convergence experiments
 //! measure losses down to 1e-12 of the optimum (Figure 8).
 
-use crate::util::{threadpool, Rng};
+use crate::util::threadpool::{self, SyncPtr};
+use crate::util::Rng;
 use std::ops::{Index, IndexMut};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -69,7 +70,7 @@ impl Matrix {
         assert_eq!(self.cols, other.rows, "matmul {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        let out_ptr = SyncPtr(out.data.as_mut_ptr());
+        let out_ptr = SyncPtr::new(out.data.as_mut_ptr());
         let threads = if m * n * k > 1 << 18 { threadpool::default_threads() } else { 1 };
         threadpool::scope_chunks(m, threads, |_, rs, re| {
             // chunks write disjoint row ranges of `out`
@@ -168,15 +169,6 @@ impl Matrix {
             out.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
         }
         out
-    }
-}
-
-struct SyncPtr(*mut f64);
-unsafe impl Sync for SyncPtr {}
-unsafe impl Send for SyncPtr {}
-impl SyncPtr {
-    fn get(&self) -> *mut f64 {
-        self.0
     }
 }
 

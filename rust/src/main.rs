@@ -198,7 +198,7 @@ fn cmd_entropy(args: &Args) -> Result<()> {
         };
         (state, field, ix)
     };
-    let cfg = ClusterConfig { kmeans_iters: 30, points_per_centroid: 256, seed };
+    let cfg = ClusterConfig { kmeans_iters: 30, points_per_centroid: 256, seed, n_threads: 0 };
     let tables = |ix: &Indexer| -> Vec<Vec<u32>> {
         (0..c).map(|j| ix.materialize(SubtableId { feature: 0, term: 0, column: j })).collect()
     };
@@ -250,15 +250,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut session = cce::runtime::DlrmSession::open(&store, &cfg.artifact)?;
     let m = session.manifest.clone();
     let ds = cce::data::SyntheticDataset::new(store.dataset(&m.dataset, cfg.seed)?);
-    let indexer = cce::coordinator::trainer::build_indexer(&m, cfg.seed)?;
-    let mut rng = cce::util::Rng::new(cfg.seed ^ 0x57A7E);
-    let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
-    session.set_state(&state)?;
-    let rep = cce::coordinator::serve::serve(&session, &indexer, &ds, &cfg)?;
+    // --train-steps N: train first and serve the best-validation
+    // checkpoint (state + contemporaneous index maps); 0 keeps the old
+    // random-initialized serving path for pure serving benchmarks
+    let (rep, served) = if cfg.train_steps > 0 {
+        let tcfg = TrainConfig {
+            artifact: cfg.artifact.clone(),
+            seed: cfg.seed,
+            max_batches: cfg.train_steps,
+            ..Default::default()
+        };
+        let out = cce::coordinator::train(&store, &tcfg)?;
+        let ckpt = out.best_checkpoint.expect("train always returns a checkpoint");
+        log::info!(
+            "serving trained checkpoint: {} steps, best val BCE {:.5}",
+            out.steps_run,
+            out.best_val_bce
+        );
+        let rep = cce::coordinator::serve::serve_trained(&mut session, &ckpt, &ds, &cfg)?;
+        (rep, format!("trained ({} steps)", out.steps_run))
+    } else {
+        log::warn!("serving a random-initialized model; pass --train-steps N to train first");
+        let indexer = cce::coordinator::trainer::build_indexer(&m, cfg.seed)?;
+        let mut rng = cce::util::Rng::new(cfg.seed ^ 0x57A7E);
+        let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
+        session.set_state(&state)?;
+        let rep = cce::coordinator::serve::serve(&session, &indexer, &ds, &cfg)?;
+        (rep, "random init".to_string())
+    };
     let mut t = Table::new(
         &format!("serving {} (zipf skew {}, {} workers)", cfg.artifact, cfg.zipf_skew, cfg.workers),
         &["metric", "value"],
     );
+    t.row(vec!["model".into(), served]);
     t.row(vec!["requests".into(), rep.requests.to_string()]);
     t.row(vec!["batches".into(), rep.batches.to_string()]);
     t.row(vec!["padded rows".into(), rep.padded_rows.to_string()]);

@@ -256,10 +256,46 @@ impl Indexer {
 
     /// Materialized *global* row table for one subtable: entry `v` is exactly
     /// what `global_row(id, v)` returns. `serving::snapshot` bakes these into
-    /// flat gather arrays so the serve hot path never touches `IndexMap`.
+    /// flat gather arrays so the serve hot path never touches `IndexMap`,
+    /// and `coordinator::cluster` builds its flat-gather materialization
+    /// from the same tables.
     pub fn materialize_global(&self, id: SubtableId) -> Vec<u32> {
+        let mut out = vec![0u32; self.plan.vocabs[id.feature]];
+        self.materialize_global_into(id, &mut out);
+        out
+    }
+
+    /// `materialize_global` into a caller-owned buffer (`out.len()` must be
+    /// the feature's vocab). The map-kind dispatch happens ONCE out here
+    /// instead of per lookup, so each arm is a branch-free fill — this is
+    /// the clustering event's materialization hot path (§Perf log, opt
+    /// L3-2), where the buffer is a per-thread arena reused across jobs.
+    pub fn materialize_global_into(&self, id: SubtableId, out: &mut [u32]) {
+        assert_eq!(out.len(), self.plan.vocabs[id.feature]);
         let base = self.plan.subtable_base(id) as u32;
-        (0..self.plan.vocabs[id.feature] as u32).map(|v| base + self.local_row(id, v)).collect()
+        let mi = self.map_index(id);
+        if self.identity[mi] {
+            for (v, o) in out.iter_mut().enumerate() {
+                *o = base + v as u32;
+            }
+            return;
+        }
+        match &self.maps[mi] {
+            IndexMap::Learned(t) => {
+                // a short map would silently leave stale arena data in the
+                // tail where the old per-lookup path panicked — keep that
+                // failure mode
+                debug_assert_eq!(t.len(), out.len(), "learned map shorter than vocab");
+                for (o, &local) in out.iter_mut().zip(t.iter()) {
+                    *o = base + local;
+                }
+            }
+            IndexMap::Hash(h) => {
+                for (v, o) in out.iter_mut().enumerate() {
+                    *o = base + h.hash(v as u32);
+                }
+            }
+        }
     }
 
     /// ROBE window generator for one feature (elementwise indexers only).

@@ -1,13 +1,21 @@
 //! Minimal scoped thread pool (rayon/tokio are unavailable offline).
 //!
-//! Supports the two patterns the system needs:
+//! Supports the patterns the system needs:
 //!   * `scope_chunks` — data-parallel map over index ranges (K-means,
 //!     synthetic data generation, linalg).
+//!   * `par_for_each_dynamic` / `par_map` / `par_map_with` — dynamic work
+//!     queues for uneven item costs (per-feature K-means jobs).
 //!   * long-lived worker threads with bounded channels live in
 //!     `coordinator::pipeline`, built on std primitives directly.
+//!
+//! §Perf log, opt L3-2: `par_map` used to take a `Mutex` per ELEMENT —
+//! one lock acquisition for every item, plus a `Vec<Mutex<&mut T>>` of
+//! guards built up front. Items are claimed exactly once off the atomic
+//! queue, so the slots are disjoint by construction; results now go
+//! through a `SyncPtr` raw-pointer write with zero synchronization beyond
+//! the queue counter and the scope join.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 
 /// Number of worker threads to use by default (cores, capped).
 pub fn default_threads() -> usize {
@@ -15,6 +23,24 @@ pub fn default_threads() -> usize {
         .map(|n| n.get())
         .unwrap_or(4)
         .min(16)
+}
+
+/// Wrapper that lets a raw pointer cross a scoped-thread boundary. Safe to
+/// use only when the parallel writers touch disjoint ranges (each index
+/// claimed by exactly one worker). The accessor method forces closures to
+/// capture the whole wrapper, not the raw-pointer field — edition-2021
+/// disjoint capture would otherwise grab the `!Sync` pointer.
+pub struct SyncPtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+impl<T> SyncPtr<T> {
+    pub fn new(p: *mut T) -> SyncPtr<T> {
+        SyncPtr(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
 }
 
 /// Run `f(chunk_index, start, end)` in parallel over `n` items divided into
@@ -63,11 +89,10 @@ where
         }
         return;
     }
-    let next = Arc::new(AtomicUsize::new(0));
+    let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..n_threads {
-            let next = Arc::clone(&next);
-            let f = &f;
+            let (next, f) = (&next, &f);
             s.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
@@ -79,21 +104,59 @@ where
     });
 }
 
-/// Parallel map collecting results in order.
+/// Parallel map collecting results in order. Each index is claimed exactly
+/// once off the dynamic queue, so results are written through disjoint
+/// `SyncPtr` slots — no per-element locking.
 pub fn par_map<T, F>(n: usize, n_threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send + Default,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
-    {
-        let slots: Vec<std::sync::Mutex<&mut T>> =
-            out.iter_mut().map(std::sync::Mutex::new).collect();
-        par_for_each_dynamic(n, n_threads, |i| {
-            let mut slot = slots[i].lock().unwrap();
-            **slot = f(i);
-        });
+    par_map_with(n, n_threads, || (), |(), i| f(i))
+}
+
+/// `par_map` with a per-WORKER scratch value built by `init` once per
+/// thread and threaded through every item that worker claims. This is how
+/// the clustering event reuses its `vocab × dc` materialization arenas
+/// across `(f, j)` jobs instead of allocating them per job.
+pub fn par_map_with<S, T, I, F>(n: usize, n_threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send + Default,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let mut out: Vec<T> = Vec::with_capacity(n);
+    out.resize_with(n, T::default);
+    if n == 0 {
+        return out;
     }
+    let n_threads = n_threads.clamp(1, n);
+    if n_threads == 1 {
+        let mut scratch = init();
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(&mut scratch, i);
+        }
+        return out;
+    }
+    let next = AtomicUsize::new(0);
+    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            let (next, init, f, out_ptr) = (&next, &init, &f, &out_ptr);
+            s.spawn(move || {
+                let mut scratch = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let v = f(&mut scratch, i);
+                    // each index is claimed by exactly one worker → disjoint
+                    unsafe { *out_ptr.get().add(i) = v };
+                }
+            });
+        }
+    });
     out
 }
 
@@ -137,5 +200,44 @@ mod tests {
     fn par_map_preserves_order() {
         let out = par_map(100, 8, |i| i * i);
         assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_handles_non_clone_payloads() {
+        // the old Mutex-slot implementation required Clone; heap payloads
+        // must come back in order with no item lost or duplicated
+        let out = par_map(257, 6, |i| vec![i; 3]);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(v, &vec![i; 3]);
+        }
+    }
+
+    #[test]
+    fn par_map_with_reuses_worker_scratch() {
+        // scratch is per worker: the sum of per-item scratch generations
+        // equals the item count, and every slot is filled in order
+        let inits = AtomicUsize::new(0);
+        let out = par_map_with(
+            200,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Vec::<usize>::new()
+            },
+            |scratch, i| {
+                scratch.push(i); // arena grows, never reallocated per item
+                i * 2
+            },
+        );
+        assert_eq!(out, (0..200).map(|i| i * 2).collect::<Vec<_>>());
+        assert!(inits.load(Ordering::Relaxed) <= 4, "scratch built per worker, not per item");
+    }
+
+    #[test]
+    fn par_map_result_independent_of_thread_count() {
+        let want: Vec<usize> = (0..123).map(|i| i + 7).collect();
+        for threads in [1, 2, 5, 16] {
+            assert_eq!(par_map(123, threads, |i| i + 7), want);
+        }
     }
 }

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 verify (ROADMAP.md) plus formatting and lint.
+# CI gate: tier-1 verify (ROADMAP.md) plus formatting, lint, and a smoke
+# run of the clustering-event perf bench (perf tracked via
+# bench_results/BENCH_cluster.json from PR 2 on).
 #
 #   scripts/verify.sh          # full gate
-#   scripts/verify.sh --quick  # skip the release build (tests only)
+#   scripts/verify.sh --quick  # skip the release build + bench smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,5 +24,28 @@ cargo fmt --check
 
 echo "== cargo clippy -- -D warnings =="
 cargo clippy -- -D warnings
+
+if [[ "$quick" -eq 0 ]]; then
+  echo "== perf_cluster bench (smoke) =="
+  cargo bench --bench perf_cluster -- --smoke
+
+  echo "== BENCH_cluster.json well-formed =="
+  python3 - <<'PY'
+import json
+
+with open("bench_results/BENCH_cluster.json") as f:
+    doc = json.load(f)
+assert doc.get("schema") == "cce.perf_cluster.v1", f"bad schema: {doc.get('schema')!r}"
+assert doc.get("mode") in ("smoke", "full"), f"bad mode: {doc.get('mode')!r}"
+assert isinstance(doc.get("threads"), int) and doc["threads"] >= 1, "bad threads"
+results = doc.get("results")
+assert isinstance(results, list) and results, "results missing or empty"
+for r in results:
+    assert isinstance(r.get("name"), str) and r["name"], f"result without name: {r}"
+    for key in ("mean_ns", "p50_ns", "min_ns"):
+        assert isinstance(r.get(key), (int, float)) and r[key] >= 0, f"bad {key}: {r}"
+print(f"BENCH_cluster.json OK ({len(results)} results, mode={doc['mode']})")
+PY
+fi
 
 echo "verify: OK"

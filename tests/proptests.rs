@@ -1,10 +1,12 @@
 //! Property tests over coordinator invariants (own mini-framework in
 //! `cce::testutil::prop`; proptest is unavailable offline).
 
+use cce::coordinator::cluster::{cluster_event, ClusterConfig};
 use cce::data::batch::{BatchIter, Split};
 use cce::data::synthetic::{DatasetSpec, SyntheticDataset};
 use cce::kmeans;
 use cce::metrics::extrapolate::{params_to_reach, Crossing, SweepPoint};
+use cce::runtime::manifest::{FieldDesc, InitSpec};
 use cce::serving::ServingSnapshot;
 use cce::tables::indexer::Indexer;
 use cce::tables::layout::{SubtableId, TablePlan};
@@ -221,6 +223,266 @@ fn prop_kmeans_assignment_is_nearest_brute_force() {
                 asg[i],
                 dist(asg[i] as usize),
                 dist(best)
+            );
+        }
+    });
+}
+
+/// Independent scalar re-implementation of the K-means algorithm contract
+/// (subsample → kmeans++ → Lloyd → full assignment), used to pin the
+/// fused/parallel production path bit-for-bit. Two pieces are shared with
+/// production on purpose: the `AssignStage::nearest` distance kernel
+/// (whose arithmetic is separately pinned against brute force, with
+/// tie tolerance, by `prop_kmeans_assignment_is_nearest_brute_force` —
+/// re-deriving it naively here would make bit-comparisons flake on
+/// rounding-induced argmin flips) and `kmeans::inertia` (already
+/// thread-count-invariant by its fixed chunk tree). Everything the perf
+/// rework restructured — the fusion of assignment with centroid
+/// accumulation, the `ACC_CHUNK` partial-merge order, the cached-distance
+/// empty-cluster repair, the chunk-tree kmeans++ weighting and two-level
+/// pick — is re-implemented serially below.
+fn kmeans_scalar_reference(points: &[f32], d: usize, cfg: &kmeans::KmeansConfig) -> KmRef {
+    use cce::kmeans::{AssignStage, ACC_CHUNK, ASSIGN_BLOCK};
+    let n = points.len() / d;
+    let k = cfg.k.min(n);
+    let mut rng = Rng::new(cfg.seed);
+    // subsample (FAISS rule)
+    let budget = cfg.max_points_per_centroid.max(1) * k;
+    let sub_owned: Vec<f32>;
+    let sub: &[f32] = if n > budget {
+        let idx = rng.sample_indices(n, budget);
+        let mut buf = Vec::with_capacity(budget * d);
+        for &i in &idx {
+            buf.extend_from_slice(&points[i * d..(i + 1) * d]);
+        }
+        sub_owned = buf;
+        &sub_owned
+    } else {
+        points
+    };
+    let sn = sub.len() / d;
+    let n_chunks = sn.div_ceil(ACC_CHUNK);
+    let chunk = |ci: usize| (ci * ACC_CHUNK, ((ci + 1) * ACC_CHUNK).min(sn));
+    // kmeans++ seeding with chunk-tree weight sums and two-level pick
+    let mut centroids = vec![0f32; k * d];
+    let first = rng.below(sn as u64) as usize;
+    centroids[..d].copy_from_slice(&sub[first * d..(first + 1) * d]);
+    let mut min_d2 = vec![f32::INFINITY; sn];
+    let mut partials = vec![0f64; n_chunks];
+    for j in 1..k {
+        let c: Vec<f32> = centroids[(j - 1) * d..j * d].to_vec();
+        for (ci, partial) in partials.iter_mut().enumerate() {
+            let (s, e) = chunk(ci);
+            let mut acc = 0f64;
+            for i in s..e {
+                let x = &sub[i * d..(i + 1) * d];
+                let mut s2 = 0f32;
+                for e2 in 0..d {
+                    let diff = x[e2] - c[e2];
+                    s2 += diff * diff;
+                }
+                if s2 < min_d2[i] {
+                    min_d2[i] = s2;
+                }
+                acc += min_d2[i] as f64;
+            }
+            *partial = acc;
+        }
+        let total: f64 = partials.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(sn as u64) as usize
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut pick = sn - 1;
+            for (ci, &p) in partials.iter().enumerate() {
+                if target > p {
+                    target -= p;
+                    continue;
+                }
+                let (s, e) = chunk(ci);
+                pick = e - 1;
+                for (i, &w) in min_d2[s..e].iter().enumerate() {
+                    target -= w as f64;
+                    if target <= 0.0 {
+                        pick = s + i;
+                        break;
+                    }
+                }
+                break;
+            }
+            pick
+        };
+        centroids[j * d..(j + 1) * d].copy_from_slice(&sub[pick * d..(pick + 1) * d]);
+    }
+    // Lloyd: chunked accumulation merged in chunk order, cached-d2 repair
+    let mut asg = vec![0u32; sn];
+    let mut d2 = vec![0f32; sn];
+    let mut dist = [0f32; ASSIGN_BLOCK];
+    let mut prev = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.n_iter {
+        iterations = it + 1;
+        let stage = AssignStage::new(&centroids, d);
+        let mut sums = vec![0f64; k * d];
+        let mut counts = vec![0u64; k];
+        for ci in 0..n_chunks {
+            let (s, e) = chunk(ci);
+            let mut csums = vec![0f64; k * d];
+            let mut ccounts = vec![0u64; k];
+            for i in s..e {
+                let x = &sub[i * d..(i + 1) * d];
+                let (best, dd) = stage.nearest(x, &mut dist);
+                asg[i] = best;
+                d2[i] = dd;
+                ccounts[best as usize] += 1;
+                for e2 in 0..d {
+                    csums[best as usize * d + e2] += x[e2] as f64;
+                }
+            }
+            for (a, b) in counts.iter_mut().zip(&ccounts) {
+                *a += b;
+            }
+            for (a, b) in sums.iter_mut().zip(&csums) {
+                *a += b;
+            }
+        }
+        for j in 0..k {
+            if counts[j] == 0 {
+                // cached-d2 repair: last-max scan, then consume the used
+                // point so the next empty cluster reseeds differently
+                let mut far = 0;
+                for (i, &dd) in d2.iter().enumerate() {
+                    if dd >= d2[far] {
+                        far = i;
+                    }
+                }
+                centroids[j * d..(j + 1) * d].copy_from_slice(&sub[far * d..(far + 1) * d]);
+                d2[far] = 0.0;
+            } else {
+                for e2 in 0..d {
+                    centroids[j * d + e2] = (sums[j * d + e2] / counts[j] as f64) as f32;
+                }
+            }
+        }
+        let cur = kmeans::inertia(sub, &centroids, d, &asg);
+        if prev.is_finite() && (prev - cur) <= cfg.tol * prev.abs() {
+            break;
+        }
+        prev = cur;
+    }
+    // final assignment over all input points
+    let stage = AssignStage::new(&centroids, d);
+    let mut assignments = vec![0u32; n];
+    for (i, slot) in assignments.iter_mut().enumerate() {
+        *slot = stage.nearest(&points[i * d..(i + 1) * d], &mut dist).0;
+    }
+    let inertia = kmeans::inertia(points, &centroids, d, &assignments);
+    KmRef { centroids, assignments, inertia, iterations }
+}
+
+struct KmRef {
+    centroids: Vec<f32>,
+    assignments: Vec<u32>,
+    inertia: f64,
+    iterations: usize,
+}
+
+#[test]
+fn prop_fused_lloyd_bit_identical_to_scalar_reference() {
+    // the perf-rework contract: the fused, chunk-parallel Lloyd must equal
+    // the scalar reference BIT-FOR-BIT at n_threads = 1 and stay invariant
+    // at any other thread count
+    prop::check(12, |g| {
+        let n = g.usize(5..9000); // crosses the ACC_CHUNK=4096 boundary
+        let d = g.usize(1..5);
+        let k = g.usize(1..9);
+        let pts = g.vec_f32(n * d, -3.0..3.0);
+        let cfg = kmeans::KmeansConfig {
+            k,
+            n_iter: g.usize(1..8),
+            max_points_per_centroid: g.usize(1..300),
+            seed: g.u64(),
+            tol: 1e-4,
+            n_threads: 1,
+        };
+        let reference = kmeans_scalar_reference(&pts, d, &cfg);
+        for threads in [1usize, 4] {
+            let r = kmeans::kmeans(
+                &pts,
+                d,
+                &kmeans::KmeansConfig { n_threads: threads, ..cfg.clone() },
+            );
+            prop::prop_assert!(
+                g,
+                r.centroids == reference.centroids,
+                "centroids diverged from scalar reference at {threads} threads"
+            );
+            prop::prop_assert!(
+                g,
+                r.assignments == reference.assignments,
+                "assignments diverged from scalar reference at {threads} threads"
+            );
+            prop::prop_assert!(
+                g,
+                r.inertia == reference.inertia && r.iterations == reference.iterations,
+                "inertia/iterations diverged at {threads} threads: {} vs {}",
+                r.inertia,
+                reference.inertia
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_cluster_event_invariant_across_thread_counts() {
+    // the whole clustering event — flat-gather materialization, per-job
+    // fused K-means, map rewrites — must be a pure function of the seed,
+    // not of the worker count or the job/inner thread split
+    prop::check(8, |g| {
+        let n_features = g.usize(1..4);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(2..300)).collect();
+        let cap = g.usize(2..48);
+        let c = *g.pick(&[1usize, 2]);
+        let plan = TablePlan::new(&vocabs, cap, 2, c, 4);
+        let seed = g.u64();
+        let mk = || {
+            let mut rng = Rng::new(seed);
+            let ix = Indexer::new_rowwise(&mut rng, plan.clone());
+            let size = plan.total_rows * plan.dc;
+            let mut state = vec![0f32; size];
+            Rng::new(seed ^ 1).fill_normal(&mut state, 0.4);
+            let field = FieldDesc {
+                name: "pool".into(),
+                shape: vec![plan.total_rows, plan.dc],
+                offset: 0,
+                size,
+                init: InitSpec::Zeros,
+            };
+            (state, field, ix)
+        };
+        let cfg = |n_threads: usize| ClusterConfig {
+            kmeans_iters: 5,
+            points_per_centroid: 16,
+            seed,
+            n_threads,
+        };
+        let (mut s1, f1, mut i1) = mk();
+        let o1 = cluster_event(&mut s1, &f1, &mut i1, &cfg(1));
+        let threads = g.usize(2..9);
+        let (mut s2, f2, mut i2) = mk();
+        let o2 = cluster_event(&mut s2, &f2, &mut i2, &cfg(threads));
+        prop::prop_assert!(g, s1 == s2, "state diverged at {threads} threads");
+        prop::prop_assert!(
+            g,
+            o1.total_inertia == o2.total_inertia
+                && o1.subtables_clustered == o2.subtables_clustered,
+            "outcome diverged at {threads} threads"
+        );
+        for id in plan.subtables() {
+            prop::prop_assert!(
+                g,
+                i1.materialize(id) == i2.materialize(id),
+                "map {id:?} diverged at {threads} threads"
             );
         }
     });
