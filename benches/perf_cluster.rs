@@ -7,7 +7,13 @@
 //!   * materialization micro: per-(t, v) `global_row` enum dispatch (the
 //!     pre-rework path, re-implemented here as the baseline) vs the flat
 //!     `materialize_global_into` gather-accumulate;
-//!   * K-means n/k/d sweeps over the fused Lloyd.
+//!   * K-means n/k/d sweeps over the fused Lloyd;
+//!   * sync vs overlapped event: per-event STALL (how long the step loop
+//!     blocks), event wall time, and staleness (stand-in training steps
+//!     executed between snapshot and apply), mirroring the trainer's two
+//!     event paths without a PJRT session — the training-step stand-in is
+//!     `Indexer::fill_rowwise` over a synthetic batch, the host work that
+//!     keeps running while an overlapped event computes in the background.
 //!
 //! Besides the usual table/CSV, results are emitted as
 //! `bench_results/BENCH_cluster.json` (schema `cce.perf_cluster.v1`) so
@@ -17,7 +23,9 @@
 //!
 //! Run: `cargo bench --bench perf_cluster` (no artifacts needed).
 
-use cce::coordinator::cluster::{cluster_event, ClusterConfig, ClusterOutcome};
+use cce::coordinator::cluster::{
+    apply_cluster, cluster_event, compute_cluster, ClusterConfig, ClusterOutcome,
+};
 use cce::experiments::report::Table;
 use cce::kmeans::{kmeans, KmeansConfig};
 use cce::runtime::manifest::{FieldDesc, InitSpec};
@@ -124,7 +132,7 @@ fn main() -> anyhow::Result<()> {
         ("cluster_event kaggle-small", &kaggle, cap),
         ("cluster_event terabyte-ish", &terabyte, if smoke { 512 } else { 2048 }),
     ];
-    for (name, vocabs, cap) in shapes {
+    for &(name, vocabs, cap) in &shapes {
         let cfg = ClusterConfig {
             kmeans_iters: iters,
             points_per_centroid: ppc,
@@ -245,6 +253,115 @@ fn main() -> anyhow::Result<()> {
             format!("{:.1} M pt·iter/s", (n * last_iters) as f64 / s.mean_ns * 1e3),
         ]);
         results.push(stat_json(&label, &s, vec![("iterations", Json::from(last_iters))]));
+    }
+
+    // ---------------- sync vs overlapped event (stall / staleness) -------
+    // mirrors `coordinator::trainer`'s two event paths: the synchronous
+    // path stalls the step loop for compute + apply; the overlapped path
+    // stalls only for the pool snapshot and the apply while stand-in
+    // training steps (`fill_rowwise` over a fixed synthetic batch — the
+    // consumer-side host work) run between snapshot and apply. Rows are
+    // tagged `"group": "sync_vs_overlap"` and carry stall_ns /
+    // event_wall_ns / stale_steps; scripts/verify.sh fails the JSON if
+    // those fields go missing.
+    {
+        let worker = threadpool::BackgroundWorker::new("bench-cluster");
+        let ov_cap = if smoke { 256 } else { 1024 };
+        let (state0, field, ix0) = setup_event(&kaggle, ov_cap);
+        let plan = ix0.plan.clone();
+        let batch = 256usize;
+        let f_n = plan.n_features();
+        let mut rng = Rng::new(0xBEEF);
+        let cats: Vec<u32> = (0..batch * f_n)
+            .map(|i| rng.below(plan.vocabs[i % f_n] as u64) as u32)
+            .collect();
+        let mut rows = vec![0i32; batch * f_n * plan.t * plan.c];
+        let cfg =
+            ClusterConfig { kmeans_iters: iters, points_per_centroid: ppc, seed: 7, n_threads: 0 };
+
+        // sync: the stall IS the whole event
+        let mut sync_stall = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let mut state = state0.clone();
+            let mut ix = ix0.clone();
+            let t0 = Instant::now();
+            let computed = compute_cluster(&state[..field.size], &ix, &cfg);
+            let _ = apply_cluster(&mut state[..field.size], &mut ix, computed);
+            sync_stall.push(t0.elapsed().as_nanos() as f64);
+        }
+
+        // overlapped: snapshot → background compute → apply at the first
+        // "step boundary" where the job is done (≥ 1 step by construction,
+        // exactly like the trainer's apply-after-train_step placement)
+        let mut ov_stall = Vec::with_capacity(reps);
+        let mut ov_wall = Vec::with_capacity(reps);
+        let mut ov_stale = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let mut state = state0.clone();
+            let mut ix = ix0.clone();
+            let t_event = Instant::now();
+            let snapshot = state[..field.size].to_vec();
+            let ix_snap = ix.clone();
+            let cfg_bg = cfg.clone();
+            let mut handle = worker.submit(move || compute_cluster(&snapshot, &ix_snap, &cfg_bg));
+            let mut stall = t_event.elapsed().as_nanos() as f64; // snapshot share
+            let mut steps = 0usize;
+            let computed = loop {
+                ix.fill_rowwise(&cats, batch, &mut rows);
+                std::hint::black_box(&rows);
+                steps += 1;
+                if let Some(c) = handle.try_join() {
+                    break c;
+                }
+            };
+            let t_apply = Instant::now();
+            let _ = apply_cluster(&mut state[..field.size], &mut ix, computed);
+            stall += t_apply.elapsed().as_nanos() as f64;
+            ov_stall.push(stall);
+            ov_wall.push(t_event.elapsed().as_nanos() as f64);
+            ov_stale.push(steps as f64);
+        }
+
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let s_sync = TimingStats::from_samples(sync_stall);
+        let s_ov = TimingStats::from_samples(ov_stall);
+        let label_sync = format!("cluster_overlap kaggle-small sync (cap={ov_cap})");
+        let label_ov = format!("cluster_overlap kaggle-small overlap (cap={ov_cap})");
+        t.row(vec![
+            label_sync.clone(),
+            s_sync.display(),
+            "stall == event (no steps between snapshot and apply)".into(),
+        ]);
+        t.row(vec![
+            label_ov.clone(),
+            s_ov.display(),
+            format!(
+                "{:.1}x less stall; wall {:.1} ms; {:.0} stale steps/event",
+                s_sync.mean_ns / s_ov.mean_ns.max(1.0),
+                mean(&ov_wall) / 1e6,
+                mean(&ov_stale)
+            ),
+        ]);
+        results.push(stat_json(
+            &label_sync,
+            &s_sync,
+            vec![
+                ("group", Json::from("sync_vs_overlap")),
+                ("stall_ns", Json::from(s_sync.mean_ns)),
+                ("event_wall_ns", Json::from(s_sync.mean_ns)),
+                ("stale_steps", Json::from(0.0)),
+            ],
+        ));
+        results.push(stat_json(
+            &label_ov,
+            &s_ov,
+            vec![
+                ("group", Json::from("sync_vs_overlap")),
+                ("stall_ns", Json::from(s_ov.mean_ns)),
+                ("event_wall_ns", Json::from(mean(&ov_wall))),
+                ("stale_steps", Json::from(mean(&ov_stale))),
+            ],
+        ));
     }
 
     t.print();

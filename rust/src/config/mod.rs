@@ -38,6 +38,11 @@ pub struct TrainConfig {
     pub kmeans_points_per_centroid: usize,
     /// offload the K-means inner loop to the PJRT kmeans artifact
     pub kmeans_offload: bool,
+    /// overlap clustering events with continued training: compute on a
+    /// background worker against a pool snapshot, apply at the first
+    /// step boundary where the job is done. Off (synchronous, bit-
+    /// reproducible events) by default.
+    pub cluster_overlap: bool,
     /// worker threads producing index batches
     pub pipeline_workers: usize,
     /// bounded-queue depth between producers and the exec thread
@@ -59,6 +64,7 @@ impl Default for TrainConfig {
             kmeans_iters: 10,
             kmeans_points_per_centroid: 32,
             kmeans_offload: false,
+            cluster_overlap: false,
             pipeline_workers: 2,
             pipeline_depth: 4,
         }
@@ -85,6 +91,9 @@ impl TrainConfig {
         if args.flag("kmeans-offload") {
             self.kmeans_offload = true;
         }
+        if args.flag("cluster-overlap") {
+            self.cluster_overlap = true;
+        }
         self.pipeline_workers = args.usize_or("workers", self.pipeline_workers);
         self.pipeline_depth = args.usize_or("queue-depth", self.pipeline_depth);
         self
@@ -109,6 +118,7 @@ impl TrainConfig {
                     c.kmeans_points_per_centroid = v.as_u64()? as usize
                 }
                 "kmeans_offload" => c.kmeans_offload = v.as_bool()?,
+                "cluster_overlap" => c.cluster_overlap = v.as_bool()?,
                 "pipeline_workers" => c.pipeline_workers = v.as_u64()? as usize,
                 "pipeline_depth" => c.pipeline_depth = v.as_u64()? as usize,
                 other => bail!("unknown [train] key {other:?}"),
@@ -135,7 +145,8 @@ mod tests {
     #[test]
     fn args_override_defaults() {
         let args = Args::parse(
-            "x --artifact quick_ce --epochs 3 --cluster-times 6 --kmeans-offload"
+            "x --artifact quick_ce --epochs 3 --cluster-times 6 --kmeans-offload \
+             --cluster-overlap"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -145,13 +156,15 @@ mod tests {
         assert_eq!(c.epochs, 3);
         assert_eq!(c.cluster_times, 6);
         assert!(c.kmeans_offload);
+        assert!(c.cluster_overlap);
         assert!(c.validate().is_ok());
     }
 
     #[test]
     fn toml_round_trip() {
         let doc = TomlDoc::parse(
-            "[train]\nartifact = \"smoke_cce\"\nepochs = 2\nearly_stop = true\nshuffle = false\n",
+            "[train]\nartifact = \"smoke_cce\"\nepochs = 2\nearly_stop = true\nshuffle = false\n\
+             cluster_overlap = true\n",
         )
         .unwrap();
         let c = TrainConfig::from_toml(&doc).unwrap();
@@ -159,6 +172,7 @@ mod tests {
         assert_eq!(c.epochs, 2);
         assert!(c.early_stop);
         assert!(!c.shuffle);
+        assert!(c.cluster_overlap);
     }
 
     #[test]

@@ -9,10 +9,32 @@
 //!   3. `h_0 ← assignments` (learned), `M_0 ← centroids`;
 //!   4. `h_1 ← fresh random hash`, `M_1 ← 0`.
 //!
-//! The state vector is mutated in place on the host; the caller re-uploads
-//! it to the device afterwards. Features whose subtables are identity
-//! (full tables under the cap) are skipped — clustering a lossless table
-//! can only discard information.
+//! The event is split into two phases so the trainer can overlap it with
+//! continued training (CAFE-style background restructuring):
+//!
+//!   * [`compute_cluster`] — the expensive part (materialization +
+//!     K-means). Pure function of a POOL-FIELD SNAPSHOT and an `Indexer`
+//!     clone; safe to run on a `threadpool::BackgroundWorker` while
+//!     training continues on the old maps.
+//!   * [`apply_cluster`] — cheap and deterministic: writes centroids into
+//!     the clustered term-0 subtable ranges, zeroes the helper ranges,
+//!     and rewrites the live maps. Only the clustered subtable ranges of
+//!     the pool are touched, so applying against a pool that has TRAINED
+//!     PAST the snapshot is well-defined: untouched rows (identity
+//!     features) keep their freshest values.
+//!
+//! Timeline of an overlapped event: snapshot pool + clone maps at step S
+//! → background compute → at the first step boundary `S + n` where the
+//! job is done, `apply_cluster` against the CURRENT pool. The `n` steps
+//! in between trained on stale maps; [`ClusterOutcome::stale_steps`]
+//! records that per event (0 in synchronous mode, where
+//! [`cluster_event`] runs both phases back-to-back on the same state).
+//!
+//! Synchronous [`cluster_event`] mutates the pool range of the state
+//! vector in place on the host; the caller re-uploads it afterwards
+//! (`DlrmSession::set_field` moves only the pool field). Features whose
+//! subtables are identity (full tables under the cap) are skipped —
+//! clustering a lossless table can only discard information.
 //!
 //! §Perf log, opt L3-2 (clustering-event hot path): materialization used
 //! to walk `Indexer::global_row` per `(t, v)` lookup — an enum-dispatch
@@ -22,12 +44,14 @@
 //! via `materialize_global_into` into a per-THREAD arena and runs a
 //! branch-free gather-accumulate over all T terms per row, jobs collect
 //! through the lock-free `par_map_with`, and the fused parallel K-means
-//! (see `kmeans::lloyd`) gets the per-job thread budget that is left over.
-//! Per-job results are bit-identical for any thread split, so the event
-//! stays deterministic given the seed at any parallelism. Before/after is
-//! tracked in `BENCH_cluster.json` (benches/perf_cluster.rs); on the
-//! 16-core dev host the terabyte-ish shape improved ~3.5–5× end-to-end
-//! and materialization alone ~4× (see the bench's dispatch-vs-flat row).
+//! (see `kmeans::lloyd`) gets the per-job thread budget that is left over
+//! (remainder threads spread over the first jobs — every split yields the
+//! same bits). Per-job results are bit-identical for any thread split, so
+//! the event stays deterministic given the seed at any parallelism.
+//! Before/after is tracked in `BENCH_cluster.json`
+//! (benches/perf_cluster.rs); on the 16-core dev host the terabyte-ish
+//! shape improved ~3.5–5× end-to-end and materialization alone ~4× (see
+//! the bench's dispatch-vs-flat row).
 
 use crate::kmeans::{kmeans, KmeansConfig};
 use crate::runtime::manifest::FieldDesc;
@@ -58,12 +82,18 @@ pub struct ClusterOutcome {
     pub subtables_clustered: usize,
     /// total K-means objective across clustered subtables
     pub total_inertia: f64,
+    /// compute + apply wall time (for an overlapped event the compute
+    /// share ran concurrently with training, not as a stall)
     pub elapsed_secs: f64,
     /// CPU-seconds summed over jobs: embedding materialization (flat
     /// gather-accumulate) vs the K-means itself — the split the perf
     /// bench tracks
     pub materialize_secs: f64,
     pub kmeans_secs: f64,
+    /// training steps executed between this event's pool snapshot and the
+    /// apply of its new maps — 0 in synchronous mode, set by the trainer
+    /// in overlapped mode
+    pub stale_steps: usize,
 }
 
 /// Per-worker arenas reused across `(f, j)` jobs: the `vocab × dc` point
@@ -81,6 +111,25 @@ struct JobResult {
     inertia: f64,
     materialize_secs: f64,
     kmeans_secs: f64,
+}
+
+/// Everything the compute phase produced from one pool snapshot: the
+/// per-(feature, column) K-means results plus the seed the apply phase
+/// re-seeds the helper maps with. `Send` by construction so it can ride
+/// back from a `threadpool::BackgroundWorker` job.
+pub struct ClusterComputed {
+    jobs: Vec<(usize, usize)>,
+    results: Vec<JobResult>,
+    seed: u64,
+    /// wall time of the compute phase
+    pub compute_secs: f64,
+}
+
+impl ClusterComputed {
+    /// Number of (feature, column) subtables the compute phase clustered.
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
 }
 
 /// Materialize `T[v] = Σ_t M_t[h_t(v)]` for one `(feature, column)` into
@@ -120,41 +169,43 @@ fn materialize_points<'a>(
     pts
 }
 
-/// Run one clustering event over all compressed features.
-pub fn cluster_event(
-    state: &mut [f32],
-    pool: &FieldDesc,
-    indexer: &mut Indexer,
+/// The expensive phase of a clustering event: materialize + K-means every
+/// compressed (feature, column) against a pool-field snapshot. Pure —
+/// touches neither the live state nor the live maps, so it can run on a
+/// background worker while training continues.
+pub fn compute_cluster(
+    pool_data: &[f32],
+    indexer: &Indexer,
     cfg: &ClusterConfig,
-) -> ClusterOutcome {
+) -> ClusterComputed {
     let t0 = Instant::now();
-    let plan = indexer.plan.clone();
+    let plan = &indexer.plan;
     assert!(plan.t >= 2, "clustering needs a helper table (T ≥ 2), got T={}", plan.t);
     let dc = plan.dc;
-    assert_eq!(pool.size, plan.total_rows * dc, "pool field does not match plan");
+    assert_eq!(pool_data.len(), plan.total_rows * dc, "pool field does not match plan");
 
     // jobs: one per (feature, column) with a non-identity main map
     let jobs: Vec<(usize, usize)> = (0..plan.n_features())
-        .filter(|&f| {
-            !indexer.is_identity(SubtableId { feature: f, term: 0, column: 0 })
-        })
+        .filter(|&f| !indexer.is_identity(SubtableId { feature: f, term: 0, column: 0 }))
         .flat_map(|f| (0..plan.c).map(move |j| (f, j)))
         .collect();
-    let mut outcome = ClusterOutcome::default();
     if jobs.is_empty() {
-        outcome.elapsed_secs = t0.elapsed().as_secs_f64();
-        return outcome;
+        return ClusterComputed {
+            jobs,
+            results: Vec::new(),
+            seed: cfg.seed,
+            compute_secs: t0.elapsed().as_secs_f64(),
+        };
     }
 
     let threads =
         if cfg.n_threads == 0 { threadpool::default_threads() } else { cfg.n_threads };
-    // few jobs → push the budget into each job's K-means; many jobs →
-    // job-level parallelism only. Either split yields the same bits.
-    let inner_threads = (threads / jobs.len()).max(1);
-
-    // read-only snapshot of the pool for embedding materialization
-    let pool_data = &state[pool.offset..pool.offset + pool.size];
-    let ix: &Indexer = indexer;
+    // few jobs → push the budget into each job's K-means, spreading the
+    // remainder over the first `threads % jobs` jobs so no core idles;
+    // many jobs → job-level parallelism only. Either split yields the
+    // same bits (the fused K-means is thread-count-invariant).
+    let inner_base = threads / jobs.len();
+    let inner_rem = threads % jobs.len();
 
     let results: Vec<JobResult> = threadpool::par_map_with(
         jobs.len(),
@@ -163,8 +214,10 @@ pub fn cluster_event(
         |scratch, ji| {
             let (f, j) = jobs[ji];
             let k = plan.subtable_rows(f);
+            let inner_threads =
+                if inner_base == 0 { 1 } else { inner_base + usize::from(ji < inner_rem) };
             let tm = Instant::now();
-            let pts = materialize_points(ix, pool_data, f, j, scratch);
+            let pts = materialize_points(indexer, pool_data, f, j, scratch);
             let materialize_secs = tm.elapsed().as_secs_f64();
             let tk = Instant::now();
             let res = kmeans(
@@ -188,32 +241,67 @@ pub fn cluster_event(
             }
         },
     );
+    ClusterComputed { jobs, results, seed: cfg.seed, compute_secs: t0.elapsed().as_secs_f64() }
+}
 
-    // apply: centroids → term-0 subtable, zeros → term-1.., maps updated
-    let rng = Rng::new(cfg.seed ^ 0xC1E5);
-    for (&(f, j), r) in jobs.iter().zip(results) {
+/// The cheap phase: write the computed centroids into the clustered
+/// term-0 subtable ranges of `pool_data`, zero the helper ranges, replace
+/// the live maps (learned term-0 assignments, fresh random helpers).
+/// `pool_data` may have trained past the snapshot `computed` was built
+/// from — only the clustered subtable ranges are overwritten.
+pub fn apply_cluster(
+    pool_data: &mut [f32],
+    indexer: &mut Indexer,
+    computed: ClusterComputed,
+) -> ClusterOutcome {
+    let t0 = Instant::now();
+    let plan = indexer.plan.clone();
+    let dc = plan.dc;
+    assert_eq!(pool_data.len(), plan.total_rows * dc, "pool field does not match plan");
+    let mut outcome = ClusterOutcome::default();
+    // centroids → term-0 subtable, zeros → term-1.., maps updated
+    let rng = Rng::new(computed.seed ^ 0xC1E5);
+    for (&(f, j), r) in computed.jobs.iter().zip(computed.results) {
         let k = plan.subtable_rows(f);
         let main = SubtableId { feature: f, term: 0, column: j };
         let base0 = plan.subtable_base(main);
         // centroids may be fewer than k when vocab < k (kmeans clamps)
         let k_eff = r.centroids.len() / dc;
-        let dst = &mut state[pool.offset + base0 * dc..pool.offset + (base0 + k) * dc];
+        let dst = &mut pool_data[base0 * dc..(base0 + k) * dc];
         dst.fill(0.0);
         dst[..k_eff * dc].copy_from_slice(&r.centroids);
         indexer.set_learned(main, r.assignments);
         for t in 1..plan.t {
             let helper = SubtableId { feature: f, term: t, column: j };
             let base = plan.subtable_base(helper);
-            state[pool.offset + base * dc..pool.offset + (base + k) * dc].fill(0.0);
-            indexer.set_random(helper, &mut rng.fork((f as u64) << 8 | t as u64));
+            pool_data[base * dc..(base + k) * dc].fill(0.0);
+            // the fork key carries (feature, column, term): distinct
+            // columns MUST draw distinct random helper maps, or the
+            // dynamic-hashing property degenerates column-wise (the old
+            // `(f << 8) | t` key collided across columns)
+            let key = ((f as u64) << 16) | ((j as u64) << 8) | t as u64;
+            indexer.set_random(helper, &mut rng.fork(key));
         }
         outcome.subtables_clustered += 1;
         outcome.total_inertia += r.inertia;
         outcome.materialize_secs += r.materialize_secs;
         outcome.kmeans_secs += r.kmeans_secs;
     }
-    outcome.elapsed_secs = t0.elapsed().as_secs_f64();
+    outcome.elapsed_secs = computed.compute_secs + t0.elapsed().as_secs_f64();
     outcome
+}
+
+/// Run one synchronous clustering event over all compressed features:
+/// both phases back-to-back against the pool range of `state`.
+pub fn cluster_event(
+    state: &mut [f32],
+    pool: &FieldDesc,
+    indexer: &mut Indexer,
+    cfg: &ClusterConfig,
+) -> ClusterOutcome {
+    let pool_data = &mut state[pool.offset..pool.offset + pool.size];
+    let computed = compute_cluster(pool_data, indexer, cfg);
+    apply_cluster(pool_data, indexer, computed)
 }
 
 #[cfg(test)]
@@ -269,6 +357,21 @@ mod tests {
                 "helper subtable {j} not zeroed"
             );
         }
+    }
+
+    #[test]
+    fn helper_maps_differ_across_columns() {
+        // regression: the helper re-seed fork key used to be
+        // `(f << 8) | t` — identical for every column of a feature, so
+        // after each event the "fresh random" maps of a c ≥ 2 plan were
+        // the SAME map repeated per column (breaking the dynamic-hashing
+        // property of Shi et al.'s compositional embeddings). The key now
+        // carries the column.
+        let (mut state, field, mut ix) = setup();
+        cluster_event(&mut state, &field, &mut ix, &cfg());
+        let h0 = ix.materialize(SubtableId { feature: 1, term: 1, column: 0 });
+        let h1 = ix.materialize(SubtableId { feature: 1, term: 1, column: 1 });
+        assert_ne!(h0, h1, "helper maps identical across columns — fork key lost the column");
     }
 
     #[test]
@@ -349,11 +452,14 @@ mod tests {
     #[test]
     fn deterministic_across_thread_counts() {
         // flat-gather path + fused K-means: sweeping the worker count
-        // (and with it the job/inner thread split) must not move a bit
+        // (and with it the job/inner thread split — including RAGGED
+        // splits where threads % jobs != 0 and the remainder spreads over
+        // the first jobs) must not move a bit
         let (mut s1, f1, mut i1) = setup();
         let base_cfg = ClusterConfig { n_threads: 1, ..cfg() };
         let base_out = cluster_event(&mut s1, &f1, &mut i1, &base_cfg);
-        for threads in [2, 3, 8] {
+        // 2 jobs here: 3, 5, 7 exercise the ragged remainder path
+        for threads in [2, 3, 5, 7, 8] {
             let (mut s2, f2, mut i2) = setup();
             let tcfg = ClusterConfig { n_threads: threads, ..cfg() };
             let out = cluster_event(&mut s2, &f2, &mut i2, &tcfg);
@@ -365,6 +471,69 @@ mod tests {
                 let helper = SubtableId { feature: 1, term: 1, column: j };
                 assert_eq!(i1.materialize(helper), i2.materialize(helper), "{threads} threads");
             }
+        }
+    }
+
+    #[test]
+    fn split_phases_match_synchronous_event() {
+        // compute-on-snapshot + apply must equal the one-shot event when
+        // nothing trains in between (the overlap refactor's base case)
+        let (mut s1, f1, mut i1) = setup();
+        cluster_event(&mut s1, &f1, &mut i1, &cfg());
+        let (mut s2, f2, mut i2) = setup();
+        let snapshot = s2[f2.offset..f2.offset + f2.size].to_vec();
+        let computed = compute_cluster(&snapshot, &i2, &cfg());
+        assert_eq!(computed.n_jobs(), 2);
+        apply_cluster(&mut s2[f2.offset..f2.offset + f2.size], &mut i2, computed);
+        assert_eq!(s1, s2);
+        for id in i1.plan.clone().subtables() {
+            assert_eq!(i1.materialize(id), i2.materialize(id), "{id:?}");
+        }
+    }
+
+    #[test]
+    fn apply_patches_only_clustered_ranges() {
+        // overlap semantics: the pool may train past the snapshot; apply
+        // must overwrite ONLY the clustered subtable ranges and keep the
+        // drifted values everywhere else (identity feature 0 here)
+        let (mut state, field, mut ix) = setup();
+        let snapshot = state[..field.size].to_vec();
+        let computed = compute_cluster(&snapshot, &ix, &cfg());
+        // drift the live pool as if training continued
+        for v in state[..field.size].iter_mut() {
+            *v += 1.5;
+        }
+        let drifted = state[..field.size].to_vec();
+        apply_cluster(&mut state[..field.size], &mut ix, computed);
+        let plan = ix.plan.clone();
+        let dc = plan.dc;
+        // feature 0 (identity, never clustered) keeps the drifted values
+        for t in 0..plan.t {
+            for j in 0..plan.c {
+                let id = SubtableId { feature: 0, term: t, column: j };
+                let base = plan.subtable_base(id);
+                let rows = plan.subtable_rows(0);
+                assert_eq!(
+                    state[base * dc..(base + rows) * dc],
+                    drifted[base * dc..(base + rows) * dc],
+                    "unclustered range {id:?} was touched by apply"
+                );
+            }
+        }
+        // feature 1 helpers zeroed, term 0 rewritten from the SNAPSHOT's
+        // clustering (not the drifted pool)
+        let k = plan.subtable_rows(1);
+        for j in 0..plan.c {
+            let helper = SubtableId { feature: 1, term: 1, column: j };
+            let hb = plan.subtable_base(helper);
+            assert!(state[hb * dc..(hb + k) * dc].iter().all(|&x| x == 0.0), "helper {j}");
+            let main = SubtableId { feature: 1, term: 0, column: j };
+            let mb = plan.subtable_base(main);
+            assert_ne!(
+                state[mb * dc..(mb + k) * dc],
+                drifted[mb * dc..(mb + k) * dc],
+                "main {j} not rewritten"
+            );
         }
     }
 

@@ -9,5 +9,7 @@ pub mod pipeline;
 pub mod serve;
 pub mod trainer;
 
-pub use cluster::{cluster_event, ClusterConfig, ClusterOutcome};
+pub use cluster::{
+    apply_cluster, cluster_event, compute_cluster, ClusterComputed, ClusterConfig, ClusterOutcome,
+};
 pub use trainer::{train, Checkpoint, TrainOutcome};

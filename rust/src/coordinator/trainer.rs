@@ -5,18 +5,38 @@
 //! This is the paper's Algorithm 3 embedded in a DLRM training run: the
 //! `ct`/`cf` schedule (Figure 9's strategy space) decides *when* the
 //! clustering events fire; `coordinator::cluster` decides *what* they do.
+//!
+//! Clustering events run in one of two modes:
+//!
+//!   * **synchronous** (default, deterministic): the step loop stalls
+//!     while `compute_cluster` + `apply_cluster` run back-to-back against
+//!     the pool field (`pull_field` → cluster → `set_field`; the dense
+//!     layers never cross the transfer API).
+//!   * **overlapped** (`cluster_overlap`): the pool snapshot + an
+//!     `Indexer` clone go to a persistent `BackgroundWorker`; training
+//!     continues on the old maps, and at the first step boundary where
+//!     the job is done the new maps/centroids are applied against the
+//!     CURRENT pool. The steps trained on stale maps are recorded per
+//!     event in `TrainOutcome::cluster_stale_steps`; only the snapshot
+//!     and apply moments stall the loop. Outputs depend on job timing,
+//!     so this mode trades the synchronous path's bit-reproducibility
+//!     for stall-free events.
 
 use crate::config::TrainConfig;
-use crate::coordinator::cluster::{cluster_event, ClusterConfig};
+use crate::coordinator::cluster::{
+    apply_cluster, compute_cluster, ClusterComputed, ClusterConfig, ClusterOutcome,
+};
 use crate::coordinator::eval::evaluate;
 use crate::coordinator::pipeline::BatchPipeline;
 use crate::data::batch::Split;
 use crate::data::synthetic::SyntheticDataset;
+use crate::runtime::manifest::FieldDesc;
 use crate::runtime::session::{DlrmSession, EmbInput};
 use crate::runtime::ArtifactStore;
 use crate::tables::indexer::{Indexer, MethodKind};
 use crate::tables::init::init_state;
 use crate::tables::layout::TablePlan;
+use crate::util::threadpool::{BackgroundWorker, JobHandle};
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 use std::time::Instant;
@@ -52,19 +72,61 @@ pub struct TrainOutcome {
     pub test_auc: f64,
     pub epochs_run: usize,
     pub steps_run: usize,
+    /// REAL samples trained (padded duplicates in each epoch's final
+    /// batch excluded) — the honest numerator for `throughput`
+    pub samples_trained: usize,
+    /// clustering events whose maps actually landed (an overlapped event
+    /// abandoned at end of training because the best checkpoint
+    /// supersedes it is not counted)
     pub clusterings_run: usize,
+    /// per applied event: steps trained on stale maps between the
+    /// event's pool snapshot and its apply (all zeros in synchronous
+    /// mode); always `clusterings_run` entries long
+    pub cluster_stale_steps: Vec<usize>,
     /// embedding parameter count (Table 1 accounting)
     pub embedding_params: usize,
     /// paper compression measures
     pub compression_total: f64,
     pub compression_largest: f64,
     pub train_secs: f64,
+    /// wall time the STEP LOOP was stalled on clustering (sync: the whole
+    /// event; overlapped: just the snapshot + apply moments)
     pub cluster_secs: f64,
+    /// total event wall time, snapshot → apply (== `cluster_secs` in
+    /// synchronous mode; larger in overlapped mode, where the compute
+    /// share runs concurrently with training)
+    pub cluster_event_secs: f64,
     /// samples/sec over the training phase (excludes eval + clustering)
     pub throughput: f64,
     /// the best-validation (state, indexer) pair — what serving should
     /// bake; always `Some` after `train` returns Ok
     pub best_checkpoint: Option<Checkpoint>,
+}
+
+/// An overlapped clustering event in flight: the background compute job
+/// plus the bookkeeping needed to apply it and account staleness.
+struct PendingCluster {
+    handle: JobHandle<ClusterComputed>,
+    /// global step at which the pool was snapshotted
+    started_step: usize,
+    /// wall clock at snapshot start (event wall time = snapshot → apply)
+    started_at: Instant,
+}
+
+/// Apply a computed clustering against the CURRENT device state: patch
+/// the pool field (only the clustered subtable ranges change) and swap
+/// the live maps. Shared by the synchronous path, the overlapped apply at
+/// a step boundary, and the end-of-training drain.
+fn apply_computed(
+    session: &mut DlrmSession,
+    pool: &FieldDesc,
+    indexer: &mut Indexer,
+    computed: ClusterComputed,
+) -> Result<ClusterOutcome> {
+    let mut pool_data = session.pull_field(pool)?;
+    let res = apply_cluster(&mut pool_data, indexer, computed);
+    session.set_field(pool, &pool_data)?;
+    Ok(res)
 }
 
 /// Build the indexer an artifact's manifest calls for.
@@ -150,11 +212,21 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
     // clustering events rewrite both, and they are only valid together
     let mut best_state: Option<(Vec<f32>, Indexer)> = None;
     let mut global_step = 0usize;
+    let mut samples_trained = 0usize;
     let mut last_metrics = (0f64, 0f64); // (loss_sum, examples) at last curve sample
     let mut prev_epoch_best = f64::INFINITY;
     let t_start = Instant::now();
     let mut eval_secs = 0f64;
     let pool_field = m.layout.iter().find(|f| f.name == "pool").cloned();
+
+    // overlapped clustering: one persistent background worker, at most
+    // one event in flight; the compute job leaves a core for the step
+    // loop it overlaps with
+    let cluster_worker =
+        (cfg.cluster_overlap && clustering_enabled).then(|| BackgroundWorker::new("cluster"));
+    let overlap_threads =
+        crate::util::threadpool::default_threads().saturating_sub(1).max(1);
+    let mut pending: Option<PendingCluster> = None;
 
     'epochs: for epoch in 0..cfg.epochs {
         out.epochs_run = epoch + 1;
@@ -188,32 +260,97 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
             }
             global_step += 1;
             batch_in_epoch += 1;
+            samples_trained += b.real;
+
+            // apply a finished overlapped event at this step boundary
+            // BEFORE deciding whether a new event is due — a boundary
+            // that coincides with a just-finished job must free the
+            // in-flight slot, not skip the scheduled event
+            if let Some(mut p) = pending.take() {
+                match p.handle.try_join() {
+                    Some(computed) => {
+                        let t0 = Instant::now();
+                        let pf =
+                            pool_field.as_ref().expect("rowwise artifact without pool field");
+                        let mut res = apply_computed(&mut session, pf, &mut indexer, computed)?;
+                        res.stale_steps = global_step - p.started_step;
+                        out.cluster_stale_steps.push(res.stale_steps);
+                        out.cluster_secs += t0.elapsed().as_secs_f64();
+                        out.cluster_event_secs += p.started_at.elapsed().as_secs_f64();
+                        log::info!(
+                            "clustering #{} applied at step {global_step}: {} subtables, \
+                             inertia {:.3e}, {} steps on stale maps",
+                            out.clusterings_run,
+                            res.subtables_clustered,
+                            res.total_inertia,
+                            res.stale_steps
+                        );
+                    }
+                    None => pending = Some(p),
+                }
+            }
 
             // CCE clustering event
             if clustering_enabled
                 && out.clusterings_run < cfg.cluster_times
                 && global_step % cluster_every == 0
             {
-                let t0 = Instant::now();
-                let mut state = session.pull_state()?;
                 let pf = pool_field.as_ref().expect("rowwise artifact without pool field");
                 let cc = ClusterConfig {
                     kmeans_iters: cfg.kmeans_iters,
                     points_per_centroid: cfg.kmeans_points_per_centroid,
                     seed: cfg.seed ^ 0xC1C ^ out.clusterings_run as u64,
-                    n_threads: 0,
+                    n_threads: if cluster_worker.is_some() { overlap_threads } else { 0 },
                 };
-                let res = cluster_event(&mut state, pf, &mut indexer, &cc);
-                session.set_state(&state)?;
-                out.clusterings_run += 1;
-                out.cluster_secs += t0.elapsed().as_secs_f64();
-                log::info!(
-                    "clustering #{} at step {global_step}: {} subtables, inertia {:.3e}, {:.2}s",
-                    out.clusterings_run,
-                    res.subtables_clustered,
-                    res.total_inertia,
-                    res.elapsed_secs
-                );
+                if let Some(worker) = &cluster_worker {
+                    if pending.is_none() {
+                        // overlapped: snapshot the pool + clone the maps,
+                        // hand both to the background job, keep training
+                        let t0 = Instant::now();
+                        let pool = session.pull_field(pf)?;
+                        let ix_snapshot = indexer.clone();
+                        let handle =
+                            worker.submit(move || compute_cluster(&pool, &ix_snapshot, &cc));
+                        out.clusterings_run += 1;
+                        out.cluster_secs += t0.elapsed().as_secs_f64();
+                        pending = Some(PendingCluster {
+                            handle,
+                            started_step: global_step,
+                            started_at: t0,
+                        });
+                        log::info!(
+                            "clustering #{} snapshotted at step {global_step} (overlapped)",
+                            out.clusterings_run
+                        );
+                    } else {
+                        log::warn!(
+                            "clustering due at step {global_step} but the previous event \
+                             is still computing; skipping this boundary"
+                        );
+                    }
+                } else {
+                    // synchronous: compute + apply back-to-back on the one
+                    // held pool copy; only the pool field crosses the
+                    // transfer API
+                    let t0 = Instant::now();
+                    let mut pool = session.pull_field(pf)?;
+                    let computed = compute_cluster(&pool, &indexer, &cc);
+                    let res = apply_cluster(&mut pool, &mut indexer, computed);
+                    session.set_field(pf, &pool)?;
+                    out.clusterings_run += 1;
+                    out.cluster_stale_steps.push(0);
+                    let stall = t0.elapsed().as_secs_f64();
+                    out.cluster_secs += stall;
+                    out.cluster_event_secs += stall;
+                    log::info!(
+                        "clustering #{} at step {global_step}: {} subtables, \
+                         inertia {:.3e}, {:.2}s",
+                        out.clusterings_run,
+                        res.subtables_clustered,
+                        res.total_inertia,
+                        res.elapsed_secs
+                    );
+                }
             }
 
             // periodic validation + train-curve sampling
@@ -252,8 +389,51 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
         prev_epoch_best = epoch_best;
     }
     out.steps_run = global_step;
-    out.train_secs = t_start.elapsed().as_secs_f64() - eval_secs - out.cluster_secs;
-    out.throughput = (global_step * batch) as f64 / out.train_secs.max(1e-9);
+    out.samples_trained = samples_trained;
+    // clamp: a short eval-dominated run must not report negative time
+    out.train_secs =
+        (t_start.elapsed().as_secs_f64() - eval_secs - out.cluster_secs).max(0.0);
+    // true samples, not `steps × batch`: the padded duplicates in each
+    // epoch's final batch are trained on but must not inflate throughput;
+    // a clamped (unmeasurable) training time reports 0, not samples/1e-9
+    out.throughput =
+        if out.train_secs > 0.0 { samples_trained as f64 / out.train_secs } else { 0.0 };
+
+    // an overlapped event still in flight when training ended
+    if let Some(p) = pending.take() {
+        if best_state.is_none() {
+            // no eval point was reached, so the FINAL state becomes the
+            // checkpoint: block and apply so it carries the computed maps
+            let t0 = Instant::now();
+            let computed = p.handle.join();
+            let pf = pool_field.as_ref().expect("rowwise artifact without pool field");
+            apply_computed(&mut session, pf, &mut indexer, computed)?;
+            let stale = global_step - p.started_step;
+            out.cluster_stale_steps.push(stale);
+            out.cluster_secs += t0.elapsed().as_secs_f64();
+            out.cluster_event_secs += p.started_at.elapsed().as_secs_f64();
+            log::info!(
+                "clustering #{} applied after training ended ({stale} steps on stale maps)",
+                out.clusterings_run
+            );
+        } else {
+            // the best checkpoint supersedes the final state — applying
+            // here would be overwritten by the restore below, so don't
+            // stall on the background job just to discard its result
+            // (the worker's Drop still waits for the thread to finish).
+            // The event never completed: take it back out of the applied
+            // count so `clusterings_run`/`cluster_stale_steps` only report
+            // clusterings whose maps actually landed; its wall time still
+            // counts (its snapshot stall went into cluster_secs at submit).
+            out.clusterings_run -= 1;
+            out.cluster_event_secs += p.started_at.elapsed().as_secs_f64();
+            log::info!(
+                "clustering event still in flight at end of training; superseded by the \
+                 best checkpoint, not applied ({} steps since its snapshot)",
+                global_step - p.started_step
+            );
+        }
+    }
 
     // restore the best (state, maps) checkpoint and evaluate on test; the
     // checkpoint rides out on the outcome so `cce serve` can bake the

@@ -73,12 +73,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     t.row(vec!["best val BCE".into(), format!("{:.5}", out.best_val_bce)]);
     t.row(vec!["epochs".into(), out.epochs_run.to_string()]);
     t.row(vec!["steps".into(), out.steps_run.to_string()]);
+    t.row(vec!["samples trained".into(), out.samples_trained.to_string()]);
     t.row(vec!["clusterings".into(), out.clusterings_run.to_string()]);
+    if cfg.cluster_overlap && !out.cluster_stale_steps.is_empty() {
+        t.row(vec![
+            "stale steps / event".into(),
+            out.cluster_stale_steps
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(", "),
+        ]);
+    }
     t.row(vec!["embedding params".into(), out.embedding_params.to_string()]);
     t.row(vec!["compression (total)".into(), format!("{:.1}x", out.compression_total)]);
     t.row(vec!["compression (largest)".into(), format!("{:.1}x", out.compression_largest)]);
     t.row(vec!["throughput".into(), format!("{:.0} samples/s", out.throughput)]);
-    t.row(vec!["cluster time".into(), format!("{:.2}s", out.cluster_secs)]);
+    t.row(vec![
+        "cluster time".into(),
+        format!("{:.2}s stalled / {:.2}s total", out.cluster_secs, out.cluster_event_secs),
+    ]);
     t.print();
     Ok(())
 }

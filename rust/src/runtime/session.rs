@@ -2,11 +2,20 @@
 //!
 //! Owns the state device buffer and chains `execute_b` step-to-step with
 //! no host round-trips; metrics come from the tiny `readout` executable.
+//! `pull_field`/`set_field` move single layout fields (clustering events
+//! only touch the pool field, never the dense-layer share) with a
+//! generation-tagged download cache so a field round trip costs the same
+//! one download + one upload as the full-state pair. NOTE: the PJRT
+//! wrapper only exposes whole-buffer transfers and the state is one
+//! device buffer, so the full state still crosses the wire internally —
+//! the field API bounds what callers see/copy host-side and is the seam
+//! a future per-field buffer split would slot into (ROADMAP "true
+//! partial state transfer").
 //! Every call validates input sizes/dtypes against the manifest FIRST —
 //! PJRT aborts the process on shape mismatch (DESIGN.md §7.2), so the
 //! validation here is what turns config bugs into `Err` instead of SIGABRT.
 
-use crate::runtime::manifest::{DType, Manifest};
+use crate::runtime::manifest::{DType, FieldDesc, Manifest};
 use crate::runtime::ArtifactStore;
 use anyhow::{anyhow, bail, Result};
 
@@ -24,6 +33,15 @@ pub struct DlrmSession {
     state: Option<xla::PjRtBuffer>,
     /// steps executed since the last `set_state`
     pub steps_since_upload: u64,
+    /// device-state version: bumped by every mutation (`set_state`,
+    /// `set_field`, `train_step`); tags `pull_cache` entries
+    generation: u64,
+    /// full-state download kept between a `pull_field` and the `set_field`
+    /// that finishes a field-ranged round trip, so the pair costs one
+    /// download + one upload (same as `pull_state`/`set_state`) while the
+    /// caller only ever holds the field-sized slice. Invalidated whenever
+    /// the device state advances.
+    pull_cache: std::cell::RefCell<Option<(u64, Vec<f32>)>>,
 }
 
 impl DlrmSession {
@@ -34,7 +52,16 @@ impl DlrmSession {
         let train = store.compile(&manifest, "train")?;
         let predict = store.compile(&manifest, "predict")?;
         let readout = store.compile(&manifest, "readout")?;
-        Ok(DlrmSession { manifest, train, predict, readout, state: None, steps_since_upload: 0 })
+        Ok(DlrmSession {
+            manifest,
+            train,
+            predict,
+            readout,
+            state: None,
+            steps_since_upload: 0,
+            generation: 0,
+            pull_cache: std::cell::RefCell::new(None),
+        })
     }
 
     /// Upload a fresh state vector (initialization or post-clustering).
@@ -51,6 +78,8 @@ impl DlrmSession {
             Ok(c.buffer_from_host_buffer(state, &[state.len()], None)?)
         })?);
         self.steps_since_upload = 0;
+        self.generation += 1;
+        *self.pull_cache.get_mut() = None;
         Ok(())
     }
 
@@ -58,6 +87,72 @@ impl DlrmSession {
     pub fn pull_state(&self) -> Result<Vec<f32>> {
         let buf = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
         Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+    }
+
+    /// A layout field passed by the caller must be the manifest's own
+    /// description of that field — a stale/mismatched descriptor would
+    /// silently read or patch the wrong state range.
+    fn validate_field(&self, field: &FieldDesc) -> Result<()> {
+        let d = self.manifest.field(&field.name)?;
+        if d.offset != field.offset || d.size != field.size {
+            bail!(
+                "field {:?} (offset {}, size {}) does not match artifact {} layout \
+                 (offset {}, size {})",
+                field.name,
+                field.offset,
+                field.size,
+                self.manifest.name,
+                d.offset,
+                d.size
+            );
+        }
+        Ok(())
+    }
+
+    /// Download ONE layout field (e.g. the embedding pool around a
+    /// clustering event) instead of the whole state vector. The caller
+    /// only ever sees the field-sized slice; the full download backing it
+    /// is cached (tagged with the state generation) so a following
+    /// `set_field` finishes the round trip without a second download.
+    pub fn pull_field(&self, field: &FieldDesc) -> Result<Vec<f32>> {
+        self.validate_field(field)?;
+        let range = field.offset..field.offset + field.size;
+        {
+            let cache = self.pull_cache.borrow();
+            if let Some((gen, full)) = cache.as_ref() {
+                if *gen == self.generation {
+                    return Ok(full[range].to_vec());
+                }
+            }
+        }
+        let full = self.pull_state()?;
+        let out = full[range.clone()].to_vec();
+        *self.pull_cache.borrow_mut() = Some((self.generation, full));
+        Ok(out)
+    }
+
+    /// Patch ONE layout field and re-upload; every other field keeps its
+    /// current device value. Completes the `pull_field` → mutate →
+    /// `set_field` round trip of a clustering event: only the field data
+    /// crosses the API, and the cached download (if still current) covers
+    /// the untouched remainder of the state.
+    pub fn set_field(&mut self, field: &FieldDesc, data: &[f32]) -> Result<()> {
+        self.validate_field(field)?;
+        if data.len() != field.size {
+            bail!(
+                "field {:?} patch has {} elements, expected {}",
+                field.name,
+                data.len(),
+                field.size
+            );
+        }
+        let cached = self.pull_cache.get_mut().take();
+        let mut full = match cached {
+            Some((gen, full)) if gen == self.generation => full,
+            _ => self.pull_state()?,
+        };
+        full[field.offset..field.offset + field.size].copy_from_slice(data);
+        self.set_state(&full)
     }
 
     fn validate(&self, exec: &str, name: &str, dtype: DType, len: usize) -> Result<()> {
@@ -124,6 +219,8 @@ impl DlrmSession {
             .ok_or_else(|| anyhow!("train step returned no buffers"))?;
         self.state = Some(new_state);
         self.steps_since_upload += 1;
+        self.generation += 1;
+        *self.pull_cache.get_mut() = None;
         Ok(())
     }
 

@@ -5,6 +5,10 @@
 //!     synthetic data generation, linalg).
 //!   * `par_for_each_dynamic` / `par_map` / `par_map_with` — dynamic work
 //!     queues for uneven item costs (per-feature K-means jobs).
+//!   * `BackgroundWorker` — a long-lived worker thread with a
+//!     submit/`try_join` handle API, used by the trainer to run clustering
+//!     events concurrently with training (ROADMAP "persistent worker
+//!     pool"; heavy jobs fan out internally through `par_map_with`).
 //!   * long-lived worker threads with bounded channels live in
 //!     `coordinator::pipeline`, built on std primitives directly.
 //!
@@ -16,6 +20,7 @@
 //! the queue counter and the scope join.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 
 /// Number of worker threads to use by default (cores, capped).
 pub fn default_threads() -> usize {
@@ -160,6 +165,103 @@ where
     out
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived background worker thread with a submit/`try_join` API.
+///
+/// Jobs run in submission order on one persistent OS thread; a heavy job
+/// (e.g. a clustering event's compute phase) may itself fan out through
+/// `par_map_with`/`scope_chunks`. This is the seed of the ROADMAP
+/// "persistent worker pool" item: one thread, zero per-job spawn cost,
+/// results delivered through per-job [`JobHandle`]s. Dropping the worker
+/// closes the queue and joins the thread after in-flight jobs finish.
+pub struct BackgroundWorker {
+    tx: Option<Sender<Job>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BackgroundWorker {
+    pub fn new(name: &str) -> BackgroundWorker {
+        let (tx, rx) = channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name(format!("bg-{name}"))
+            .spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            })
+            .expect("spawning background worker thread");
+        BackgroundWorker { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Queue a job; the returned handle yields its result exactly once
+    /// (via `try_join` or `join`). Abandoning the handle is fine — the
+    /// job still runs, its result is dropped.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let job: Job = Box::new(move || {
+            // the handle may have been dropped; ignore the send error
+            let _ = tx.send(f());
+        });
+        self.tx
+            .as_ref()
+            .expect("background worker already shut down")
+            .send(job)
+            .expect("background worker thread died");
+        JobHandle { rx, finished: false }
+    }
+}
+
+impl Drop for BackgroundWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the queue so the loop exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Result slot of one [`BackgroundWorker::submit`] call.
+pub struct JobHandle<T> {
+    rx: Receiver<T>,
+    /// set once the result has been taken, so further polls return
+    /// `None` instead of misreading the closed channel as a dead job
+    finished: bool,
+}
+
+impl<T> JobHandle<T> {
+    /// Non-blocking poll: `Some(result)` exactly once when the job has
+    /// finished, `None` while it is still queued or running (and on any
+    /// poll after the result was taken). Panics if the job itself
+    /// panicked (its result can never arrive).
+    pub fn try_join(&mut self) -> Option<T> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(v) => {
+                self.finished = true;
+                Some(v)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                panic!("background job died before producing a result")
+            }
+        }
+    }
+
+    /// Block until the job finishes and return its result. Panics if the
+    /// job panicked or its result was already taken via `try_join`.
+    pub fn join(self) -> T {
+        assert!(!self.finished, "job result already taken via try_join");
+        self.rx.recv().expect("background job died before producing a result")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -239,5 +341,60 @@ mod tests {
         for threads in [1, 2, 5, 16] {
             assert_eq!(par_map(123, threads, |i| i + 7), want);
         }
+    }
+
+    #[test]
+    fn background_worker_returns_results_per_job() {
+        let w = BackgroundWorker::new("test");
+        let h1 = w.submit(|| 6 * 7);
+        let h2 = w.submit(|| "done".to_string());
+        assert_eq!(h1.join(), 42);
+        assert_eq!(h2.join(), "done");
+    }
+
+    #[test]
+    fn background_worker_try_join_polls_without_blocking() {
+        let w = BackgroundWorker::new("test");
+        // gate the job on a channel so the first poll observes "running"
+        let (gate_tx, gate_rx) = channel::<()>();
+        let mut h = w.submit(move || {
+            gate_rx.recv().unwrap();
+            123usize
+        });
+        assert!(h.try_join().is_none(), "job cannot finish before the gate opens");
+        gate_tx.send(()).unwrap();
+        // poll until the result lands (deadline only to bound a deadlock)
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let mut got = None;
+        while got.is_none() && std::time::Instant::now() < deadline {
+            got = h.try_join();
+            std::thread::yield_now();
+        }
+        assert_eq!(got, Some(123));
+        // polling again after the result was taken is a no-op, not a panic
+        assert!(h.try_join().is_none());
+    }
+
+    #[test]
+    fn background_worker_runs_jobs_in_submission_order() {
+        let w = BackgroundWorker::new("test");
+        let log = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let log = log.clone();
+                w.submit(move || log.lock().unwrap().push(i))
+            })
+            .collect();
+        for h in handles {
+            h.join();
+        }
+        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn background_worker_drop_joins_cleanly_with_abandoned_handle() {
+        let w = BackgroundWorker::new("test");
+        let _ = w.submit(|| vec![0u8; 64]); // handle dropped immediately
+        drop(w); // must not hang or panic
     }
 }

@@ -44,7 +44,23 @@ for r in results:
     assert isinstance(r.get("name"), str) and r["name"], f"result without name: {r}"
     for key in ("mean_ns", "p50_ns", "min_ns"):
         assert isinstance(r.get(key), (int, float)) and r[key] >= 0, f"bad {key}: {r}"
-print(f"BENCH_cluster.json OK ({len(results)} results, mode={doc['mode']})")
+
+# sync-vs-overlap group: every row must carry the stall/staleness fields
+ov = [r for r in results if r.get("group") == "sync_vs_overlap"]
+assert len(ov) >= 2, f"sync_vs_overlap group missing or incomplete: {len(ov)} rows"
+for r in ov:
+    for key in ("stall_ns", "event_wall_ns", "stale_steps"):
+        assert isinstance(r.get(key), (int, float)) and r[key] >= 0, \
+            f"sync_vs_overlap row missing {key}: {r}"
+sync = [r for r in ov if " sync (" in r["name"]]
+over = [r for r in ov if " overlap (" in r["name"]]
+assert sync and over, f"need both sync and overlap rows: {[r['name'] for r in ov]}"
+assert min(r["stall_ns"] for r in over) < min(r["stall_ns"] for r in sync), \
+    "overlapped event did not reduce the per-event stall"
+assert all(r["stale_steps"] >= 1 for r in over), "overlap rows must report staleness"
+print(f"BENCH_cluster.json OK ({len(results)} results, mode={doc['mode']}, "
+      f"overlap stall {min(r['stall_ns'] for r in over)/1e6:.2f} ms vs "
+      f"sync {min(r['stall_ns'] for r in sync)/1e6:.2f} ms)")
 PY
 fi
 

@@ -468,22 +468,32 @@ fn prop_cluster_event_invariant_across_thread_counts() {
         };
         let (mut s1, f1, mut i1) = mk();
         let o1 = cluster_event(&mut s1, &f1, &mut i1, &cfg(1));
-        let threads = g.usize(2..9);
-        let (mut s2, f2, mut i2) = mk();
-        let o2 = cluster_event(&mut s2, &f2, &mut i2, &cfg(threads));
-        prop::prop_assert!(g, s1 == s2, "state diverged at {threads} threads");
-        prop::prop_assert!(
-            g,
-            o1.total_inertia == o2.total_inertia
-                && o1.subtables_clustered == o2.subtables_clustered,
-            "outcome diverged at {threads} threads"
-        );
-        for id in plan.subtables() {
+        // a random thread count plus RAGGED splits derived from the job
+        // count (threads % jobs != 0): the remainder spreads over the
+        // first jobs and must not move a bit either
+        let n_jobs = (0..n_features).filter(|&f| vocabs[f] > plan.k[f]).count() * c;
+        let mut sweep = vec![g.usize(2..9)];
+        if n_jobs > 0 {
+            sweep.push((n_jobs + 1).min(16));
+            sweep.push((2 * n_jobs + 1).min(16));
+        }
+        for threads in sweep {
+            let (mut s2, f2, mut i2) = mk();
+            let o2 = cluster_event(&mut s2, &f2, &mut i2, &cfg(threads));
+            prop::prop_assert!(g, s1 == s2, "state diverged at {threads} threads");
             prop::prop_assert!(
                 g,
-                i1.materialize(id) == i2.materialize(id),
-                "map {id:?} diverged at {threads} threads"
+                o1.total_inertia == o2.total_inertia
+                    && o1.subtables_clustered == o2.subtables_clustered,
+                "outcome diverged at {threads} threads ({n_jobs} jobs)"
             );
+            for id in plan.subtables() {
+                prop::prop_assert!(
+                    g,
+                    i1.materialize(id) == i2.materialize(id),
+                    "map {id:?} diverged at {threads} threads"
+                );
+            }
         }
     });
 }
