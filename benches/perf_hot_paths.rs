@@ -2,36 +2,118 @@
 //!
 //!   L3: index generation (rowwise/robe/dhe), batch generation, K-means,
 //!       AUC, matmul — the coordinator-side costs.
+//!   Serving: baked snapshot vs live indexer, engine throughput vs
+//!       skew × workers, and the on-disk segment loop — cold start
+//!       (bake vs zero-copy mmap load), owned-vs-mapped throughput
+//!       parity, and hot-swap pause p99 under load.
 //!   Runtime: chained train-step latency + throughput per impl
 //!       (pallas vs reference lowering), predict latency, kmeans offload
 //!       (rust vs PJRT HLO Lloyd step).
 //!
 //! Printed as mean ± std so before/after deltas in the §Perf log are
-//! directly comparable.
+//! directly comparable. The serving-segment group also lands in
+//! `bench_results/BENCH_serving.json` (schema `cce.perf_serving.v1`) so
+//! cold-start and swap-pause are machine-trackable; `scripts/verify.sh`
+//! smoke-runs this bench (`--smoke`) and fails if `cold_start_ns` /
+//! `swap_pause_ns` go missing or the mmap load stops beating the bake.
+//!
+//! The segment group and all L3 groups are store-independent (shapes are
+//! inlined); groups needing compiled artifacts are skipped without
+//! `make artifacts`.
 
 use cce::data::batch::{BatchIter, Split};
+use cce::data::synthetic::DatasetSpec;
 use cce::data::SyntheticDataset;
 use cce::experiments::report::Table;
 use cce::kmeans::{kmeans, KmeansConfig};
 use cce::runtime::session::EmbInput;
 use cce::runtime::{ArtifactStore, DlrmSession};
-use cce::serving::{self, CountingExecutor, EngineConfig, ServingSnapshot, TrafficGen};
+use cce::serving::{
+    self, segment, CountingExecutor, EngineConfig, ServingSnapshot, SnapshotSlot, TrafficGen,
+};
 use cce::tables::indexer::Indexer;
 use cce::tables::layout::{SubtableId, TablePlan};
-use cce::util::timer::{bench, bench_for, fmt_ns};
-use cce::util::Rng;
-use std::time::Duration;
+use cce::util::timer::{bench, bench_for, fmt_ns, TimingStats};
+use cce::util::{Json, Rng};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Mirrors `python/compile/specs.py::KAGGLE_SMALL_VOCABS` — inlined so the
+/// bench runs without `make artifacts` (shapes only; no manifest reads).
+const KAGGLE_SMALL_VOCABS: [usize; 26] = [
+    3, 10, 27, 64, 120, 256, 540, 1_000, 1_450, 2_048, 3_000, 4_096, 6_000, 8_192, 10_000,
+    14_000, 20_000, 27_000, 40_000, 55_000, 80_000, 120_000, 160_000, 220_000, 300_000, 420_000,
+];
+
+/// Mirrors `specs.py::TERABYTE_SIM_VOCABS`: one binary-order larger tails.
+fn terabyte_sim_vocabs() -> Vec<usize> {
+    KAGGLE_SMALL_VOCABS
+        .iter()
+        .map(|&v| if v < 1000 { v } else { (v * 4).min(1_200_000) })
+        .collect()
+}
+
+/// A synthetic dataset over the bench vocabs, so `TrafficGen`/`BatchIter`
+/// run without the artifact store's preset index.
+fn bench_dataset(vocabs: &[usize]) -> SyntheticDataset {
+    SyntheticDataset::new(DatasetSpec {
+        name: "bench".into(),
+        vocabs: vocabs.to_vec(),
+        n_dense: 13,
+        train_samples: 10_000,
+        val_samples: 1_000,
+        test_samples: 10_000,
+        latent_clusters: 8,
+        zipf_exponent: 1.05,
+        label_noise: 0.05,
+        seed: 0,
+    })
+}
+
+/// A rowwise indexer with half the term-0 subtables learned, so the baked
+/// tables cover the post-clustering map mix a deployed CCE model has.
+fn bench_indexer(vocabs: &[usize], cap: usize) -> Indexer {
+    let plan = TablePlan::new(vocabs, cap, 2, 4, 4);
+    let mut rng = Rng::new(0xBA5E);
+    let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
+    for f in (0..vocabs.len()).step_by(2) {
+        if plan.vocabs[f] > plan.k[f] {
+            let assignments: Vec<u32> =
+                (0..plan.vocabs[f]).map(|v| (v % plan.k[f]) as u32).collect();
+            ix.set_learned(SubtableId { feature: f, term: 0, column: 0 }, assignments);
+        }
+    }
+    ix
+}
+
+fn stat_json(name: &str, s: &TimingStats, extra: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::from(name));
+    m.insert("mean_ns".to_string(), Json::from(s.mean_ns));
+    m.insert("std_ns".to_string(), Json::from(s.std_ns));
+    m.insert("min_ns".to_string(), Json::from(s.min_ns));
+    m.insert("p50_ns".to_string(), Json::from(s.p50_ns));
+    m.insert("n".to_string(), Json::from(s.n));
+    for (k, v) in extra {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
 
 fn main() -> anyhow::Result<()> {
     cce::util::logger::init();
-    let store = ArtifactStore::open(ArtifactStore::default_dir())?;
-    let mut t = Table::new("perf — hot paths", &["path", "timing", "derived"]);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let store = ArtifactStore::open(ArtifactStore::default_dir()).ok();
+    if store.is_none() {
+        log::warn!("artifact store unavailable; skipping session-backed groups");
+    }
+    let mode = if smoke { " (smoke)" } else { "" };
+    let mut t = Table::new(&format!("perf — hot paths{mode}"), &["path", "timing", "derived"]);
+    let mut results: Vec<Json> = Vec::new();
 
     // ---------------- L3: index generation ------------------------------
-    let vocabs: Vec<usize> = cce::data::SyntheticDataset::new(store.dataset("kaggle_small", 0)?)
-        .spec
-        .vocabs
-        .clone();
+    let vocabs: Vec<usize> = KAGGLE_SMALL_VOCABS.to_vec();
     let mut rng = Rng::new(0);
     let b = 256usize;
     let f = vocabs.len();
@@ -73,22 +155,13 @@ fn main() -> anyhow::Result<()> {
     // ---------------- serving: baked snapshot vs live indexer ----------
     {
         let plan = TablePlan::new(&vocabs, 4096, 2, 4, 4);
-        let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
-        // learn half the term-0 subtables so the baked path covers the
-        // post-clustering map mix a deployed CCE model actually has
-        for f in (0..vocabs.len()).step_by(2) {
-            if plan.vocabs[f] > plan.k[f] {
-                let assignments: Vec<u32> =
-                    (0..plan.vocabs[f]).map(|v| (v % plan.k[f]) as u32).collect();
-                ix.set_learned(SubtableId { feature: f, term: 0, column: 0 }, assignments);
-            }
-        }
+        let ix = bench_indexer(&vocabs, 4096);
         let snap = ServingSnapshot::bake(&ix);
         let mut out = vec![0i32; b * f * 2 * 4];
         let s_live = bench(3, 50, || ix.fill_rowwise(&cats, b, &mut out));
         let s_baked = bench(3, 50, || snap.fill_rowwise(&cats, b, &mut out));
         t.row(vec![
-            "serving: index gen LIVE indexer (B=256, T=2, c=4)".into(),
+            format!("serving: index gen LIVE indexer (B=256, T={}, c={})", plan.t, plan.c),
             s_live.display(),
             format!("{:.1} M idx/s", (b * f * 8) as f64 / s_live.mean_ns * 1e3),
         ]);
@@ -104,13 +177,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---------------- serving: engine throughput vs skew × workers ------
+    let requests = if smoke { 4_000 } else { 20_000 };
     {
-        let ds = SyntheticDataset::new(store.dataset("kaggle_small", 0)?);
-        let mut rng = Rng::new(7);
-        let plan = TablePlan::new(&ds.spec.vocabs, 4096, 2, 4, 4);
-        let ix = Indexer::new_rowwise(&mut rng, plan);
-        let snap = ServingSnapshot::bake(&ix);
-        let requests = 20_000;
+        let ds = bench_dataset(&vocabs);
+        let ix = bench_indexer(&vocabs, 4096);
+        let slot = SnapshotSlot::new(ServingSnapshot::bake(&ix));
         for skew in [0.0f64, 0.99] {
             for workers in [1usize, 4] {
                 let cfg = EngineConfig {
@@ -121,9 +192,12 @@ fn main() -> anyhow::Result<()> {
                 };
                 let mut exec = CountingExecutor::new(256);
                 let traffic = TrafficGen::new(&ds, skew, 11);
-                let rep = serving::run(&mut exec, &snap, traffic, &cfg, requests)?;
+                let rep = serving::run(&mut exec, &slot, traffic, &cfg, requests)?;
                 t.row(vec![
-                    format!("serving: engine zipf={skew} workers={workers} (20k req)"),
+                    format!(
+                        "serving: engine zipf={skew} workers={workers} ({}k req)",
+                        requests / 1000
+                    ),
                     format!(
                         "{:.0}k req/s, p50 {}, p99 {}",
                         rep.throughput_rps / 1e3,
@@ -136,9 +210,191 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---------------- serving: segment cold start (bake vs mmap load) ---
+    // the ISSUE acceptance shape: zero-copy load must beat a fresh bake by
+    // ≥10x at the terabyte-ish preset. Quick loads verify the header only
+    // (O(264 bytes)), which is what keeps cold start O(header) not O(table).
+    let kaggle: Vec<usize> = if smoke {
+        KAGGLE_SMALL_VOCABS.iter().step_by(5).copied().collect()
+    } else {
+        KAGGLE_SMALL_VOCABS.to_vec()
+    };
+    let terabyte: Vec<usize> = if smoke {
+        terabyte_sim_vocabs().into_iter().step_by(7).collect()
+    } else {
+        terabyte_sim_vocabs()
+    };
+    let kaggle_cap = if smoke { 256 } else { 4096 };
+    let presets: [(&str, &[usize], usize); 2] = [
+        ("kaggle-small", &kaggle, kaggle_cap),
+        ("terabyte-ish", &terabyte, if smoke { 512 } else { 2048 }),
+    ];
+    let reps = if smoke { 3 } else { 5 };
+    let mut seg_paths = Vec::new();
+    for &(preset, pvocabs, cap) in &presets {
+        let ix = bench_indexer(pvocabs, cap);
+        let s_bake = {
+            let mut samples = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                std::hint::black_box(ServingSnapshot::bake(&ix));
+                samples.push(t0.elapsed().as_nanos() as f64);
+            }
+            TimingStats::from_samples(samples)
+        };
+        let snap = ServingSnapshot::bake(&ix);
+        let path = std::env::temp_dir()
+            .join(format!("cce_bench_{}_{preset}.cceseg", std::process::id()));
+        let file_bytes = serving::write_segment(&snap, 0, &path)?;
+        let s_load = {
+            let mut samples = Vec::with_capacity(reps);
+            for _ in 0..reps {
+                let t0 = Instant::now();
+                let loaded = segment::load_segment(&path)?;
+                std::hint::black_box(loaded.snapshot.host_bytes());
+                samples.push(t0.elapsed().as_nanos() as f64);
+            }
+            TimingStats::from_samples(samples)
+        };
+        let speedup = s_bake.mean_ns / s_load.mean_ns.max(1.0);
+        let label = format!("segment cold start {preset} (cap={cap})");
+        t.row(vec![
+            label.clone(),
+            format!("load {}", s_load.display()),
+            format!(
+                "bake {} — {speedup:.0}x faster, {:.1} MB mapped",
+                fmt_ns(s_bake.mean_ns),
+                file_bytes as f64 / 1e6
+            ),
+        ]);
+        results.push(stat_json(
+            &label,
+            &s_load,
+            vec![
+                ("group", Json::from("cold_start")),
+                ("preset", Json::from(preset)),
+                ("cold_start_ns", Json::from(s_load.mean_ns)),
+                ("bake_ns", Json::from(s_bake.mean_ns)),
+                ("speedup", Json::from(speedup)),
+                ("file_bytes", Json::from(file_bytes as f64)),
+            ],
+        ));
+        seg_paths.push((preset, path));
+    }
+
+    // ---------------- serving: owned vs mapped throughput parity --------
+    // same engine, same traffic; the only variable is whether the workers
+    // gather from freshly-baked Vecs or from the mmapped segment sections
+    {
+        let ds = bench_dataset(&kaggle);
+        let ix = bench_indexer(&kaggle, kaggle_cap);
+        let kaggle_seg = &seg_paths[0].1;
+        let cfg = EngineConfig {
+            workers: 4,
+            max_batch: 256,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+        };
+        let run_with = |snap: ServingSnapshot| -> anyhow::Result<serving::ServeReport> {
+            let slot = SnapshotSlot::new(snap);
+            let mut exec = CountingExecutor::new(256);
+            let traffic = TrafficGen::new(&ds, 0.99, 11);
+            serving::run(&mut exec, &slot, traffic, &cfg, requests)
+        };
+        let rep_owned = run_with(ServingSnapshot::bake(&ix))?;
+        let loaded = segment::load_segment(kaggle_seg)?;
+        let mapped = loaded.snapshot.is_mapped();
+        let rep_mapped = run_with(loaded.snapshot)?;
+        let parity = rep_mapped.throughput_rps / rep_owned.throughput_rps.max(1.0);
+        let label = format!("segment load parity kaggle-small (mapped={mapped})");
+        t.row(vec![
+            label.clone(),
+            format!(
+                "owned {:.0}k req/s, mapped {:.0}k req/s",
+                rep_owned.throughput_rps / 1e3,
+                rep_mapped.throughput_rps / 1e3
+            ),
+            format!("{:.2}x of owned", parity),
+        ]);
+        results.push(stat_json(
+            &label,
+            &rep_mapped.latency,
+            vec![
+                ("group", Json::from("load_parity")),
+                ("throughput_owned_rps", Json::from(rep_owned.throughput_rps)),
+                ("throughput_mapped_rps", Json::from(rep_mapped.throughput_rps)),
+                ("parity", Json::from(parity)),
+            ],
+        ));
+    }
+
+    // ---------------- serving: hot-swap pause p99 under load -------------
+    // a swapper thread live-installs the segment (load + compat check +
+    // slot swap) while the engine serves; the install latency is the only
+    // "pause" a swap can cause — workers never block on it beyond the
+    // refcount-bump critical section
+    {
+        let ds = bench_dataset(&kaggle);
+        let ix = bench_indexer(&kaggle, kaggle_cap);
+        let kaggle_seg = &seg_paths[0].1;
+        let slot = SnapshotSlot::new(ServingSnapshot::bake(&ix));
+        let cfg = EngineConfig {
+            workers: 4,
+            max_batch: 256,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+        };
+        let stop = AtomicBool::new(false);
+        type SwapRun = (serving::ServeReport, Vec<f64>);
+        let (rep, samples) = std::thread::scope(|scope| -> anyhow::Result<SwapRun> {
+            let swapper = scope.spawn(|| {
+                let mut samples = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let t0 = Instant::now();
+                    slot.install_snapshot(kaggle_seg).expect("swap must stay compatible");
+                    samples.push(t0.elapsed().as_nanos() as f64);
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                samples
+            });
+            let mut exec = CountingExecutor::new(256);
+            let traffic = TrafficGen::new(&ds, 0.99, 11);
+            let rep = serving::run(&mut exec, &slot, traffic, &cfg, requests);
+            stop.store(true, Ordering::Relaxed);
+            let samples = swapper.join().expect("swapper thread panicked");
+            Ok((rep?, samples))
+        })?;
+        let s_swap = TimingStats::from_samples(samples);
+        let label = "segment hot swap kaggle-small (install under load)".to_string();
+        t.row(vec![
+            label.clone(),
+            format!("install p50 {}, p99 {}", fmt_ns(s_swap.p50_ns), fmt_ns(s_swap.p99_ns)),
+            format!(
+                "{} installs, {} reached device, {:.0}k req/s held",
+                s_swap.n,
+                rep.snapshot_swaps,
+                rep.throughput_rps / 1e3
+            ),
+        ]);
+        results.push(stat_json(
+            &label,
+            &s_swap,
+            vec![
+                ("group", Json::from("hot_swap")),
+                ("swap_pause_ns", Json::from(s_swap.p99_ns)),
+                ("installs", Json::from(s_swap.n)),
+                ("swaps_reached_device", Json::from(rep.snapshot_swaps)),
+                ("throughput_rps", Json::from(rep.throughput_rps)),
+            ],
+        ));
+    }
+    for (_, path) in &seg_paths {
+        let _ = std::fs::remove_file(path);
+    }
+
     // ---------------- L3: batch generation ------------------------------
     {
-        let ds = SyntheticDataset::new(store.dataset("kaggle_small", 0)?);
+        let ds = bench_dataset(&vocabs);
         let mut it = BatchIter::new(&ds, Split::Train, 256, None);
         let mut batch = it.alloc_batch();
         let s = bench(2, 30, || {
@@ -148,7 +404,7 @@ fn main() -> anyhow::Result<()> {
             }
         });
         t.row(vec![
-            "batch generation (B=256, kaggle_small)".into(),
+            "batch generation (B=256, kaggle-small shape)".into(),
             s.display(),
             format!("{:.0}k samples/s", 256.0 / s.mean_ns * 1e6),
         ]);
@@ -157,69 +413,72 @@ fn main() -> anyhow::Result<()> {
     // ---------------- L3: K-means (the clustering-event cost) -----------
     {
         let mut rng = Rng::new(1);
-        let n = 65_536;
+        let n = if smoke { 8_192 } else { 65_536 };
         let d = 4;
+        let k = if smoke { 256 } else { 4096 };
         let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
         let s = bench(1, 3, || {
             let _ = kmeans(
                 &pts,
                 d,
-                &KmeansConfig { k: 4096, n_iter: 10, seed: 2, ..Default::default() },
+                &KmeansConfig { k, n_iter: 10, seed: 2, ..Default::default() },
             );
         });
         t.row(vec![
-            "kmeans 65k pts, d=4, k=4096, 10 iters".into(),
+            format!("kmeans {n} pts, d={d}, k={k}, 10 iters"),
             s.display(),
             format!("{:.1} M pt·iter/s", (n * 10) as f64 / s.mean_ns * 1e3),
         ]);
     }
 
     // ---------------- runtime: train/predict per impl -------------------
-    for artifact in ["quick_cce", "quick_cce_ref"] {
-        if !store.has(artifact) {
-            continue;
+    if let Some(store) = &store {
+        for artifact in ["quick_cce", "quick_cce_ref"] {
+            if !store.has(artifact) {
+                continue;
+            }
+            let mut session = DlrmSession::open(store, artifact)?;
+            let m = session.manifest.clone();
+            let mut rng = Rng::new(3);
+            let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
+            session.set_state(&state)?;
+            let plan = TablePlan::new(&m.vocabs, m.spec.cap, m.spec.t, m.spec.c, m.spec.dc);
+            let ix = Indexer::new_rowwise(&mut rng, plan);
+            let dense = vec![0.1f32; m.spec.batch * m.spec.n_dense];
+            let labels = vec![1.0f32; m.spec.batch];
+            let mut rows = vec![0i32; session.emb_elems("train")?];
+            let cats: Vec<u32> = (0..m.spec.batch * m.vocabs.len())
+                .map(|i| (rng.below(m.vocabs[i % m.vocabs.len()] as u64)) as u32)
+                .collect();
+            ix.fill_rowwise(&cats, m.spec.batch, &mut rows);
+            let s = bench_for(3, Duration::from_secs(2), || {
+                session.train_step(&dense, EmbInput::Rows(&rows), &labels).unwrap();
+            });
+            t.row(vec![
+                format!("train step {artifact} (B={})", m.spec.batch),
+                s.display(),
+                format!("{:.1}k samples/s", m.spec.batch as f64 / s.mean_ns * 1e6),
+            ]);
+            // predict
+            let mut prows = vec![0i32; session.emb_elems("predict")?];
+            let pcats: Vec<u32> = (0..m.spec.eval_batch * m.vocabs.len())
+                .map(|i| (rng.below(m.vocabs[i % m.vocabs.len()] as u64)) as u32)
+                .collect();
+            ix.fill_rowwise(&pcats, m.spec.eval_batch, &mut prows);
+            let pdense = vec![0.1f32; m.spec.eval_batch * m.spec.n_dense];
+            let s = bench_for(2, Duration::from_secs(1), || {
+                let _ = session.predict(&pdense, EmbInput::Rows(&prows)).unwrap();
+            });
+            t.row(vec![
+                format!("predict {artifact} (B={})", m.spec.eval_batch),
+                s.display(),
+                format!("{:.1}k samples/s", m.spec.eval_batch as f64 / s.mean_ns * 1e6),
+            ]);
         }
-        let mut session = DlrmSession::open(&store, artifact)?;
-        let m = session.manifest.clone();
-        let mut rng = Rng::new(3);
-        let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
-        session.set_state(&state)?;
-        let plan = TablePlan::new(&m.vocabs, m.spec.cap, m.spec.t, m.spec.c, m.spec.dc);
-        let ix = Indexer::new_rowwise(&mut rng, plan);
-        let dense = vec![0.1f32; m.spec.batch * m.spec.n_dense];
-        let labels = vec![1.0f32; m.spec.batch];
-        let mut rows = vec![0i32; session.emb_elems("train")?];
-        let cats: Vec<u32> = (0..m.spec.batch * m.vocabs.len())
-            .map(|i| (rng.below(m.vocabs[i % m.vocabs.len()] as u64)) as u32)
-            .collect();
-        ix.fill_rowwise(&cats, m.spec.batch, &mut rows);
-        let s = bench_for(3, Duration::from_secs(2), || {
-            session.train_step(&dense, EmbInput::Rows(&rows), &labels).unwrap();
-        });
-        t.row(vec![
-            format!("train step {artifact} (B={})", m.spec.batch),
-            s.display(),
-            format!("{:.1}k samples/s", m.spec.batch as f64 / s.mean_ns * 1e6),
-        ]);
-        // predict
-        let mut prows = vec![0i32; session.emb_elems("predict")?];
-        let pcats: Vec<u32> = (0..m.spec.eval_batch * m.vocabs.len())
-            .map(|i| (rng.below(m.vocabs[i % m.vocabs.len()] as u64)) as u32)
-            .collect();
-        ix.fill_rowwise(&pcats, m.spec.eval_batch, &mut prows);
-        let pdense = vec![0.1f32; m.spec.eval_batch * m.spec.n_dense];
-        let s = bench_for(2, Duration::from_secs(1), || {
-            let _ = session.predict(&pdense, EmbInput::Rows(&prows)).unwrap();
-        });
-        t.row(vec![
-            format!("predict {artifact} (B={})", m.spec.eval_batch),
-            s.display(),
-            format!("{:.1}k samples/s", m.spec.eval_batch as f64 / s.mean_ns * 1e6),
-        ]);
     }
 
     // ---------------- runtime: K-means offload ablation ------------------
-    if store.has("kmeans_quick") {
+    if let Some(store) = store.as_ref().filter(|s| s.has("kmeans_quick")) {
         let m = store.manifest("kmeans_quick")?;
         let exe = store.compile(&m, "step")?;
         let n = m.inputs["step"][0].shape[0];
@@ -270,5 +529,16 @@ fn main() -> anyhow::Result<()> {
 
     t.print();
     t.save_csv("perf_hot_paths");
+
+    // ---------------- BENCH_serving.json ---------------------------------
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::from("cce.perf_serving.v1"));
+    doc.insert("mode".to_string(), Json::from(if smoke { "smoke" } else { "full" }));
+    doc.insert("results".to_string(), Json::Arr(results));
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("BENCH_serving.json");
+    std::fs::write(&path, Json::Obj(doc).to_string())?;
+    println!("wrote {}", path.display());
     Ok(())
 }

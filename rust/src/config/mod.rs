@@ -47,6 +47,10 @@ pub struct TrainConfig {
     pub pipeline_workers: usize,
     /// bounded-queue depth between producers and the exec thread
     pub pipeline_depth: usize,
+    /// when non-empty, write a serving segment (generation N) into this
+    /// directory after every applied clustering event and for the final
+    /// checkpoint — the producer half of the live hot-swap loop
+    pub snapshot_dir: String,
 }
 
 impl Default for TrainConfig {
@@ -67,6 +71,7 @@ impl Default for TrainConfig {
             cluster_overlap: false,
             pipeline_workers: 2,
             pipeline_depth: 4,
+            snapshot_dir: String::new(),
         }
     }
 }
@@ -96,6 +101,7 @@ impl TrainConfig {
         }
         self.pipeline_workers = args.usize_or("workers", self.pipeline_workers);
         self.pipeline_depth = args.usize_or("queue-depth", self.pipeline_depth);
+        self.snapshot_dir = args.str_or("snapshot-dir", &self.snapshot_dir);
         self
     }
 
@@ -121,6 +127,7 @@ impl TrainConfig {
                 "cluster_overlap" => c.cluster_overlap = v.as_bool()?,
                 "pipeline_workers" => c.pipeline_workers = v.as_u64()? as usize,
                 "pipeline_depth" => c.pipeline_depth = v.as_u64()? as usize,
+                "snapshot_dir" => c.snapshot_dir = v.as_str().to_string(),
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -146,7 +153,7 @@ mod tests {
     fn args_override_defaults() {
         let args = Args::parse(
             "x --artifact quick_ce --epochs 3 --cluster-times 6 --kmeans-offload \
-             --cluster-overlap"
+             --cluster-overlap --snapshot-dir snaps"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -157,6 +164,7 @@ mod tests {
         assert_eq!(c.cluster_times, 6);
         assert!(c.kmeans_offload);
         assert!(c.cluster_overlap);
+        assert_eq!(c.snapshot_dir, "snaps");
         assert!(c.validate().is_ok());
     }
 
@@ -164,7 +172,7 @@ mod tests {
     fn toml_round_trip() {
         let doc = TomlDoc::parse(
             "[train]\nartifact = \"smoke_cce\"\nepochs = 2\nearly_stop = true\nshuffle = false\n\
-             cluster_overlap = true\n",
+             cluster_overlap = true\nsnapshot_dir = \"snaps\"\n",
         )
         .unwrap();
         let c = TrainConfig::from_toml(&doc).unwrap();
@@ -173,6 +181,7 @@ mod tests {
         assert!(c.early_stop);
         assert!(!c.shuffle);
         assert!(c.cluster_overlap);
+        assert_eq!(c.snapshot_dir, "snaps");
     }
 
     #[test]

@@ -35,6 +35,10 @@ pub struct ServeConfig {
     /// model; 0 = skip training (the seed behavior, useful for pure
     /// serving-path benchmarks)
     pub train_steps: usize,
+    /// boot straight from an on-disk segment file (zero-copy mmap load)
+    /// instead of baking; mutually exclusive with `train_steps` — the
+    /// segment already carries the frozen index maps of a specific run
+    pub snapshot_path: String,
 }
 
 impl Default for ServeConfig {
@@ -49,6 +53,7 @@ impl Default for ServeConfig {
             queue_depth: 4096,
             zipf_skew: 0.99,
             train_steps: 0,
+            snapshot_path: String::new(),
         }
     }
 }
@@ -65,6 +70,7 @@ impl ServeConfig {
         self.queue_depth = args.usize_or("queue-depth", self.queue_depth);
         self.zipf_skew = args.f64_or("zipf", self.zipf_skew);
         self.train_steps = args.usize_or("train-steps", self.train_steps);
+        self.snapshot_path = args.str_or("snapshot", &self.snapshot_path);
         self
     }
 
@@ -82,6 +88,7 @@ impl ServeConfig {
                 "queue_depth" => c.queue_depth = v.as_u64()? as usize,
                 "zipf_skew" => c.zipf_skew = v.as_f64()?,
                 "train_steps" => c.train_steps = v.as_u64()? as usize,
+                "snapshot_path" => c.snapshot_path = v.as_str().to_string(),
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }
@@ -102,6 +109,12 @@ impl ServeConfig {
         }
         if !self.zipf_skew.is_finite() || self.zipf_skew < 0.0 {
             bail!("zipf skew must be a finite value ≥ 0");
+        }
+        if !self.snapshot_path.is_empty() && self.train_steps > 0 {
+            bail!(
+                "snapshot_path and train_steps are mutually exclusive: a segment \
+                 file already pins one trained model's index maps"
+            );
         }
         Ok(())
     }
@@ -161,6 +174,24 @@ mod tests {
         let c = ServeConfig { zipf_skew: -0.1, ..Default::default() };
         assert!(c.validate().is_err());
         let c = ServeConfig { zipf_skew: f64::NAN, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn snapshot_path_layers_and_excludes_training() {
+        let doc = TomlDoc::parse("[serve]\nsnapshot_path = \"snaps/gen3.cceseg\"\n").unwrap();
+        let c = ServeConfig::from_toml(&doc).unwrap();
+        assert_eq!(c.snapshot_path, "snaps/gen3.cceseg");
+        assert!(c.validate().is_ok());
+        // CLI --snapshot overrides the TOML value
+        let args = Args::parse(
+            "serve --snapshot other.cceseg".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        let c = c.apply_args(&args);
+        assert_eq!(c.snapshot_path, "other.cceseg");
+        // serving a segment and training-then-serving are mutually exclusive
+        let c = ServeConfig { train_steps: 10, ..c };
         assert!(c.validate().is_err());
     }
 }

@@ -1,6 +1,7 @@
 //! Thin adapter from the coordinator to the `serving` subsystem: bake the
-//! live `Indexer` into a `ServingSnapshot`, wire the session into a
-//! `SessionExecutor`, and run the multi-worker engine.
+//! live `Indexer` into a `ServingSnapshot` (or zero-copy load one from a
+//! segment file), wire the session into a `SessionExecutor`, and run the
+//! multi-worker engine off a hot-swappable `SnapshotSlot`.
 //!
 //! The old 92-line synchronous loop lived here; it replayed dataset batches,
 //! padded every batch to `eval_batch`, dispatched through the training
@@ -11,11 +12,36 @@ use crate::config::ServeConfig;
 use crate::coordinator::trainer::Checkpoint;
 use crate::data::synthetic::SyntheticDataset;
 use crate::runtime::session::DlrmSession;
-use crate::serving::{engine, EngineConfig, ServingSnapshot, SessionExecutor, TrafficGen};
+use crate::serving::{
+    engine, segment, EngineConfig, ServingSnapshot, SessionExecutor, SnapshotSlot, TrafficGen,
+};
 use crate::tables::indexer::Indexer;
 use anyhow::Result;
+use std::path::Path;
 
 pub use crate::serving::ServeReport;
+
+fn engine_config(session: &DlrmSession, cfg: &ServeConfig) -> EngineConfig {
+    let eval_batch = session.manifest.spec.eval_batch;
+    EngineConfig {
+        workers: cfg.workers,
+        max_batch: if cfg.max_batch == 0 { eval_batch } else { cfg.max_batch },
+        max_wait: cfg.max_wait(),
+        queue_depth: cfg.queue_depth,
+    }
+}
+
+fn run_engine(
+    session: &DlrmSession,
+    slot: &SnapshotSlot,
+    ds: &SyntheticDataset,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let engine_cfg = engine_config(session, cfg);
+    let traffic = TrafficGen::new(ds, cfg.zipf_skew, cfg.seed);
+    let mut executor = SessionExecutor::new(session);
+    engine::run(&mut executor, slot, traffic, &engine_cfg, cfg.requests)
+}
 
 /// Serve `cfg.requests` Zipf-skewed synthetic queries over a trained
 /// artifact through the multi-worker engine.
@@ -27,18 +53,9 @@ pub fn serve(
 ) -> Result<ServeReport> {
     cfg.validate()?;
     let t_bake = std::time::Instant::now();
-    let snapshot = ServingSnapshot::bake(indexer);
+    let slot = SnapshotSlot::new(ServingSnapshot::bake(indexer));
     let bake_secs = t_bake.elapsed().as_secs_f64();
-    let eval_batch = session.manifest.spec.eval_batch;
-    let engine_cfg = EngineConfig {
-        workers: cfg.workers,
-        max_batch: if cfg.max_batch == 0 { eval_batch } else { cfg.max_batch },
-        max_wait: cfg.max_wait(),
-        queue_depth: cfg.queue_depth,
-    };
-    let traffic = TrafficGen::new(ds, cfg.zipf_skew, cfg.seed);
-    let mut executor = SessionExecutor::new(session);
-    let mut rep = engine::run(&mut executor, &snapshot, traffic, &engine_cfg, cfg.requests)?;
+    let mut rep = run_engine(session, &slot, ds, cfg)?;
     rep.bake_secs = bake_secs;
     Ok(rep)
 }
@@ -56,4 +73,33 @@ pub fn serve_trained(
 ) -> Result<ServeReport> {
     session.set_state(&ckpt.state)?;
     serve(session, &ckpt.indexer, ds, cfg)
+}
+
+/// Boot the engine straight from an on-disk segment (`cce serve --snapshot`):
+/// no bake, no training run — the snapshot tables are mmapped and served
+/// zero-copy, so this path cold-starts in milliseconds regardless of table
+/// size. The device state stays as the caller initialized it (segments carry
+/// index maps, not weights — see ROADMAP "unified checkpoint").
+pub fn serve_snapshot(
+    session: &DlrmSession,
+    path: &Path,
+    ds: &SyntheticDataset,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    cfg.validate()?;
+    let t_load = std::time::Instant::now();
+    let loaded = segment::load_segment(path)?;
+    let load_secs = t_load.elapsed().as_secs_f64();
+    log::info!(
+        "segment {}: generation {}, {:.1} MB, {} in {:.3} ms",
+        path.display(),
+        loaded.generation,
+        loaded.file_bytes as f64 / 1e6,
+        if loaded.mapped { "mmapped" } else { "read (mmap unavailable)" },
+        load_secs * 1e3
+    );
+    let slot = SnapshotSlot::new(loaded.snapshot);
+    let mut rep = run_engine(session, &slot, ds, cfg)?;
+    rep.load_secs = load_secs;
+    Ok(rep)
 }

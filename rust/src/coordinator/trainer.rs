@@ -101,6 +101,11 @@ pub struct TrainOutcome {
     /// the best-validation (state, indexer) pair — what serving should
     /// bake; always `Some` after `train` returns Ok
     pub best_checkpoint: Option<Checkpoint>,
+    /// segment files written by the bake-generation hook (`snapshot_dir`),
+    /// in generation order; the last one is the final checkpoint's maps
+    pub snapshot_files: Vec<String>,
+    /// wall time spent baking + writing those segments (not training time)
+    pub snapshot_write_secs: f64,
 }
 
 /// An overlapped clustering event in flight: the background compute job
@@ -127,6 +132,38 @@ fn apply_computed(
     let res = apply_cluster(&mut pool_data, indexer, computed);
     session.set_field(pool, &pool_data)?;
     Ok(res)
+}
+
+/// The bake-generation hook: when `snapshot_dir` is set, bake the current
+/// maps and write them as the next segment generation. Called after every
+/// applied clustering event and for the final checkpoint, so a serving
+/// engine can `SnapshotSlot::install_snapshot` generation N+1 while this
+/// run keeps training (the producer half of the live hot-swap loop).
+fn write_snapshot_generation(
+    dir: &str,
+    artifact: &str,
+    indexer: &Indexer,
+    out: &mut TrainOutcome,
+) -> Result<()> {
+    if dir.is_empty() {
+        return Ok(());
+    }
+    let t0 = Instant::now();
+    let generation = out.snapshot_files.len() as u64;
+    let snap = crate::serving::ServingSnapshot::bake(indexer);
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create snapshot dir {dir}"))?;
+    let path = std::path::Path::new(dir).join(format!("{artifact}-gen{generation}.cceseg"));
+    let bytes = crate::serving::segment::write_segment(&snap, generation, &path)?;
+    out.snapshot_write_secs += t0.elapsed().as_secs_f64();
+    log::info!(
+        "snapshot generation {generation}: {} ({:.1} MB in {:.1} ms)",
+        path.display(),
+        bytes as f64 / 1e6,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    out.snapshot_files.push(path.display().to_string());
+    Ok(())
 }
 
 /// Build the indexer an artifact's manifest calls for.
@@ -285,6 +322,13 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                             res.total_inertia,
                             res.stale_steps
                         );
+                        // publish the post-event maps as generation N+1
+                        write_snapshot_generation(
+                            &cfg.snapshot_dir,
+                            &cfg.artifact,
+                            &indexer,
+                            &mut out,
+                        )?;
                     }
                     None => pending = Some(p),
                 }
@@ -350,6 +394,12 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                         res.total_inertia,
                         res.elapsed_secs
                     );
+                    write_snapshot_generation(
+                        &cfg.snapshot_dir,
+                        &cfg.artifact,
+                        &indexer,
+                        &mut out,
+                    )?;
                 }
             }
 
@@ -416,6 +466,8 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 "clustering #{} applied after training ended ({stale} steps on stale maps)",
                 out.clusterings_run
             );
+            // no segment write here: these maps become the final checkpoint
+            // below, and the final-generation write covers them
         } else {
             // the best checkpoint supersedes the final state — applying
             // here would be overwritten by the restore below, so don't
@@ -450,6 +502,8 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let tacc = evaluate(&session, &ck_indexer, &ds, Split::Test)?;
     out.test_bce = tacc.bce();
     out.test_auc = tacc.auc();
+    // final generation: the checkpoint that actually ships to serving
+    write_snapshot_generation(&cfg.snapshot_dir, &cfg.artifact, &ck_indexer, &mut out)?;
     out.best_checkpoint = Some(Checkpoint { state: ck_state, indexer: ck_indexer });
     Ok(out)
 }

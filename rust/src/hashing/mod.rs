@@ -148,6 +148,18 @@ impl DheHasher {
         DheHasher { seeds: (0..n_hash).map(|_| rng.next_u64() | 1).collect() }
     }
 
+    /// The raw multiplier seeds — what a serving segment persists for the
+    /// DHE live-fallback path (`serving::segment`).
+    pub fn seeds(&self) -> &[u64] {
+        &self.seeds
+    }
+
+    /// Rebuild a hasher from persisted seeds; `fill` is then bit-identical
+    /// to the hasher the seeds were taken from.
+    pub fn from_seeds(seeds: Vec<u64>) -> DheHasher {
+        DheHasher { seeds }
+    }
+
     /// Fill `out` (len n_hash) with the id's hash features in `[-1, 1]`.
     pub fn fill(&self, id: u32, out: &mut [f32]) {
         debug_assert_eq!(out.len(), self.seeds.len());
@@ -214,6 +226,17 @@ mod tests {
             }
         }
         assert!(wrapped, "no window ever wrapped — region too small to test");
+    }
+
+    #[test]
+    fn dhe_seed_roundtrip_is_bit_identical() {
+        let mut rng = Rng::new(9);
+        let h = DheHasher::new(&mut rng, 8);
+        let h2 = DheHasher::from_seeds(h.seeds().to_vec());
+        let (mut a, mut b) = (vec![0f32; 8], vec![0f32; 8]);
+        h.fill(77, &mut a);
+        h2.fill(77, &mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

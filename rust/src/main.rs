@@ -6,6 +6,7 @@
 //!   lsq      least-squares CCE demos (Algorithms 1 & 2, Theorem 3.1)
 //!   entropy  Appendix-H entropy diagnostics (CCE vs circular clustering)
 //!   serve    batched-inference serving loop over a trained artifact
+//!   snapshot write / inspect on-disk serving segments (.cceseg)
 //!   info     inspect artifacts / dataset presets
 
 use anyhow::{bail, Result};
@@ -40,11 +41,12 @@ fn run(args: Args) -> Result<()> {
         Some("lsq") => cmd_lsq(&args),
         Some("entropy") => cmd_entropy(&args),
         Some("serve") => cmd_serve(&args),
+        Some("snapshot") => cmd_snapshot(&args),
         Some("info") => cmd_info(&args),
         other => {
             bail!(
                 "unknown subcommand {other:?}; expected one of \
-                 train | sweep | lsq | entropy | serve | info"
+                 train | sweep | lsq | entropy | serve | snapshot | info"
             )
         }
     }
@@ -93,6 +95,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         "cluster time".into(),
         format!("{:.2}s stalled / {:.2}s total", out.cluster_secs, out.cluster_event_secs),
     ]);
+    if !out.snapshot_files.is_empty() {
+        t.row(vec![
+            "snapshots".into(),
+            format!(
+                "{} generations in {:.2}s (last: {})",
+                out.snapshot_files.len(),
+                out.snapshot_write_secs,
+                out.snapshot_files.last().unwrap()
+            ),
+        ]);
+    }
     t.print();
     Ok(())
 }
@@ -283,6 +296,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         let rep = cce::coordinator::serve::serve_trained(&mut session, &ckpt, &ds, &cfg)?;
         (rep, format!("trained ({} steps)", out.steps_run))
+    } else if !cfg.snapshot_path.is_empty() {
+        // boot from an on-disk segment: zero-copy mmap load, no bake. The
+        // segment carries index maps only, so the device state is still
+        // random-initialized (see ROADMAP "unified checkpoint").
+        let mut rng = cce::util::Rng::new(cfg.seed ^ 0x57A7E);
+        let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
+        session.set_state(&state)?;
+        let path = std::path::Path::new(&cfg.snapshot_path);
+        let rep = cce::coordinator::serve::serve_snapshot(&session, path, &ds, &cfg)?;
+        (rep, format!("segment {}", cfg.snapshot_path))
     } else {
         log::warn!("serving a random-initialized model; pass --train-steps N to train first");
         let indexer = cce::coordinator::trainer::build_indexer(&m, cfg.seed)?;
@@ -305,11 +328,109 @@ fn cmd_serve(args: &Args) -> Result<()> {
     t.row(vec!["queue wait".into(), rep.queue_wait.display()]);
     t.row(vec!["index time".into(), format!("{:.3}s (summed over workers)", rep.index_secs)]);
     t.row(vec!["exec time".into(), format!("{:.3}s", rep.exec_secs)]);
-    t.row(vec![
-        "snapshot".into(),
-        format!("{} KiB baked in {:.3}s", rep.snapshot_bytes / 1024, rep.bake_secs),
-    ]);
+    if rep.load_secs > 0.0 {
+        t.row(vec![
+            "snapshot".into(),
+            format!("{} KiB loaded in {:.3} ms", rep.snapshot_bytes / 1024, rep.load_secs * 1e3),
+        ]);
+    } else {
+        t.row(vec![
+            "snapshot".into(),
+            format!("{} KiB baked in {:.3}s", rep.snapshot_bytes / 1024, rep.bake_secs),
+        ]);
+    }
+    if rep.snapshot_swaps > 0 {
+        t.row(vec![
+            "hot swaps".into(),
+            format!("{} (final generation {})", rep.snapshot_swaps, rep.generation),
+        ]);
+    }
     t.print();
+    Ok(())
+}
+
+fn cmd_snapshot(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("write") => cmd_snapshot_write(args),
+        Some("inspect") => cmd_snapshot_inspect(args),
+        other => bail!("unknown snapshot verb {other:?}; expected write | inspect"),
+    }
+}
+
+/// `cce snapshot write [--artifact A] [--seed S] [--train-steps N] [--out P]`
+/// — bake an artifact's index maps (optionally training first) and persist
+/// them as a generation-0 segment file.
+fn cmd_snapshot_write(args: &Args) -> Result<()> {
+    let store = store(args)?;
+    let artifact = args.str_or("artifact", "quick_cce");
+    let seed = args.u64_or("seed", 0);
+    let train_steps = args.usize_or("train-steps", 0);
+    let out_path = args.str_or("out", &format!("{artifact}.cceseg"));
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let snap = if train_steps > 0 {
+        let tcfg = TrainConfig {
+            artifact: artifact.clone(),
+            seed,
+            max_batches: train_steps,
+            ..Default::default()
+        };
+        let out = cce::coordinator::train(&store, &tcfg)?;
+        let ckpt = out.best_checkpoint.expect("train always returns a checkpoint");
+        log::info!("baking trained index maps ({} steps)", out.steps_run);
+        cce::serving::ServingSnapshot::bake(&ckpt.indexer)
+    } else {
+        let m = store.manifest(&artifact)?;
+        let indexer = cce::coordinator::trainer::build_indexer(&m, seed)?;
+        cce::serving::ServingSnapshot::bake(&indexer)
+    };
+    let path = std::path::Path::new(&out_path);
+    let bytes = cce::serving::write_segment(&snap, 0, path)?;
+    println!("wrote {} ({:.1} MB, generation 0)", path.display(), bytes as f64 / 1e6);
+    Ok(())
+}
+
+/// `cce snapshot inspect <path> [--verify]` — print a segment's header and
+/// section table; `--verify` additionally checks every section checksum.
+fn cmd_snapshot_inspect(args: &Args) -> Result<()> {
+    let path = match args.str_opt("path") {
+        Some(p) => p.to_string(),
+        None => args
+            .positional
+            .get(1)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("usage: cce snapshot inspect <path> [--verify]"))?,
+    };
+    let verify = args.flag("verify");
+    args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    let info = cce::serving::segment::inspect(std::path::Path::new(&path), verify)?;
+    let h = &info.header;
+    let mut t = Table::new(&format!("segment {path}"), &["field", "value"]);
+    t.row(vec!["kind".into(), format!("{:?}", h.kind)]);
+    t.row(vec!["generation".into(), h.generation.to_string()]);
+    t.row(vec!["features".into(), h.n_features.to_string()]);
+    t.row(vec!["stride".into(), h.stride.to_string()]);
+    t.row(vec!["c / dc / dim".into(), format!("{} / {} / {}", h.c, h.dc, h.dim)]);
+    t.row(vec!["n_hash".into(), h.n_hash.to_string()]);
+    t.row(vec!["dhe live fallback".into(), h.dhe_live.to_string()]);
+    t.row(vec!["file bytes".into(), info.file_bytes.to_string()]);
+    t.print();
+    let mut s = Table::new("sections", &["name", "offset", "bytes", "checksum"]);
+    for sec in &info.sections {
+        s.row(vec![
+            sec.name.into(),
+            sec.offset.to_string(),
+            sec.bytes.to_string(),
+            match sec.checksum_ok {
+                None => "(not checked)".into(),
+                Some(true) => "OK".into(),
+                Some(false) => "MISMATCH".into(),
+            },
+        ]);
+    }
+    s.print();
+    if info.sections.iter().any(|sec| sec.checksum_ok == Some(false)) {
+        bail!("checksum verification failed for {path}");
+    }
     Ok(())
 }
 

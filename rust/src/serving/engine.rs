@@ -23,12 +23,15 @@
 
 use crate::runtime::session::{DlrmSession, EmbInput};
 use crate::serving::batcher::{BatchQueue, Request, TrafficGen};
+use crate::serving::segment;
 use crate::serving::snapshot::ServingSnapshot;
 use crate::tables::indexer::MethodKind;
 use crate::util::timer::TimingStats;
 use anyhow::Result;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Engine tuning knobs (derived from `config::ServeConfig`).
@@ -50,6 +53,65 @@ pub enum PreparedEmb {
     Hashes(Vec<f32>),
 }
 
+/// Generation-tagged snapshot slot the engine serves from. Workers re-read
+/// the current `(generation, snapshot)` pair per batch, so a new snapshot
+/// installed mid-run (a post-clustering-event segment from `--cluster-overlap`
+/// training) takes effect at the next batch boundary while in-flight batches
+/// finish on the old generation — no pause, no partial batches.
+///
+/// The slot is a mutex around an `Arc` swap, not a lock-free pointer: the
+/// critical section is one refcount bump, held for nanoseconds, and every
+/// worker takes it once per *batch* (hundreds of requests), so contention is
+/// unmeasurable next to the gather itself — `perf_hot_paths` pins the
+/// swap-pause p99 to keep that claim honest.
+pub struct SnapshotSlot {
+    inner: Mutex<(u64, Arc<ServingSnapshot>)>,
+    /// lock-free mirror of the installed generation (for reporting)
+    generation: AtomicU64,
+}
+
+impl SnapshotSlot {
+    pub fn new(snap: ServingSnapshot) -> SnapshotSlot {
+        SnapshotSlot { inner: Mutex::new((0, Arc::new(snap))), generation: AtomicU64::new(0) }
+    }
+
+    /// Latest installed generation (0 = the snapshot the slot started with).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// The coherent `(generation, snapshot)` pair to serve the next batch on.
+    pub fn current(&self) -> (u64, Arc<ServingSnapshot>) {
+        let g = self.inner.lock().unwrap();
+        (g.0, g.1.clone())
+    }
+
+    /// Swap in a new snapshot; returns its generation. Rejects snapshots the
+    /// running executable cannot serve (different method or sample stride —
+    /// the device side is compiled for a fixed embedding-input shape).
+    pub fn install(&self, snap: ServingSnapshot) -> Result<u64> {
+        let mut g = self.inner.lock().unwrap();
+        anyhow::ensure!(
+            snap.kind() == g.1.kind() && snap.sample_stride() == g.1.sample_stride(),
+            "incompatible snapshot: {:?}/{} installed, {:?}/{} offered",
+            g.1.kind(),
+            g.1.sample_stride(),
+            snap.kind(),
+            snap.sample_stride()
+        );
+        g.0 += 1;
+        g.1 = Arc::new(snap);
+        self.generation.store(g.0, Ordering::Release);
+        Ok(g.0)
+    }
+
+    /// Zero-copy load a segment file and swap it in — the live-deploy API.
+    pub fn install_snapshot(&self, path: &Path) -> Result<u64> {
+        let loaded = segment::load_segment(path)?;
+        self.install(loaded.snapshot)
+    }
+}
+
 /// One device-ready batch: fixed-shape inputs plus the bookkeeping needed
 /// to attribute latency to each real request.
 pub struct PreparedBatch {
@@ -62,6 +124,8 @@ pub struct PreparedBatch {
     pub queue_wait_ns: Vec<u64>,
     /// time this batch spent in snapshot index generation
     pub index_ns: u64,
+    /// snapshot generation the batch was prepared on (hot-swap attribution)
+    pub generation: u64,
 }
 
 /// Pack admitted requests into a device-shaped batch. Index generation runs
@@ -124,6 +188,7 @@ pub fn prepare(snap: &ServingSnapshot, reqs: &[Request], device_batch: usize) ->
             .map(|r| formed.duration_since(r.arrival).as_nanos() as u64)
             .collect(),
         index_ns,
+        generation: 0,
     }
 }
 
@@ -222,12 +287,21 @@ pub struct ServeReport {
     /// snapshot bake cost, filled in by callers that bake per run
     pub snapshot_bytes: usize,
     pub bake_secs: f64,
+    /// segment load cost, filled in by callers that boot from a segment
+    pub load_secs: f64,
+    /// generation transitions observed at the exec thread (hot swaps that
+    /// actually reached device batches during the run)
+    pub snapshot_swaps: usize,
+    /// generation of the last executed batch
+    pub generation: u64,
 }
 
-/// Run the engine until `n_requests` have been served.
+/// Run the engine until `n_requests` have been served. The engine serves
+/// whatever snapshot `slot` currently holds; `SnapshotSlot::install` /
+/// `install_snapshot` from any other thread hot-swaps it between batches.
 pub fn run<E: Executor>(
     executor: &mut E,
-    snap: &ServingSnapshot,
+    slot: &SnapshotSlot,
     traffic: TrafficGen<'_>,
     cfg: &EngineConfig,
     n_requests: usize,
@@ -243,6 +317,8 @@ pub fn run<E: Executor>(
     let mut padded_rows = 0usize;
     let mut served = 0usize;
     let mut exec_secs = 0f64;
+    let mut snapshot_swaps = 0usize;
+    let mut last_gen: Option<u64> = None;
     let mut exec_err: Option<anyhow::Error> = None;
     let t_all = Instant::now();
 
@@ -261,13 +337,16 @@ pub fn run<E: Executor>(
             producer_queue.close();
         });
 
-        // index-generation workers
+        // index-generation workers: re-read the slot per batch so installed
+        // snapshots take effect at the next batch boundary
         for _ in 0..cfg.workers {
             let tx = ready_tx.clone();
             let (queue, index_ns) = (&queue, &index_ns);
             s.spawn(move || {
                 while let Some(reqs) = queue.pop_batch(max_batch, cfg.max_wait) {
-                    let pb = prepare(snap, &reqs, device_batch);
+                    let (generation, snap) = slot.current();
+                    let mut pb = prepare(&snap, &reqs, device_batch);
+                    pb.generation = generation;
                     index_ns.fetch_add(pb.index_ns, Ordering::Relaxed);
                     if tx.send(pb).is_err() {
                         return; // exec thread gone
@@ -289,6 +368,12 @@ pub fn run<E: Executor>(
                     continue;
                 }
                 exec_secs += te.elapsed().as_secs_f64();
+                // batches from different workers can interleave generations
+                // briefly after a swap; count the transitions actually seen
+                if last_gen != Some(pb.generation) {
+                    snapshot_swaps += usize::from(last_gen.is_some());
+                    last_gen = Some(pb.generation);
+                }
                 let done = Instant::now();
                 for (arrival, wait_ns) in pb.arrivals.iter().zip(&pb.queue_wait_ns) {
                     latencies.push(done.duration_since(*arrival).as_nanos() as f64);
@@ -316,8 +401,11 @@ pub fn run<E: Executor>(
         queue_wait: TimingStats::from_samples(queue_waits),
         index_secs: index_ns.load(Ordering::Relaxed) as f64 / 1e9,
         exec_secs,
-        snapshot_bytes: snap.host_bytes(),
+        snapshot_bytes: slot.current().1.host_bytes(),
         bake_secs: 0.0,
+        load_secs: 0.0,
+        snapshot_swaps,
+        generation: last_gen.unwrap_or(0),
     })
 }
 
@@ -362,11 +450,11 @@ mod tests {
     #[test]
     fn engine_serves_every_request_once() {
         let ds = ds();
-        let snap = snapshot();
+        let slot = SnapshotSlot::new(snapshot());
         for workers in [1usize, 4] {
             let mut exec = CountingExecutor::new(16);
             let traffic = TrafficGen::new(&ds, 0.99, 7);
-            let rep = run(&mut exec, &snap, traffic, &cfg(workers, 16), 100).unwrap();
+            let rep = run(&mut exec, &slot, traffic, &cfg(workers, 16), 100).unwrap();
             assert_eq!(rep.requests, 100, "workers={workers}");
             assert_eq!(exec.rows_seen, 100);
             assert_eq!(rep.latency.n, 100);
@@ -374,6 +462,8 @@ mod tests {
             assert!(rep.throughput_rps > 0.0);
             assert_eq!(rep.batches, exec.batches);
             assert_eq!(rep.padded_rows, rep.batches * 16 - 100);
+            assert_eq!(rep.snapshot_swaps, 0, "nothing installed mid-run");
+            assert_eq!(rep.generation, 0);
         }
     }
 
@@ -383,7 +473,7 @@ mod tests {
         // admission window and a single worker, every batch fills to
         // max_batch except the final tail of the burst
         let ds = ds();
-        let snap = snapshot();
+        let slot = SnapshotSlot::new(snapshot());
         let mut exec = CountingExecutor::new(16);
         let traffic = TrafficGen::new(&ds, 0.0, 3);
         let c = EngineConfig {
@@ -392,7 +482,7 @@ mod tests {
             max_wait: Duration::from_millis(200),
             queue_depth: 256,
         };
-        let rep = run(&mut exec, &snap, traffic, &c, 100).unwrap();
+        let rep = run(&mut exec, &slot, traffic, &c, 100).unwrap();
         assert_eq!(rep.requests, 100);
         assert_eq!(rep.batches, 100usize.div_ceil(16));
         assert_eq!(rep.padded_rows, rep.batches * 16 - 100, "padding beyond the tail");
@@ -440,9 +530,47 @@ mod tests {
             }
         }
         let ds = ds();
-        let snap = snapshot();
+        let slot = SnapshotSlot::new(snapshot());
         let traffic = TrafficGen::new(&ds, 0.0, 1);
-        let err = run(&mut FailingExecutor, &snap, traffic, &cfg(4, 16), 1000);
+        let err = run(&mut FailingExecutor, &slot, traffic, &cfg(4, 16), 1000);
         assert!(err.is_err(), "error must propagate");
+    }
+
+    #[test]
+    fn install_rejects_incompatible_snapshot() {
+        let slot = SnapshotSlot::new(snapshot()); // rowwise, [11, 50]
+        let mut rng = Rng::new(1);
+        let robe = ServingSnapshot::bake(&Indexer::new_robe(&mut rng, &[11, 50], 30, 8, 2));
+        assert!(slot.install(robe).is_err(), "method change must be rejected");
+        // a rebake of the same plan is compatible and bumps the generation
+        let gen = slot.install(snapshot()).unwrap();
+        assert_eq!(gen, 1);
+        assert_eq!(slot.generation(), 1);
+        assert_eq!(slot.current().0, 1);
+    }
+
+    #[test]
+    fn hot_swap_mid_run_serves_every_request() {
+        let ds = ds();
+        let slot = SnapshotSlot::new(snapshot());
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let rep = std::thread::scope(|s| {
+            // swapper: keep installing rebaked generations while serving
+            s.spawn(|| {
+                while !stop.load(Ordering::Relaxed) {
+                    slot.install(snapshot()).unwrap();
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            });
+            let mut exec = CountingExecutor::new(16);
+            let traffic = TrafficGen::new(&ds, 0.5, 11);
+            let rep = run(&mut exec, &slot, traffic, &cfg(2, 8), 400).unwrap();
+            stop.store(true, Ordering::Relaxed);
+            rep
+        });
+        // no request lost or double-served across however many swaps landed
+        assert_eq!(rep.requests, 400);
+        assert!(slot.generation() >= 1, "swapper never installed");
+        assert!(rep.generation <= slot.generation());
     }
 }

@@ -7,36 +7,52 @@
 //! * [`snapshot`] — bake a trained `(state, Indexer)` into a read-only
 //!   [`ServingSnapshot`]: learned/random/identity maps are materialized into
 //!   flat `u32` gather tables with subtable bases folded in, replacing the
-//!   training indexer's per-lookup enum dispatch.
+//!   training indexer's per-lookup enum dispatch. Tables are either owned
+//!   (fresh bake) or zero-copy views of a mapped segment file.
+//! * [`segment`] — the versioned on-disk snapshot format: checksummed
+//!   64-byte-aligned sections behind a fixed little-endian header, written
+//!   atomically, loaded via `mmap` in milliseconds regardless of table size.
 //! * [`batcher`] — a bounded request queue with max-batch/max-wait dynamic
 //!   admission, fed by a Zipf-skewed synthetic [`TrafficGen`] (skew is a CLI
 //!   knob, so hot-id scenarios are a flag away, not a code change).
 //! * [`engine`] — N index-generation workers fan the snapshot gather over
 //!   cores and feed one device-execution thread; per-request p50/p95/p99
-//!   latency and queue-wait are captured honestly.
+//!   latency and queue-wait are captured honestly. The engine serves from a
+//!   generation-tagged [`SnapshotSlot`] so snapshots hot-swap under load.
 //!
-//! # Snapshot lifecycle
+//! # Snapshot lifecycle: bake → write → mmap → swap
 //!
 //! 1. **Train** with a live `Indexer`; CCE clustering events rewrite its
 //!    `IndexMap`s freely (`Algorithm 3` lines 14–16).
-//! 2. **Bake** once training (or a clustering event mid-deploy) finishes:
-//!    `ServingSnapshot::bake(&indexer)` materializes every map. The snapshot
-//!    is immutable and `Sync` — workers share it by reference.
-//! 3. **Serve** via `engine::run`; a model update means baking a *new*
-//!    snapshot and swapping it in between runs. Parity with the live
-//!    indexer is bit-exact (pinned by `tests/proptests.rs`), so train-time
-//!    and serve-time index generation can never drift.
+//! 2. **Bake**: `ServingSnapshot::bake(&indexer)` materializes every map
+//!    into flat gather tables. The snapshot is immutable and `Sync`.
+//! 3. **Write**: `segment::write_segment` persists the bake as generation N
+//!    (`--snapshot-dir` makes `cce train` do this after every clustering
+//!    event and at the end of the run).
+//! 4. **Load**: `segment::load_segment` maps the file and serves straight
+//!    off the page cache — cold start is O(header), not O(table), so a
+//!    serving process boots in milliseconds (`cce serve --snapshot`).
+//! 5. **Swap**: `SnapshotSlot::install_snapshot(path)` publishes generation
+//!    N+1 to a running engine; workers pick it up at the next batch boundary
+//!    while in-flight batches finish on generation N.
+//!
+//! Parity with the live indexer is bit-exact through the whole cycle —
+//! bake, write, load, swap — pinned by `tests/proptests.rs`, so train-time
+//! and serve-time index generation can never drift.
 //!
 //! `coordinator::serve` is a thin adapter wiring a `DlrmSession` + dataset
-//! into this module; `cce serve` exposes the knobs via `config::ServeConfig`.
+//! into this module; `cce serve` exposes the knobs via `config::ServeConfig`
+//! and `cce snapshot write|inspect` manages segment files.
 
 pub mod batcher;
 pub mod engine;
+pub mod segment;
 pub mod snapshot;
 
 pub use batcher::{BatchQueue, Request, TrafficGen};
 pub use engine::{
     prepare, run, CountingExecutor, EngineConfig, Executor, PreparedBatch, PreparedEmb,
-    ServeReport, SessionExecutor,
+    ServeReport, SessionExecutor, SnapshotSlot,
 };
+pub use segment::{load_segment, load_segment_verified, write_segment, LoadedSegment};
 pub use snapshot::ServingSnapshot;

@@ -1,0 +1,588 @@
+//! Versioned on-disk segment format for [`ServingSnapshot`] — write once
+//! after a bake, load in milliseconds via `mmap`, hot-swap under load.
+//!
+//! # Layout (version 1, little-endian only)
+//!
+//! ```text
+//!   offset  size  field
+//!   ------  ----  -----------------------------------------------------
+//!        0     8  magic "CCESEG01"
+//!        8     4  format version (u32, = 1)
+//!       12     4  method kind (u32: 0 row-wise, 1 element-wise, 2 DHE)
+//!       16     8  generation (bake counter; hot-swap ordering tag)
+//!       24     8  n_features
+//!       32     8  stride        (row-wise: t*c entries per id)
+//!       40     8  c             (ROBE: columns per id)
+//!       48     8  dc            (ROBE: chunk length)
+//!       56     8  dim           (ROBE: embedding dim = c*dc)
+//!       64     8  n_hash        (DHE: hash features per id)
+//!       72     8  dhe_live flag (1 = hashers persisted, no baked table)
+//!       80     8  file_len      (total bytes; cheap truncation check)
+//!       88   168  section table: 7 × (offset u64, len u64, fnv1a-64 u64)
+//!      256     8  fnv1a-64 of bytes [0, 256) (header checksum)
+//!      320     -  sections, each 64-byte aligned, in table order:
+//!                 vocabs (u64) · rows (u32) · robe_starts (u32) ·
+//!                 robe_base (i32) · robe_region (u32) · dhe_table (f32) ·
+//!                 dhe_seeds (u64)
+//! ```
+//!
+//! Sections a method does not use are present with length 0, so one reader
+//! handles all three `MethodKind`s. Per-feature offset tables are NOT
+//! persisted — they are prefix sums of `vocabs` and are recomputed on load,
+//! which keeps the file format free of redundant (and corruptible) state.
+//!
+//! # Verification policy
+//!
+//! `load_segment` validates the header (magic, version, header checksum,
+//! section bounds/alignment, geometry-implied section lengths) but does NOT
+//! hash the bulk sections — that would touch every page and turn a
+//! millisecond cold start back into an O(table) scan. `load_segment_verified`
+//! additionally checks every section checksum; `cce snapshot inspect
+//! --verify` and the corruption tests use it. Writes go to a `.tmp` sibling
+//! and are published by `rename(2)`, so a concurrently-loading server never
+//! sees a half-written file.
+
+use crate::hashing::DheHasher;
+use crate::serving::snapshot::{ServingSnapshot, SnapshotTables};
+use crate::tables::indexer::MethodKind;
+use crate::util::mmap::{as_u64s, MappedFile};
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+pub const MAGIC: [u8; 8] = *b"CCESEG01";
+pub const VERSION: u32 = 1;
+
+/// Section indices (also the on-disk order).
+const SEC_VOCABS: usize = 0;
+const SEC_ROWS: usize = 1;
+const SEC_ROBE_STARTS: usize = 2;
+const SEC_ROBE_BASE: usize = 3;
+const SEC_ROBE_REGION: usize = 4;
+const SEC_DHE_TABLE: usize = 5;
+const SEC_DHE_SEEDS: usize = 6;
+const N_SECTIONS: usize = 7;
+
+pub const SECTION_NAMES: [&str; N_SECTIONS] =
+    ["vocabs", "rows", "robe_starts", "robe_base", "robe_region", "dhe_table", "dhe_seeds"];
+
+/// Fixed header size: 88 fixed bytes + 7×24 section table + 8 checksum.
+pub const HEADER_BYTES: usize = 88 + N_SECTIONS * 24 + 8;
+
+/// Section payload alignment — matches a cache line and divides the page
+/// size, so typed reinterpretation of mapped sections is always aligned.
+const SECTION_ALIGN: u64 = 64;
+
+fn align_up(off: u64) -> u64 {
+    off.div_ceil(SECTION_ALIGN) * SECTION_ALIGN
+}
+
+fn ensure_little_endian() -> Result<()> {
+    ensure!(
+        cfg!(target_endian = "little"),
+        "segment files are little-endian; big-endian hosts are unsupported"
+    );
+    Ok(())
+}
+
+/// FNV-1a 64-bit over raw bytes — the segment's checksum primitive.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// View a typed slice's memory as raw bytes (for writing + checksums).
+fn bytes_of<T>(s: &[T]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SectionDesc {
+    pub offset: u64,
+    pub len: u64,
+    pub checksum: u64,
+}
+
+/// Parsed + validated segment header.
+#[derive(Clone, Debug)]
+pub struct SegmentHeader {
+    pub kind: MethodKind,
+    pub generation: u64,
+    pub n_features: usize,
+    pub stride: usize,
+    pub c: usize,
+    pub dc: u32,
+    pub dim: usize,
+    pub n_hash: usize,
+    pub dhe_live: bool,
+    pub file_len: u64,
+    pub sections: [SectionDesc; N_SECTIONS],
+}
+
+fn kind_code(kind: MethodKind) -> u32 {
+    match kind {
+        MethodKind::RowWise => 0,
+        MethodKind::ElementWise => 1,
+        MethodKind::Dhe => 2,
+    }
+}
+
+/// Serialize a snapshot to `path` atomically (`.tmp` + rename). Returns the
+/// file size in bytes. `generation` is the bake counter the hot-swap loop
+/// uses to order snapshots.
+pub fn write_segment(snap: &ServingSnapshot, generation: u64, path: &Path) -> Result<u64> {
+    ensure_little_endian()?;
+    let vocabs: Vec<u64> = snap.vocabs().iter().map(|&v| v as u64).collect();
+    let seeds: Vec<u64> =
+        snap.dhe_live_hashers().iter().flat_map(|h| h.seeds().iter().copied()).collect();
+    let sections: [&[u8]; N_SECTIONS] = [
+        bytes_of(&vocabs),
+        bytes_of(snap.rows()),
+        bytes_of(snap.robe_starts()),
+        bytes_of(snap.robe_base()),
+        bytes_of(snap.robe_region()),
+        bytes_of(snap.dhe_table()),
+        bytes_of(&seeds),
+    ];
+
+    let mut descs = [SectionDesc::default(); N_SECTIONS];
+    let mut off = align_up(HEADER_BYTES as u64);
+    for (d, s) in descs.iter_mut().zip(&sections) {
+        *d = SectionDesc { offset: off, len: s.len() as u64, checksum: fnv1a(s) };
+        off = align_up(off + d.len);
+    }
+    let last = &descs[N_SECTIONS - 1];
+    let file_len = last.offset + last.len;
+
+    let mut header = Vec::with_capacity(HEADER_BYTES);
+    header.extend_from_slice(&MAGIC);
+    header.extend_from_slice(&VERSION.to_le_bytes());
+    header.extend_from_slice(&kind_code(snap.kind()).to_le_bytes());
+    let (c, dc, dim) = snap.robe_geometry();
+    let dhe_live = u64::from(!snap.dhe_live_hashers().is_empty());
+    for v in [
+        generation,
+        snap.n_features() as u64,
+        snap.stride() as u64,
+        c as u64,
+        dc as u64,
+        dim as u64,
+        snap.n_hash() as u64,
+        dhe_live,
+        file_len,
+    ] {
+        header.extend_from_slice(&v.to_le_bytes());
+    }
+    for d in &descs {
+        header.extend_from_slice(&d.offset.to_le_bytes());
+        header.extend_from_slice(&d.len.to_le_bytes());
+        header.extend_from_slice(&d.checksum.to_le_bytes());
+    }
+    let ck = fnv1a(&header);
+    header.extend_from_slice(&ck.to_le_bytes());
+    debug_assert_eq!(header.len(), HEADER_BYTES);
+
+    let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    ensure!(!name.is_empty(), "segment path {} has no file name", path.display());
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    {
+        let file = File::create(&tmp)
+            .with_context(|| format!("create segment tmp {}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&header)?;
+        let zeros = [0u8; SECTION_ALIGN as usize];
+        let mut pos = header.len() as u64;
+        for (d, s) in descs.iter().zip(&sections) {
+            w.write_all(&zeros[..(d.offset - pos) as usize])?;
+            w.write_all(s)?;
+            pos = d.offset + d.len;
+        }
+        w.flush()?;
+        w.get_ref().sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publish segment {}", path.display()))?;
+    Ok(file_len)
+}
+
+/// Parse and validate a header from the first bytes of a segment file.
+/// Cheap by design: no bulk section is touched.
+pub fn parse_header(bytes: &[u8]) -> Result<SegmentHeader> {
+    ensure_little_endian()?;
+    ensure!(
+        bytes.len() >= HEADER_BYTES,
+        "segment truncated: {} bytes, header alone is {HEADER_BYTES}",
+        bytes.len()
+    );
+    ensure!(bytes[..8] == MAGIC, "bad magic: not a CCE segment file");
+    let rd32 = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let rd64 = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = rd32(8);
+    ensure!(version == VERSION, "segment version {version} unsupported (want {VERSION})");
+    let stored = rd64(HEADER_BYTES - 8);
+    let actual = fnv1a(&bytes[..HEADER_BYTES - 8]);
+    ensure!(stored == actual, "header checksum mismatch: stored {stored:#x}, computed {actual:#x}");
+    let kind = match rd32(12) {
+        0 => MethodKind::RowWise,
+        1 => MethodKind::ElementWise,
+        2 => MethodKind::Dhe,
+        k => bail!("unknown method kind {k}"),
+    };
+    let file_len = rd64(80);
+    ensure!(
+        file_len == bytes.len() as u64,
+        "segment truncated: file is {} bytes, header says {file_len}",
+        bytes.len()
+    );
+    let mut sections = [SectionDesc::default(); N_SECTIONS];
+    for (i, d) in sections.iter_mut().enumerate() {
+        let o = 88 + i * 24;
+        *d = SectionDesc { offset: rd64(o), len: rd64(o + 8), checksum: rd64(o + 16) };
+        ensure!(
+            d.offset % SECTION_ALIGN == 0,
+            "section {} misaligned at offset {}",
+            SECTION_NAMES[i],
+            d.offset
+        );
+        ensure!(
+            d.offset >= HEADER_BYTES as u64 && d.offset.saturating_add(d.len) <= file_len,
+            "section {} [{}, {}) out of bounds (file {file_len})",
+            SECTION_NAMES[i],
+            d.offset,
+            d.offset.saturating_add(d.len)
+        );
+    }
+    Ok(SegmentHeader {
+        kind,
+        generation: rd64(16),
+        n_features: rd64(24) as usize,
+        stride: rd64(32) as usize,
+        c: rd64(40) as usize,
+        dc: rd64(48) as u32,
+        dim: rd64(56) as usize,
+        n_hash: rd64(64) as usize,
+        dhe_live: rd64(72) != 0,
+        file_len,
+        sections,
+    })
+}
+
+fn section_bytes<'a>(bytes: &'a [u8], d: &SectionDesc) -> &'a [u8] {
+    &bytes[d.offset as usize..(d.offset + d.len) as usize]
+}
+
+/// A snapshot loaded (zero-copy where possible) from a segment file.
+pub struct LoadedSegment {
+    pub snapshot: ServingSnapshot,
+    pub generation: u64,
+    pub file_bytes: u64,
+    /// true when the kernel mapping fast path was used (vs the read fallback)
+    pub mapped: bool,
+}
+
+/// Load a segment with quick verification only (header + geometry). This is
+/// the serving cold-start path: O(header), independent of table size.
+pub fn load_segment(path: &Path) -> Result<LoadedSegment> {
+    load_inner(path, false)
+}
+
+/// Load a segment and additionally verify every section checksum — O(file),
+/// for `cce snapshot inspect --verify` and corruption tests.
+pub fn load_segment_verified(path: &Path) -> Result<LoadedSegment> {
+    load_inner(path, true)
+}
+
+fn load_inner(path: &Path, verify_checksums: bool) -> Result<LoadedSegment> {
+    let file = Arc::new(MappedFile::open(path)?);
+    let h = parse_header(file.bytes())
+        .with_context(|| format!("load segment {}", path.display()))?;
+    if verify_checksums {
+        for (i, d) in h.sections.iter().enumerate() {
+            let got = fnv1a(section_bytes(file.bytes(), d));
+            ensure!(
+                got == d.checksum,
+                "checksum mismatch in section {} of {} (stored {:#x}, computed {got:#x})",
+                SECTION_NAMES[i],
+                path.display(),
+                d.checksum
+            );
+        }
+    }
+
+    let dv = &h.sections[SEC_VOCABS];
+    ensure!(
+        dv.len as usize == h.n_features * 8,
+        "vocabs section is {} bytes, expected {} for {} features",
+        dv.len,
+        h.n_features * 8,
+        h.n_features
+    );
+    let vocabs: Vec<usize> =
+        as_u64s(section_bytes(file.bytes(), dv)).iter().map(|&v| v as usize).collect();
+    let sum_v: usize = vocabs.iter().sum();
+
+    // geometry-implied section lengths: a wrong length means index math in
+    // fill_* would read out of section bounds, so reject up front
+    let expect = |idx: usize, want: usize| -> Result<()> {
+        ensure!(
+            h.sections[idx].len as usize == want,
+            "section {} is {} bytes, geometry implies {want}",
+            SECTION_NAMES[idx],
+            h.sections[idx].len
+        );
+        Ok(())
+    };
+    match h.kind {
+        MethodKind::RowWise => {
+            expect(SEC_ROWS, sum_v * h.stride * 4)?;
+            for idx in [SEC_ROBE_STARTS, SEC_ROBE_BASE, SEC_ROBE_REGION, SEC_DHE_TABLE] {
+                expect(idx, 0)?;
+            }
+            expect(SEC_DHE_SEEDS, 0)?;
+        }
+        MethodKind::ElementWise => {
+            expect(SEC_ROWS, 0)?;
+            expect(SEC_ROBE_STARTS, sum_v * h.c * 4)?;
+            expect(SEC_ROBE_BASE, h.n_features * 4)?;
+            expect(SEC_ROBE_REGION, h.n_features * 4)?;
+            expect(SEC_DHE_TABLE, 0)?;
+            expect(SEC_DHE_SEEDS, 0)?;
+        }
+        MethodKind::Dhe => {
+            for idx in [SEC_ROWS, SEC_ROBE_STARTS, SEC_ROBE_BASE, SEC_ROBE_REGION] {
+                expect(idx, 0)?;
+            }
+            if h.dhe_live {
+                expect(SEC_DHE_TABLE, 0)?;
+                expect(SEC_DHE_SEEDS, h.n_features * h.n_hash * 8)?;
+            } else {
+                expect(SEC_DHE_TABLE, sum_v * h.n_hash * 4)?;
+                expect(SEC_DHE_SEEDS, 0)?;
+            }
+        }
+    }
+
+    let dhe_live = if h.dhe_live {
+        as_u64s(section_bytes(file.bytes(), &h.sections[SEC_DHE_SEEDS]))
+            .chunks(h.n_hash.max(1))
+            .map(|c| DheHasher::from_seeds(c.to_vec()))
+            .collect()
+    } else {
+        Vec::new()
+    };
+
+    let range = |idx: usize| {
+        let d = &h.sections[idx];
+        d.offset as usize..(d.offset + d.len) as usize
+    };
+    let tables = SnapshotTables::Mapped {
+        rows: range(SEC_ROWS),
+        robe_starts: range(SEC_ROBE_STARTS),
+        robe_base: range(SEC_ROBE_BASE),
+        robe_region: range(SEC_ROBE_REGION),
+        dhe_table: range(SEC_DHE_TABLE),
+        file: file.clone(),
+    };
+    let (mapped, file_bytes) = (file.is_mmap(), file.len() as u64);
+    let snapshot = ServingSnapshot::from_parts(
+        h.kind, vocabs, h.stride, h.c, h.dc, h.dim, h.n_hash, dhe_live, tables,
+    );
+    Ok(LoadedSegment { snapshot, generation: h.generation, file_bytes, mapped })
+}
+
+/// Per-section report for `cce snapshot inspect`.
+pub struct SectionReport {
+    pub name: &'static str,
+    pub offset: u64,
+    pub bytes: u64,
+    /// `None` unless checksum verification was requested
+    pub checksum_ok: Option<bool>,
+}
+
+pub struct SegmentInfo {
+    pub header: SegmentHeader,
+    pub file_bytes: u64,
+    pub sections: Vec<SectionReport>,
+}
+
+/// Read a segment's header + section table without building a snapshot.
+pub fn inspect(path: &Path, verify: bool) -> Result<SegmentInfo> {
+    let file = MappedFile::open(path)?;
+    let header = parse_header(file.bytes())
+        .with_context(|| format!("inspect segment {}", path.display()))?;
+    let sections = header
+        .sections
+        .iter()
+        .enumerate()
+        .map(|(i, d)| SectionReport {
+            name: SECTION_NAMES[i],
+            offset: d.offset,
+            bytes: d.len,
+            checksum_ok: verify.then(|| fnv1a(section_bytes(file.bytes(), d)) == d.checksum),
+        })
+        .collect();
+    Ok(SegmentInfo { header, file_bytes: file.len() as u64, sections })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tables::indexer::Indexer;
+    use crate::tables::layout::TablePlan;
+    use crate::util::Rng;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cce_segment_{}_{tag}.cceseg", std::process::id()))
+    }
+
+    fn rowwise_snapshot(seed: u64) -> ServingSnapshot {
+        let mut rng = Rng::new(seed);
+        let ix = Indexer::new_rowwise(&mut rng, TablePlan::new(&[5, 40, 300], 8, 2, 2, 4));
+        ServingSnapshot::bake(&ix)
+    }
+
+    fn cats_for(vocabs: &[usize], batch: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * vocabs.len())
+            .map(|i| rng.below(vocabs[i % vocabs.len()] as u64) as u32)
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_rowwise_bit_identical() {
+        let p = tmp_path("rt_rowwise");
+        let mut rng = Rng::new(0);
+        let ix = Indexer::new_rowwise(&mut rng, TablePlan::new(&[5, 40, 300], 8, 2, 2, 4));
+        let snap = ServingSnapshot::bake(&ix);
+        let bytes = write_segment(&snap, 3, &p).unwrap();
+        let loaded = load_segment_verified(&p).unwrap();
+        assert_eq!(loaded.generation, 3);
+        assert_eq!(loaded.file_bytes, bytes);
+        assert!(loaded.snapshot.is_mapped());
+        let cats = cats_for(&ix.plan.vocabs, 7, 1);
+        let stride = snap.sample_stride();
+        let mut a = vec![0i32; 7 * stride];
+        let mut b = vec![0i32; 7 * stride];
+        snap.fill_rowwise(&cats, 7, &mut a);
+        loaded.snapshot.fill_rowwise(&cats, 7, &mut b);
+        assert_eq!(a, b);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_robe_and_dhe_live() {
+        let mut rng = Rng::new(4);
+        let robe = ServingSnapshot::bake(&Indexer::new_robe(&mut rng, &[30, 100], 50, 8, 2));
+        let p1 = tmp_path("rt_robe");
+        write_segment(&robe, 1, &p1).unwrap();
+        let l1 = load_segment_verified(&p1).unwrap();
+        let cats = cats_for(&[30, 100], 9, 5);
+        let mut a = vec![0i32; 9 * robe.sample_stride()];
+        let mut b = a.clone();
+        robe.fill_elementwise(&cats, 9, &mut a);
+        l1.snapshot.fill_elementwise(&cats, 9, &mut b);
+        assert_eq!(a, b);
+        std::fs::remove_file(&p1).ok();
+
+        // DHE with the live-fallback path: seeds round-trip, not the table
+        let ix = Indexer::new_dhe(&mut rng, &[10, 200], 8);
+        let dhe = ServingSnapshot::bake_with_dhe_cap(&ix, 0);
+        let p2 = tmp_path("rt_dhe_live");
+        write_segment(&dhe, 2, &p2).unwrap();
+        let l2 = load_segment_verified(&p2).unwrap();
+        assert!(l2.snapshot.dhe_table().is_empty(), "live fallback must persist seeds");
+        let cats = cats_for(&[10, 200], 5, 7);
+        let mut x = vec![0f32; 5 * dhe.sample_stride()];
+        let mut y = x.clone();
+        dhe.fill_dhe(&cats, 5, &mut x);
+        l2.snapshot.fill_dhe(&cats, 5, &mut y);
+        assert_eq!(x, y);
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let p = tmp_path("truncated");
+        write_segment(&rowwise_snapshot(1), 0, &p).unwrap();
+        let full = std::fs::metadata(&p).unwrap().len();
+        // cut into the sections
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(full - 1).unwrap();
+        drop(f);
+        let err = format!("{:#}", load_segment(&p).unwrap_err());
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        // cut into the header itself
+        let f = std::fs::OpenOptions::new().write(true).open(&p).unwrap();
+        f.set_len(100).unwrap();
+        drop(f);
+        let err = format!("{:#}", load_segment(&p).unwrap_err());
+        assert!(err.contains("truncated"), "unexpected error: {err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let p = tmp_path("magic");
+        write_segment(&rowwise_snapshot(2), 0, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        let err = format!("{:#}", load_segment(&p).unwrap_err());
+        assert!(err.contains("magic"), "unexpected error: {err}");
+
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        let err = format!("{:#}", load_segment(&p).unwrap_err());
+        assert!(err.contains("version 99"), "unexpected error: {err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_header_and_section_corruption() {
+        let p = tmp_path("corrupt");
+        write_segment(&rowwise_snapshot(3), 7, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // flip a bit in the generation field: quick load must catch it
+        let mut bad = good.clone();
+        bad[16] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+        let err = format!("{:#}", load_segment(&p).unwrap_err());
+        assert!(err.contains("header checksum"), "unexpected error: {err}");
+
+        // flip a byte inside the rows section: quick load stays fast (and
+        // accepts), full verification must reject
+        let h = parse_header(&good).unwrap();
+        let rows_off = h.sections[SEC_ROWS].offset as usize;
+        let mut bad = good.clone();
+        bad[rows_off] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load_segment(&p).is_ok(), "quick load does not hash sections");
+        let err = format!("{:#}", load_segment_verified(&p).unwrap_err());
+        assert!(err.contains("checksum mismatch in section rows"), "unexpected error: {err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn inspect_reports_sections_and_generation() {
+        let p = tmp_path("inspect");
+        write_segment(&rowwise_snapshot(5), 42, &p).unwrap();
+        let info = inspect(&p, true).unwrap();
+        assert_eq!(info.header.generation, 42);
+        assert_eq!(info.sections.len(), N_SECTIONS);
+        assert!(info.sections.iter().all(|s| s.checksum_ok == Some(true)));
+        let rows = info.sections.iter().find(|s| s.name == "rows").unwrap();
+        assert!(rows.bytes > 0 && rows.offset % SECTION_ALIGN == 0);
+        let quick = inspect(&p, false).unwrap();
+        assert!(quick.sections.iter().all(|s| s.checksum_ok.is_none()));
+        std::fs::remove_file(&p).ok();
+    }
+}

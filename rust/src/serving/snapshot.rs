@@ -15,18 +15,54 @@
 //!     under [`DHE_BAKE_MAX_ELEMS`]; above that the per-feature hashers are
 //!     kept and evaluated live (bit-identical either way).
 //!
+//! The bulk gather tables live behind [`SnapshotTables`]: either owned heap
+//! vectors (fresh `bake`) or borrowed slices of a memory-mapped segment file
+//! (`serving::segment::load_segment`), so a serving process can cold-start
+//! in milliseconds without copying multi-GB tables. Geometry (vocabs,
+//! per-feature offsets, strides) is always owned — it is tiny and recomputed
+//! on load.
+//!
 //! Every `fill_*` here is bit-identical to the live `Indexer` equivalent —
-//! pinned by `tests/proptests.rs::prop_snapshot_*` — so a snapshot can be
-//! swapped under `coordinator::serve` with zero behavior change.
+//! pinned by `tests/proptests.rs::prop_snapshot_*` and the segment
+//! round-trip proptests — so a snapshot can be swapped under
+//! `coordinator::serve` with zero behavior change.
 
 use crate::hashing::DheHasher;
 use crate::tables::indexer::{Indexer, MethodKind};
 use crate::tables::layout::SubtableId;
+use crate::util::mmap::{self, MappedFile};
+use std::ops::Range;
+use std::sync::Arc;
 
 /// Above this many total baked f32s, DHE falls back to live hashing (the
 /// terabyte-sim preset would otherwise bake multi-GB tables; see ROADMAP
 /// "sharded snapshots").
 pub const DHE_BAKE_MAX_ELEMS: usize = 1 << 26;
+
+/// The bulk gather tables, either heap-owned (baked in this process) or
+/// zero-copy views into a mapped segment file. The enum is the ONLY place
+/// the two storage modes differ; geometry and the `fill_*` hot paths are
+/// shared.
+#[derive(Clone)]
+pub(crate) enum SnapshotTables {
+    Owned {
+        rows: Vec<u32>,
+        robe_starts: Vec<u32>,
+        robe_base: Vec<i32>,
+        robe_region: Vec<u32>,
+        dhe_table: Vec<f32>,
+    },
+    /// Byte ranges into `file` (64-byte aligned by the segment format, so
+    /// the typed reinterpretation in the accessors is always valid).
+    Mapped {
+        file: Arc<MappedFile>,
+        rows: Range<usize>,
+        robe_starts: Range<usize>,
+        robe_base: Range<usize>,
+        robe_region: Range<usize>,
+        dhe_table: Range<usize>,
+    },
+}
 
 /// Read-only index-generation state for one frozen model.
 #[derive(Clone)]
@@ -34,63 +70,65 @@ pub struct ServingSnapshot {
     kind: MethodKind,
     n_features: usize,
     vocabs: Vec<usize>,
-    /// row-wise: global rows `[f][v][t*c]`, entry count per id
+    /// row-wise: entry count per id in the rows table (`t*c`)
     stride: usize,
-    rows: Vec<u32>,
     feat_off: Vec<usize>,
-    /// ROBE: window starts `[f][v][c]` + per-feature region geometry
+    /// ROBE geometry (column count, chunk length, embedding dim)
     c: usize,
     dc: u32,
     dim: usize,
-    robe_starts: Vec<u32>,
     robe_off: Vec<usize>,
-    robe_base: Vec<i32>,
-    robe_region: Vec<u32>,
-    /// DHE: baked `[f][v][n_hash]` features, or live hashers when too big
+    /// DHE geometry + live-fallback hashers (empty when the table is baked)
     n_hash: usize,
-    dhe_table: Vec<f32>,
     dhe_off: Vec<usize>,
     dhe_live: Vec<DheHasher>,
+    tables: SnapshotTables,
+}
+
+/// Running byte/element offsets of each feature's block in a flat
+/// `[f][v][width]` table.
+fn prefix_offsets(vocabs: &[usize], width: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(vocabs.len());
+    let mut acc = 0usize;
+    for &v in vocabs {
+        out.push(acc);
+        acc += v * width;
+    }
+    out
 }
 
 impl ServingSnapshot {
     /// Bake a live indexer's current maps into gather tables.
     pub fn bake(ix: &Indexer) -> ServingSnapshot {
-        let mut snap = ServingSnapshot {
-            kind: ix.kind,
-            n_features: ix.plan.n_features(),
-            vocabs: ix.plan.vocabs.clone(),
-            stride: 0,
-            rows: Vec::new(),
-            feat_off: Vec::new(),
-            c: 0,
-            dc: 0,
-            dim: 0,
-            robe_starts: Vec::new(),
-            robe_off: Vec::new(),
-            robe_base: Vec::new(),
-            robe_region: Vec::new(),
-            n_hash: 0,
-            dhe_table: Vec::new(),
-            dhe_off: Vec::new(),
-            dhe_live: Vec::new(),
-        };
-        match ix.kind {
-            MethodKind::RowWise => snap.bake_rowwise(ix),
-            MethodKind::ElementWise => snap.bake_robe(ix),
-            MethodKind::Dhe => snap.bake_dhe(ix),
-        }
-        snap
+        Self::bake_with_dhe_cap(ix, DHE_BAKE_MAX_ELEMS)
     }
 
-    fn bake_rowwise(&mut self, ix: &Indexer) {
+    /// `bake` with an explicit DHE bake budget — public so tests can force
+    /// the live-fallback path without a terabyte-scale vocab.
+    pub fn bake_with_dhe_cap(ix: &Indexer, dhe_max_elems: usize) -> ServingSnapshot {
+        match ix.kind {
+            MethodKind::RowWise => Self::bake_rowwise(ix),
+            MethodKind::ElementWise => Self::bake_robe(ix),
+            MethodKind::Dhe => Self::bake_dhe(ix, dhe_max_elems),
+        }
+    }
+
+    fn bake_rowwise(ix: &Indexer) -> ServingSnapshot {
+        // Guard the serve-time u32 → i32 cast here, before any allocation:
+        // a pool this large would silently wrap row ids in `fill_rowwise`.
+        assert!(
+            ix.plan.total_rows < i32::MAX as usize,
+            "pool has {} rows; row ids must fit in i32 for the device gather",
+            ix.plan.total_rows
+        );
         let (t_n, c_n) = (ix.plan.t, ix.plan.c);
-        self.stride = t_n * c_n;
-        let total: usize = self.vocabs.iter().map(|&v| v * self.stride).sum();
-        self.rows = vec![0u32; total];
-        let mut off = 0usize;
-        for f in 0..self.n_features {
-            self.feat_off.push(off);
+        let stride = t_n * c_n;
+        let vocabs = ix.plan.vocabs.clone();
+        let total: usize = vocabs.iter().map(|&v| v * stride).sum();
+        let mut rows = vec![0u32; total];
+        let feat_off = prefix_offsets(&vocabs, stride);
+        for f in 0..vocabs.len() {
+            let off = feat_off[f];
             // interleave the feature's t*c subtable maps so one id's rows
             // are contiguous in the gather table
             for t in 0..t_n {
@@ -99,52 +137,201 @@ impl ServingSnapshot {
                         ix.materialize_global(SubtableId { feature: f, term: t, column: j });
                     let slot = t * c_n + j;
                     for (v, &g) in table.iter().enumerate() {
-                        self.rows[off + v * self.stride + slot] = g;
+                        rows[off + v * stride + slot] = g;
                     }
                 }
             }
-            off += self.vocabs[f] * self.stride;
+        }
+        ServingSnapshot {
+            kind: MethodKind::RowWise,
+            n_features: vocabs.len(),
+            feat_off,
+            vocabs,
+            stride,
+            c: 0,
+            dc: 0,
+            dim: 0,
+            robe_off: Vec::new(),
+            n_hash: 0,
+            dhe_off: Vec::new(),
+            dhe_live: Vec::new(),
+            tables: SnapshotTables::Owned {
+                rows,
+                robe_starts: Vec::new(),
+                robe_base: Vec::new(),
+                robe_region: Vec::new(),
+                dhe_table: Vec::new(),
+            },
         }
     }
 
-    fn bake_robe(&mut self, ix: &Indexer) {
-        self.dim = ix.dim();
-        let mut off = 0usize;
-        for f in 0..self.n_features {
+    fn bake_robe(ix: &Indexer) -> ServingSnapshot {
+        let vocabs = ix.plan.vocabs.clone();
+        let dim = ix.dim();
+        let (mut c, mut dc) = (0usize, 0u32);
+        let mut robe_starts = Vec::new();
+        let mut robe_base = Vec::new();
+        let mut robe_region = Vec::new();
+        for f in 0..vocabs.len() {
             let w = ix.robe_windows(f);
             if f == 0 {
-                self.c = w.n_columns();
-                self.dc = w.dc;
+                c = w.n_columns();
+                dc = w.dc;
             }
-            self.robe_off.push(off);
-            self.robe_base.push(ix.robe_region_base(f) as i32);
-            self.robe_region.push(w.region);
-            for v in 0..self.vocabs[f] as u32 {
-                for j in 0..self.c {
-                    self.robe_starts.push(w.start(j, v));
+            robe_base.push(ix.robe_region_base(f) as i32);
+            robe_region.push(w.region);
+            for v in 0..vocabs[f] as u32 {
+                for j in 0..c {
+                    robe_starts.push(w.start(j, v));
                 }
             }
-            off += self.vocabs[f] * self.c;
+        }
+        ServingSnapshot {
+            kind: MethodKind::ElementWise,
+            n_features: vocabs.len(),
+            robe_off: prefix_offsets(&vocabs, c),
+            vocabs,
+            stride: 0,
+            feat_off: Vec::new(),
+            c,
+            dc,
+            dim,
+            n_hash: 0,
+            dhe_off: Vec::new(),
+            dhe_live: Vec::new(),
+            tables: SnapshotTables::Owned {
+                rows: Vec::new(),
+                robe_starts,
+                robe_base,
+                robe_region,
+                dhe_table: Vec::new(),
+            },
         }
     }
 
-    fn bake_dhe(&mut self, ix: &Indexer) {
-        self.n_hash = ix.n_hash;
-        let total: usize = self.vocabs.iter().map(|&v| v * self.n_hash).sum();
-        if total > DHE_BAKE_MAX_ELEMS {
-            self.dhe_live = ix.dhe_hashers().to_vec();
-            return;
-        }
-        self.dhe_table = vec![0f32; total];
-        let mut off = 0usize;
-        for (f, h) in ix.dhe_hashers().iter().enumerate() {
-            self.dhe_off.push(off);
-            for v in 0..self.vocabs[f] {
-                h.fill(v as u32, &mut self.dhe_table[off + v * self.n_hash..][..self.n_hash]);
+    fn bake_dhe(ix: &Indexer, dhe_max_elems: usize) -> ServingSnapshot {
+        let vocabs = ix.plan.vocabs.clone();
+        let n_hash = ix.n_hash;
+        let total: usize = vocabs.iter().map(|&v| v * n_hash).sum();
+        let (mut dhe_table, mut dhe_live) = (Vec::new(), Vec::new());
+        if total > dhe_max_elems {
+            dhe_live = ix.dhe_hashers().to_vec();
+        } else {
+            dhe_table = vec![0f32; total];
+            let mut off = 0usize;
+            for (f, h) in ix.dhe_hashers().iter().enumerate() {
+                for v in 0..vocabs[f] {
+                    h.fill(v as u32, &mut dhe_table[off + v * n_hash..][..n_hash]);
+                }
+                off += vocabs[f] * n_hash;
             }
-            off += self.vocabs[f] * self.n_hash;
+        }
+        ServingSnapshot {
+            kind: MethodKind::Dhe,
+            n_features: vocabs.len(),
+            dhe_off: prefix_offsets(&vocabs, n_hash),
+            vocabs,
+            stride: 0,
+            feat_off: Vec::new(),
+            c: 0,
+            dc: 0,
+            dim: 0,
+            robe_off: Vec::new(),
+            n_hash,
+            dhe_live,
+            tables: SnapshotTables::Owned {
+                rows: Vec::new(),
+                robe_starts: Vec::new(),
+                robe_base: Vec::new(),
+                robe_region: Vec::new(),
+                dhe_table,
+            },
         }
     }
+
+    /// Assemble a snapshot around already-materialized tables — the segment
+    /// loader's entry point. Geometry offsets are recomputed, not trusted
+    /// from the file.
+    #[allow(clippy::too_many_arguments)] // one arg per header geometry field
+    pub(crate) fn from_parts(
+        kind: MethodKind,
+        vocabs: Vec<usize>,
+        stride: usize,
+        c: usize,
+        dc: u32,
+        dim: usize,
+        n_hash: usize,
+        dhe_live: Vec<DheHasher>,
+        tables: SnapshotTables,
+    ) -> ServingSnapshot {
+        ServingSnapshot {
+            kind,
+            n_features: vocabs.len(),
+            feat_off: prefix_offsets(&vocabs, stride),
+            robe_off: prefix_offsets(&vocabs, c),
+            dhe_off: prefix_offsets(&vocabs, n_hash),
+            vocabs,
+            stride,
+            c,
+            dc,
+            dim,
+            n_hash,
+            dhe_live,
+            tables,
+        }
+    }
+
+    // ---- table accessors: the only code that sees the storage mode ----
+
+    #[inline]
+    pub(crate) fn rows(&self) -> &[u32] {
+        match &self.tables {
+            SnapshotTables::Owned { rows, .. } => rows,
+            SnapshotTables::Mapped { file, rows, .. } => mmap::as_u32s(&file.bytes()[rows.clone()]),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn robe_starts(&self) -> &[u32] {
+        match &self.tables {
+            SnapshotTables::Owned { robe_starts, .. } => robe_starts,
+            SnapshotTables::Mapped { file, robe_starts, .. } => {
+                mmap::as_u32s(&file.bytes()[robe_starts.clone()])
+            }
+        }
+    }
+
+    #[inline]
+    pub(crate) fn robe_base(&self) -> &[i32] {
+        match &self.tables {
+            SnapshotTables::Owned { robe_base, .. } => robe_base,
+            SnapshotTables::Mapped { file, robe_base, .. } => {
+                mmap::as_i32s(&file.bytes()[robe_base.clone()])
+            }
+        }
+    }
+
+    #[inline]
+    pub(crate) fn robe_region(&self) -> &[u32] {
+        match &self.tables {
+            SnapshotTables::Owned { robe_region, .. } => robe_region,
+            SnapshotTables::Mapped { file, robe_region, .. } => {
+                mmap::as_u32s(&file.bytes()[robe_region.clone()])
+            }
+        }
+    }
+
+    #[inline]
+    pub(crate) fn dhe_table(&self) -> &[f32] {
+        match &self.tables {
+            SnapshotTables::Owned { dhe_table, .. } => dhe_table,
+            SnapshotTables::Mapped { file, dhe_table, .. } => {
+                mmap::as_f32s(&file.bytes()[dhe_table.clone()])
+            }
+        }
+    }
+
+    // ---- geometry accessors (segment writer + engine) ----
 
     pub fn kind(&self) -> MethodKind {
         self.kind
@@ -152,6 +339,31 @@ impl ServingSnapshot {
 
     pub fn n_features(&self) -> usize {
         self.n_features
+    }
+
+    /// Whether the tables are zero-copy views of a mapped segment file.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.tables, SnapshotTables::Mapped { .. })
+    }
+
+    pub(crate) fn vocabs(&self) -> &[usize] {
+        &self.vocabs
+    }
+
+    pub(crate) fn stride(&self) -> usize {
+        self.stride
+    }
+
+    pub(crate) fn robe_geometry(&self) -> (usize, u32, usize) {
+        (self.c, self.dc, self.dim)
+    }
+
+    pub(crate) fn n_hash(&self) -> usize {
+        self.n_hash
+    }
+
+    pub(crate) fn dhe_live_hashers(&self) -> &[DheHasher] {
+        &self.dhe_live
     }
 
     /// Embedding-input elements per sample (`emb_elems / batch`).
@@ -163,11 +375,17 @@ impl ServingSnapshot {
         }
     }
 
-    /// Host memory of the baked tables (Appendix E accounting).
+    /// Host memory of the baked tables and geometry (Appendix E accounting).
+    /// For a mapped snapshot this counts the file-backed pages the tables
+    /// occupy once touched — the serving working set is the same either way.
     pub fn host_bytes(&self) -> usize {
-        self.rows.len() * 4
-            + self.robe_starts.len() * 4
-            + self.dhe_table.len() * 4
+        self.rows().len() * 4
+            + self.robe_starts().len() * 4
+            + self.robe_base().len() * 4
+            + self.robe_region().len() * 4
+            + self.dhe_table().len() * 4
+            + self.vocabs.len() * 8
+            + (self.feat_off.len() + self.robe_off.len() + self.dhe_off.len()) * 8
             + self.dhe_live.len() * self.n_hash * 8 // live fallback: seed tables
     }
 
@@ -176,13 +394,15 @@ impl ServingSnapshot {
         let f_n = self.n_features;
         assert_eq!(cats.len(), batch * f_n);
         assert_eq!(out.len(), batch * f_n * self.stride);
+        let rows = self.rows();
         let mut o = 0usize;
         for b in 0..batch {
             for f in 0..f_n {
                 let v = cats[b * f_n + f] as usize;
                 debug_assert!(v < self.vocabs[f], "value {v} out of vocab");
-                let block = &self.rows[self.feat_off[f] + v * self.stride..][..self.stride];
+                let block = &rows[self.feat_off[f] + v * self.stride..][..self.stride];
                 for &r in block {
+                    // cast cannot wrap: bake_rowwise asserts total rows < i32::MAX
                     out[o] = r as i32;
                     o += 1;
                 }
@@ -195,12 +415,15 @@ impl ServingSnapshot {
         let f_n = self.n_features;
         assert_eq!(cats.len(), batch * f_n);
         assert_eq!(out.len(), batch * f_n * self.dim);
+        let all_starts = self.robe_starts();
+        let all_base = self.robe_base();
+        let all_region = self.robe_region();
         let mut o = 0usize;
         for b in 0..batch {
             for f in 0..f_n {
                 let v = cats[b * f_n + f] as usize;
-                let starts = &self.robe_starts[self.robe_off[f] + v * self.c..][..self.c];
-                let (base, region) = (self.robe_base[f], self.robe_region[f]);
+                let starts = &all_starts[self.robe_off[f] + v * self.c..][..self.c];
+                let (base, region) = (all_base[f], all_region[f]);
                 for &s in starts {
                     for e in 0..self.dc {
                         out[o] = base + ((s + e) % region) as i32;
@@ -216,15 +439,16 @@ impl ServingSnapshot {
         let f_n = self.n_features;
         assert_eq!(cats.len(), batch * f_n);
         assert_eq!(out.len(), batch * f_n * self.n_hash);
+        let table = self.dhe_table();
         for b in 0..batch {
             for f in 0..f_n {
                 let v = cats[b * f_n + f] as usize;
                 let dst = &mut out[(b * f_n + f) * self.n_hash..][..self.n_hash];
-                if self.dhe_table.is_empty() {
+                if table.is_empty() {
                     self.dhe_live[f].fill(v as u32, dst);
                 } else {
                     let src = self.dhe_off[f] + v * self.n_hash;
-                    dst.copy_from_slice(&self.dhe_table[src..src + self.n_hash]);
+                    dst.copy_from_slice(&table[src..src + self.n_hash]);
                 }
             }
         }
@@ -265,6 +489,7 @@ mod tests {
         snap.fill_rowwise(&cats, batch, &mut baked);
         assert_eq!(live, baked);
         assert_eq!(snap.sample_stride(), 3 * stride);
+        assert!(!snap.is_mapped());
         assert!(snap.host_bytes() > 0);
     }
 
@@ -309,20 +534,33 @@ mod tests {
         let mut rng = Rng::new(6);
         let ix = Indexer::new_dhe(&mut rng, &[10, 200], 8);
         let snap = ServingSnapshot::bake(&ix);
-        assert!(!snap.dhe_table.is_empty(), "small vocab should bake");
+        assert!(!snap.dhe_table().is_empty(), "small vocab should bake");
         let cats = cats_for(&[10, 200], 5, 7);
         let mut live = vec![0f32; 5 * 2 * 8];
         let mut baked = vec![0f32; 5 * 2 * 8];
         ix.fill_dhe(&cats, 5, &mut live);
         snap.fill_dhe(&cats, 5, &mut baked);
         assert_eq!(live, baked);
-        // force the live-fallback path and check parity again
-        let mut fallback = snap.clone();
-        fallback.dhe_table = Vec::new();
-        fallback.dhe_off = Vec::new();
-        fallback.dhe_live = ix.dhe_hashers().to_vec();
+        // force the live-fallback path (bake budget 0) and check parity again
+        let fallback = ServingSnapshot::bake_with_dhe_cap(&ix, 0);
+        assert!(fallback.dhe_table().is_empty());
         let mut fb = vec![0f32; 5 * 2 * 8];
         fallback.fill_dhe(&cats, 5, &mut fb);
         assert_eq!(live, fb);
+    }
+
+    #[test]
+    fn host_bytes_counts_geometry_not_just_bulk_tables() {
+        let mut rng = Rng::new(8);
+        let ix = Indexer::new_robe(&mut rng, &[30, 100], 50, 8, 2);
+        let snap = ServingSnapshot::bake(&ix);
+        let bulk = snap.robe_starts().len() * 4;
+        // ROBE per-feature base/region vectors and offset tables must count
+        assert!(
+            snap.host_bytes() >= bulk + 2 * 2 * 4 + 2 * 8,
+            "host_bytes {} omits geometry (bulk {})",
+            snap.host_bytes(),
+            bulk
+        );
     }
 }

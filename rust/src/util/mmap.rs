@@ -1,0 +1,208 @@
+//! Read-only memory-mapped files for zero-copy snapshot loading.
+//!
+//! Serving cold start must not scale with table size (ROADMAP: "millisecond
+//! cold start"), so segment files are `mmap(2)`ed and served straight off the
+//! page cache instead of being copied into heap vectors. No crate deps: the
+//! two syscalls are declared via `extern "C"` against the libc that `std`
+//! already links on unix targets. When `mmap` is unavailable (non-unix, or a
+//! filesystem that refuses it) we fall back to ONE buffered read into an
+//! 8-byte-aligned heap buffer — correctness is identical, only cold-start
+//! latency and memory residency differ.
+//!
+//! Alignment contract: the mapping base is page-aligned (mmap) or 8-byte
+//! aligned (heap fallback backed by `Vec<u64>`), and segment sections are
+//! 64-byte aligned within the file, so the `as_u32s`/`as_i32s`/`as_f32s`/
+//! `as_u64s` reinterpretation helpers below are always in-bounds and aligned
+//! for section slices. They assert both properties rather than trusting the
+//! caller.
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use core::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// Kernel mapping; unmapped on drop.
+    #[cfg(unix)]
+    Mmap,
+    /// Heap fallback. The vec is the allocation `ptr` points into; `u64`
+    /// elements guarantee 8-byte base alignment.
+    Heap(#[allow(dead_code)] Vec<u64>),
+}
+
+/// A whole file exposed as one immutable byte slice.
+pub struct MappedFile {
+    ptr: *const u8,
+    len: usize,
+    backing: Backing,
+}
+
+// The mapping is read-only for the lifetime of the struct and the backing
+// (kernel pages or an owned Vec) cannot move, so sharing across threads is
+// sound.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map `path` read-only, falling back to a single buffered read.
+    pub fn open(path: &Path) -> Result<MappedFile> {
+        let mut file =
+            File::open(path).with_context(|| format!("open {} for mapping", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        #[cfg(unix)]
+        if len > 0 {
+            use std::os::unix::io::AsRawFd;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr != sys::map_failed() {
+                return Ok(MappedFile { ptr: ptr as *const u8, len, backing: Backing::Mmap });
+            }
+            log::warn!("mmap({}) failed; falling back to a buffered read", path.display());
+        }
+        // Fallback: one read into an 8-byte-aligned buffer.
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        if len > 0 {
+            let bytes =
+                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            file.read_exact(bytes)
+                .with_context(|| format!("read {} into fallback buffer", path.display()))?;
+        }
+        Ok(MappedFile { ptr: buf.as_ptr() as *const u8, len, backing: Backing::Heap(buf) })
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the fast path (true zero-copy kernel mapping) was taken.
+    pub fn is_mmap(&self) -> bool {
+        #[cfg(unix)]
+        return matches!(self.backing, Backing::Mmap);
+        #[cfg(not(unix))]
+        false
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if matches!(self.backing, Backing::Mmap) {
+            unsafe { sys::munmap(self.ptr as *mut core::ffi::c_void, self.len) };
+        }
+    }
+}
+
+macro_rules! cast_helper {
+    ($name:ident, $ty:ty) => {
+        /// Reinterpret aligned raw bytes as a typed slice. All bit patterns
+        /// are valid for the target type, so given the asserted alignment
+        /// and length this is sound.
+        pub fn $name(bytes: &[u8]) -> &[$ty] {
+            let size = std::mem::size_of::<$ty>();
+            assert_eq!(bytes.len() % size, 0, "byte length {} not /{size}", bytes.len());
+            assert_eq!(bytes.as_ptr() as usize % size, 0, "misaligned {} slice", stringify!($ty));
+            unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const $ty, bytes.len() / size) }
+        }
+    };
+}
+
+cast_helper!(as_u32s, u32);
+cast_helper!(as_i32s, i32);
+cast_helper!(as_f32s, f32);
+cast_helper!(as_u64s, u64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("cce_mmap_{}_{tag}", std::process::id()));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let p = tmp("contents", &data);
+        let m = MappedFile::open(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.bytes(), &data[..]);
+        #[cfg(target_os = "linux")]
+        assert!(m.is_mmap(), "linux should take the mmap fast path");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let p = tmp("empty", &[]);
+        let m = MappedFile::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn cast_helpers_roundtrip_le_values() {
+        let vals = [1u32, 0xDEAD_BEEF, u32::MAX];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = tmp("cast", &bytes);
+        let m = MappedFile::open(&p).unwrap();
+        assert_eq!(as_u32s(m.bytes()), &vals[..]);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "not /4")]
+    fn cast_rejects_ragged_length() {
+        let buf = vec![0u64; 1];
+        let bytes = unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, 7) };
+        let _ = as_u32s(bytes);
+    }
+}

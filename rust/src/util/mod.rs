@@ -5,6 +5,7 @@
 pub mod args;
 pub mod json;
 pub mod logger;
+pub mod mmap;
 pub mod rng;
 pub mod threadpool;
 pub mod timer;

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# CI gate: tier-1 verify (ROADMAP.md) plus formatting, lint, and a smoke
-# run of the clustering-event perf bench (perf tracked via
-# bench_results/BENCH_cluster.json from PR 2 on).
+# CI gate: tier-1 verify (ROADMAP.md) plus formatting, lint, and smoke
+# runs of the perf benches (perf tracked via bench_results/BENCH_cluster.json
+# from PR 2 on and bench_results/BENCH_serving.json from the snapshot PR on).
 #
 #   scripts/verify.sh          # full gate
 #   scripts/verify.sh --quick  # skip the release build + bench smoke
@@ -61,6 +61,56 @@ assert all(r["stale_steps"] >= 1 for r in over), "overlap rows must report stale
 print(f"BENCH_cluster.json OK ({len(results)} results, mode={doc['mode']}, "
       f"overlap stall {min(r['stall_ns'] for r in over)/1e6:.2f} ms vs "
       f"sync {min(r['stall_ns'] for r in sync)/1e6:.2f} ms)")
+PY
+
+  echo "== perf_hot_paths bench (smoke) =="
+  cargo bench --bench perf_hot_paths -- --smoke
+
+  echo "== BENCH_serving.json well-formed =="
+  python3 - <<'PY'
+import json
+
+with open("bench_results/BENCH_serving.json") as f:
+    doc = json.load(f)
+assert doc.get("schema") == "cce.perf_serving.v1", f"bad schema: {doc.get('schema')!r}"
+assert doc.get("mode") in ("smoke", "full"), f"bad mode: {doc.get('mode')!r}"
+results = doc.get("results")
+assert isinstance(results, list) and results, "results missing or empty"
+for r in results:
+    assert isinstance(r.get("name"), str) and r["name"], f"result without name: {r}"
+    for key in ("mean_ns", "p50_ns", "min_ns"):
+        assert isinstance(r.get(key), (int, float)) and r[key] >= 0, f"bad {key}: {r}"
+
+# cold start: both presets present, load time + bake time + speedup recorded,
+# and the zero-copy load beats a fresh bake ≥10x at the terabyte-ish shape
+cold = [r for r in results if r.get("group") == "cold_start"]
+assert len(cold) >= 2, f"cold_start group missing or incomplete: {len(cold)} rows"
+for r in cold:
+    for key in ("cold_start_ns", "bake_ns", "speedup"):
+        assert isinstance(r.get(key), (int, float)) and r[key] >= 0, \
+            f"cold_start row missing {key}: {r}"
+tb = [r for r in cold if r.get("preset") == "terabyte-ish"]
+assert tb, f"terabyte-ish cold_start row missing: {[r.get('preset') for r in cold]}"
+assert tb[0]["speedup"] >= 10, \
+    f"mmap cold start only {tb[0]['speedup']:.1f}x faster than bake (need >=10x)"
+
+# hot swap: install latency p99 under load must be recorded
+hs = [r for r in results if r.get("group") == "hot_swap"]
+assert hs, "hot_swap row missing"
+for r in hs:
+    assert isinstance(r.get("swap_pause_ns"), (int, float)) and r["swap_pause_ns"] > 0, \
+        f"hot_swap row missing swap_pause_ns: {r}"
+    assert r.get("installs", 0) >= 1, f"no snapshot installs recorded: {r}"
+
+# parity: mapped tables must serve at a throughput comparable to owned ones
+par = [r for r in results if r.get("group") == "load_parity"]
+assert par, "load_parity row missing"
+assert all(r.get("parity", 0) > 0 for r in par), f"bad parity rows: {par}"
+
+print(f"BENCH_serving.json OK ({len(results)} results, mode={doc['mode']}, "
+      f"terabyte cold start {tb[0]['cold_start_ns']/1e6:.2f} ms = "
+      f"{tb[0]['speedup']:.0f}x over bake, "
+      f"swap pause p99 {hs[0]['swap_pause_ns']/1e6:.2f} ms)")
 PY
 fi
 

@@ -7,7 +7,7 @@ use cce::data::synthetic::{DatasetSpec, SyntheticDataset};
 use cce::kmeans;
 use cce::metrics::extrapolate::{params_to_reach, Crossing, SweepPoint};
 use cce::runtime::manifest::{FieldDesc, InitSpec};
-use cce::serving::ServingSnapshot;
+use cce::serving::{load_segment, load_segment_verified, write_segment, ServingSnapshot};
 use cce::tables::indexer::Indexer;
 use cce::tables::layout::{SubtableId, TablePlan};
 use cce::testutil::prop;
@@ -144,6 +144,166 @@ fn prop_snapshot_dhe_bit_identical_to_live_indexer() {
         // f32 equality is intentional: the baked table stores the hasher's
         // exact output bits
         prop::prop_assert!(g, live == baked, "dhe snapshot diverged from live indexer");
+    });
+}
+
+/// Unique temp path per iteration so parallel test binaries never collide.
+fn tmp_seg(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static N: AtomicUsize = AtomicUsize::new(0);
+    std::env::temp_dir().join(format!(
+        "cce_prop_{}_{tag}_{}.cceseg",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+#[test]
+fn prop_segment_roundtrip_rowwise_bit_identical() {
+    // the persistence contract: bake → write_segment → load_segment must
+    // reproduce the live indexer's fill bit-for-bit, across random plans
+    // and map mixes, through the checksummed on-disk format
+    prop::check(30, |g| {
+        let n_features = g.usize(1..5);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(1..300)).collect();
+        let cap = g.usize(1..64);
+        let t = g.usize(1..3);
+        let c = *g.pick(&[1usize, 2, 4]);
+        let plan = TablePlan::new(&vocabs, cap, t, c, 4);
+        let mut rng = Rng::new(g.u64());
+        let mut ix = Indexer::new_rowwise(&mut rng, plan.clone());
+        for _ in 0..g.usize(0..5) {
+            let f = g.usize(0..n_features);
+            let id = SubtableId { feature: f, term: g.usize(0..t), column: g.usize(0..c) };
+            if g.bool() {
+                ix.set_learned(id, g.vec_u32(vocabs[f], plan.k[f] as u32));
+            } else {
+                ix.set_random(id, &mut rng);
+            }
+        }
+        let snap = ServingSnapshot::bake(&ix);
+        let generation = g.u64();
+        let path = tmp_seg("rowwise");
+        write_segment(&snap, generation, &path).expect("write");
+        // quick load serves; verified load must agree on an intact file
+        let loaded = load_segment(&path).expect("load");
+        load_segment_verified(&path).expect("verified load of intact file");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded.generation, generation);
+        let batch = g.usize(1..12);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut live = vec![0i32; batch * n_features * t * c];
+        let mut mapped = vec![0i32; batch * n_features * t * c];
+        ix.fill_rowwise(&cats, batch, &mut live);
+        loaded.snapshot.fill_rowwise(&cats, batch, &mut mapped);
+        prop::prop_assert!(g, live == mapped, "loaded segment diverged from live indexer");
+    });
+}
+
+#[test]
+fn prop_segment_roundtrip_robe_bit_identical() {
+    prop::check(25, |g| {
+        let n_features = g.usize(1..4);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(2..300)).collect();
+        let cap = g.usize(2..100);
+        let c = *g.pick(&[1usize, 2, 4]);
+        let dim = c * g.usize(1..5);
+        let mut rng = Rng::new(g.u64());
+        let ix = Indexer::new_robe(&mut rng, &vocabs, cap, dim, c);
+        let snap = ServingSnapshot::bake(&ix);
+        let path = tmp_seg("robe");
+        write_segment(&snap, 3, &path).expect("write");
+        let loaded = load_segment(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+        let batch = g.usize(1..12);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut live = vec![0i32; batch * n_features * dim];
+        let mut mapped = vec![0i32; batch * n_features * dim];
+        ix.fill_elementwise(&cats, batch, &mut live);
+        loaded.snapshot.fill_elementwise(&cats, batch, &mut mapped);
+        prop::prop_assert!(g, live == mapped, "loaded robe segment diverged from live indexer");
+    });
+}
+
+#[test]
+fn prop_segment_roundtrip_dhe_bit_identical_in_both_modes() {
+    // DHE segments carry either a baked hash table (small vocabs) or the
+    // hasher seeds for live fallback (capped bake) — both must survive the
+    // disk round trip bit-for-bit
+    prop::check(20, |g| {
+        let n_features = g.usize(1..4);
+        let vocabs: Vec<usize> = (0..n_features).map(|_| g.usize(1..300)).collect();
+        let n_hash = g.usize(1..24);
+        let mut rng = Rng::new(g.u64());
+        let ix = Indexer::new_dhe(&mut rng, &vocabs, n_hash);
+        // cap 0 forces the live-fallback path (seeds only, no baked table)
+        let live_fallback = g.bool();
+        let cap = if live_fallback { 0 } else { usize::MAX };
+        let snap = ServingSnapshot::bake_with_dhe_cap(&ix, cap);
+        let path = tmp_seg("dhe");
+        write_segment(&snap, 7, &path).expect("write");
+        let loaded = load_segment(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+        let batch = g.usize(1..10);
+        let cats: Vec<u32> = (0..batch * n_features)
+            .map(|i| g.u32(0..vocabs[i % n_features] as u32))
+            .collect();
+        let mut live = vec![0f32; batch * n_features * n_hash];
+        let mut mapped = vec![0f32; batch * n_features * n_hash];
+        ix.fill_dhe(&cats, batch, &mut live);
+        loaded.snapshot.fill_dhe(&cats, batch, &mut mapped);
+        prop::prop_assert!(
+            g,
+            live == mapped,
+            "loaded dhe segment (live_fallback={live_fallback}) diverged from live indexer"
+        );
+    });
+}
+
+#[test]
+fn prop_segment_rejects_random_corruption() {
+    // flipping any byte inside a non-empty section must fail the verified
+    // load; truncating the file anywhere must fail even the quick load
+    prop::check(20, |g| {
+        let vocabs: Vec<usize> = (0..g.usize(1..3)).map(|_| g.usize(2..100)).collect();
+        let plan = TablePlan::new(&vocabs, g.usize(1..32), 2, 2, 4);
+        let mut rng = Rng::new(g.u64());
+        let ix = Indexer::new_rowwise(&mut rng, plan);
+        let snap = ServingSnapshot::bake(&ix);
+        let path = tmp_seg("corrupt");
+        write_segment(&snap, 0, &path).expect("write");
+        let bytes = std::fs::read(&path).expect("read back");
+
+        // corrupt one byte of the rows section (always non-empty for
+        // rowwise) — offsets live in the header's section table at byte 88,
+        // entry 1 (rows), fields offset/len as u64 LE
+        let sec = 88 + 24; // SEC_ROWS descriptor
+        let off = u64::from_le_bytes(bytes[sec..sec + 8].try_into().unwrap()) as usize;
+        let len = u64::from_le_bytes(bytes[sec + 8..sec + 16].try_into().unwrap()) as usize;
+        assert!(len > 0, "rowwise segment must have a rows section");
+        let mut corrupt = bytes.clone();
+        corrupt[off + g.usize(0..len)] ^= 1 << g.usize(0..8);
+        std::fs::write(&path, &corrupt).expect("write corrupt");
+        prop::prop_assert!(
+            g,
+            load_segment_verified(&path).is_err(),
+            "verified load accepted a corrupted rows section"
+        );
+
+        // truncate to a random shorter length: even quick loads must fail
+        let cut = g.usize(0..bytes.len());
+        std::fs::write(&path, &bytes[..cut]).expect("write truncated");
+        prop::prop_assert!(
+            g,
+            load_segment(&path).is_err(),
+            "quick load accepted a truncated file ({cut} of {} bytes)",
+            bytes.len()
+        );
+        std::fs::remove_file(&path).ok();
     });
 }
 
