@@ -51,6 +51,10 @@ pub struct TrainConfig {
     /// directory after every applied clustering event and for the final
     /// checkpoint — the producer half of the live hot-swap loop
     pub snapshot_dir: String,
+    /// retention: after each segment write, prune all but the newest K
+    /// generations of this artifact from `snapshot_dir` (the generation
+    /// just written is never pruned); 0 = keep every generation
+    pub snapshot_keep: usize,
 }
 
 impl Default for TrainConfig {
@@ -72,6 +76,7 @@ impl Default for TrainConfig {
             pipeline_workers: 2,
             pipeline_depth: 4,
             snapshot_dir: String::new(),
+            snapshot_keep: 0,
         }
     }
 }
@@ -102,6 +107,7 @@ impl TrainConfig {
         self.pipeline_workers = args.usize_or("workers", self.pipeline_workers);
         self.pipeline_depth = args.usize_or("queue-depth", self.pipeline_depth);
         self.snapshot_dir = args.str_or("snapshot-dir", &self.snapshot_dir);
+        self.snapshot_keep = args.usize_or("snapshot-keep", self.snapshot_keep);
         self
     }
 
@@ -128,6 +134,7 @@ impl TrainConfig {
                 "pipeline_workers" => c.pipeline_workers = v.as_u64()? as usize,
                 "pipeline_depth" => c.pipeline_depth = v.as_u64()? as usize,
                 "snapshot_dir" => c.snapshot_dir = v.as_str().to_string(),
+                "snapshot_keep" => c.snapshot_keep = v.as_u64()? as usize,
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -153,7 +160,7 @@ mod tests {
     fn args_override_defaults() {
         let args = Args::parse(
             "x --artifact quick_ce --epochs 3 --cluster-times 6 --kmeans-offload \
-             --cluster-overlap --snapshot-dir snaps"
+             --cluster-overlap --snapshot-dir snaps --snapshot-keep 3"
                 .split_whitespace()
                 .map(String::from),
         )
@@ -165,6 +172,7 @@ mod tests {
         assert!(c.kmeans_offload);
         assert!(c.cluster_overlap);
         assert_eq!(c.snapshot_dir, "snaps");
+        assert_eq!(c.snapshot_keep, 3);
         assert!(c.validate().is_ok());
     }
 
@@ -172,7 +180,7 @@ mod tests {
     fn toml_round_trip() {
         let doc = TomlDoc::parse(
             "[train]\nartifact = \"smoke_cce\"\nepochs = 2\nearly_stop = true\nshuffle = false\n\
-             cluster_overlap = true\nsnapshot_dir = \"snaps\"\n",
+             cluster_overlap = true\nsnapshot_dir = \"snaps\"\nsnapshot_keep = 2\n",
         )
         .unwrap();
         let c = TrainConfig::from_toml(&doc).unwrap();
@@ -182,6 +190,7 @@ mod tests {
         assert!(!c.shuffle);
         assert!(c.cluster_overlap);
         assert_eq!(c.snapshot_dir, "snaps");
+        assert_eq!(c.snapshot_keep, 2);
     }
 
     #[test]

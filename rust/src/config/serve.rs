@@ -3,6 +3,7 @@
 //! (defaults ← TOML ← CLI overrides).
 
 use crate::config::TomlDoc;
+use crate::serving::AdmissionPolicy;
 use crate::util::Args;
 use anyhow::{bail, Result};
 use std::time::Duration;
@@ -39,6 +40,23 @@ pub struct ServeConfig {
     /// instead of baking; mutually exclusive with `train_steps` — the
     /// segment already carries the frozen index maps of a specific run
     pub snapshot_path: String,
+    /// boot from the newest verified segment in this directory AND attach a
+    /// `SnapshotWatcher` that auto-installs newer generations as the trainer
+    /// writes them; mutually exclusive with `snapshot_path`/`train_steps`
+    pub snapshot_dir: String,
+    /// watcher poll interval (milliseconds)
+    pub watch_poll_ms: u64,
+    /// admission policy: "block" (producers wait on a full queue — the
+    /// replay-benchmark contract) or "shed" (full queue rejects, expired
+    /// requests are dropped at batch formation — the production contract)
+    pub admission: String,
+    /// shed-mode per-request deadline (microseconds), measured from arrival;
+    /// 0 = shed on queue pressure only
+    pub deadline_us: u64,
+    /// offered load in requests/second; 0 = emit as fast as the queue
+    /// accepts. Paced traffic stamps each request with its intended emission
+    /// time, which is what makes overload visible in block mode
+    pub pace_rps: f64,
 }
 
 impl Default for ServeConfig {
@@ -54,6 +72,11 @@ impl Default for ServeConfig {
             zipf_skew: 0.99,
             train_steps: 0,
             snapshot_path: String::new(),
+            snapshot_dir: String::new(),
+            watch_poll_ms: 200,
+            admission: "block".into(),
+            deadline_us: 0,
+            pace_rps: 0.0,
         }
     }
 }
@@ -71,6 +94,11 @@ impl ServeConfig {
         self.zipf_skew = args.f64_or("zipf", self.zipf_skew);
         self.train_steps = args.usize_or("train-steps", self.train_steps);
         self.snapshot_path = args.str_or("snapshot", &self.snapshot_path);
+        self.snapshot_dir = args.str_or("snapshot-dir", &self.snapshot_dir);
+        self.watch_poll_ms = args.u64_or("watch-poll-ms", self.watch_poll_ms);
+        self.admission = args.str_or("admission", &self.admission);
+        self.deadline_us = args.u64_or("deadline-us", self.deadline_us);
+        self.pace_rps = args.f64_or("pace-rps", self.pace_rps);
         self
     }
 
@@ -89,15 +117,39 @@ impl ServeConfig {
                 "zipf_skew" => c.zipf_skew = v.as_f64()?,
                 "train_steps" => c.train_steps = v.as_u64()? as usize,
                 "snapshot_path" => c.snapshot_path = v.as_str().to_string(),
+                "snapshot_dir" => c.snapshot_dir = v.as_str().to_string(),
+                "watch_poll_ms" => c.watch_poll_ms = v.as_u64()?,
+                "admission" => c.admission = v.as_str().to_string(),
+                "deadline_us" => c.deadline_us = v.as_u64()?,
+                "pace_rps" => c.pace_rps = v.as_f64()?,
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }
         Ok(c)
     }
 
-    /// Admission deadline as a `Duration`.
+    /// Batch-formation fill window as a `Duration`.
     pub fn max_wait(&self) -> Duration {
         Duration::from_micros(self.max_wait_us)
+    }
+
+    /// The engine admission policy this config selects. In shed mode the
+    /// queue budget is `queue_depth` and `deadline_us > 0` arms per-request
+    /// deadlines.
+    pub fn admission_policy(&self) -> AdmissionPolicy {
+        match self.admission.as_str() {
+            "shed" => AdmissionPolicy::Shed {
+                queue_depth: self.queue_depth,
+                deadline: (self.deadline_us > 0)
+                    .then(|| Duration::from_micros(self.deadline_us)),
+            },
+            _ => AdmissionPolicy::Block,
+        }
+    }
+
+    /// Offered-load pacing interval; `None` = unpaced.
+    pub fn pace(&self) -> Option<Duration> {
+        (self.pace_rps > 0.0).then(|| Duration::from_nanos((1e9 / self.pace_rps) as u64))
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -115,6 +167,27 @@ impl ServeConfig {
                 "snapshot_path and train_steps are mutually exclusive: a segment \
                  file already pins one trained model's index maps"
             );
+        }
+        if !self.snapshot_dir.is_empty()
+            && (!self.snapshot_path.is_empty() || self.train_steps > 0)
+        {
+            bail!(
+                "snapshot_dir is mutually exclusive with snapshot_path/train_steps: \
+                 the watcher owns which generation is served"
+            );
+        }
+        match self.admission.as_str() {
+            "block" | "shed" => {}
+            other => bail!("admission must be \"block\" or \"shed\", got {other:?}"),
+        }
+        if self.admission == "block" && self.deadline_us > 0 {
+            bail!("deadline_us requires admission = \"shed\" (block mode never drops)");
+        }
+        if !self.pace_rps.is_finite() || self.pace_rps < 0.0 {
+            bail!("pace_rps must be a finite value ≥ 0");
+        }
+        if !self.snapshot_dir.is_empty() && self.watch_poll_ms == 0 {
+            bail!("watch_poll_ms must be ≥ 1 when snapshot_dir is set");
         }
         Ok(())
     }
@@ -175,6 +248,59 @@ mod tests {
         assert!(c.validate().is_err());
         let c = ServeConfig { zipf_skew: f64::NAN, ..Default::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn admission_knobs_layer_and_validate() {
+        let doc = TomlDoc::parse(
+            "[serve]\nadmission = \"shed\"\ndeadline_us = 5000\npace_rps = 2000.0\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc).unwrap();
+        assert!(c.validate().is_ok());
+        assert_eq!(
+            c.admission_policy(),
+            AdmissionPolicy::Shed {
+                queue_depth: c.queue_depth,
+                deadline: Some(Duration::from_micros(5000)),
+            }
+        );
+        assert_eq!(c.pace(), Some(Duration::from_nanos(500_000)));
+        // CLI overrides win
+        let args = Args::parse(
+            "serve --admission block --deadline-us 0 --pace-rps 0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = c.apply_args(&args);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.admission_policy(), AdmissionPolicy::Block);
+        assert_eq!(c.pace(), None);
+        // a deadline without shedding is a configuration error, as is an
+        // unknown admission mode
+        let c = ServeConfig { deadline_us: 100, ..ServeConfig::default() };
+        assert!(c.validate().is_err());
+        let c = ServeConfig { admission: "drop".into(), ..ServeConfig::default() };
+        assert!(c.validate().is_err());
+        // shed without a deadline sheds on queue pressure only
+        let c = ServeConfig { admission: "shed".into(), ..ServeConfig::default() };
+        assert!(c.validate().is_ok());
+        assert_eq!(c.admission_policy().deadline(), None);
+    }
+
+    #[test]
+    fn snapshot_dir_excludes_other_boot_sources() {
+        let doc = TomlDoc::parse("[serve]\nsnapshot_dir = \"snaps\"\n").unwrap();
+        let c = ServeConfig::from_toml(&doc).unwrap();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.snapshot_dir, "snaps");
+        let bad = ServeConfig { snapshot_path: "x.cceseg".into(), ..c.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { train_steps: 5, ..c.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { watch_poll_ms: 0, ..c };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

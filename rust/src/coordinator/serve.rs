@@ -13,11 +13,14 @@ use crate::coordinator::trainer::Checkpoint;
 use crate::data::synthetic::SyntheticDataset;
 use crate::runtime::session::DlrmSession;
 use crate::serving::{
-    engine, segment, EngineConfig, ServingSnapshot, SessionExecutor, SnapshotSlot, TrafficGen,
+    engine, segment, watcher, EngineConfig, ServingSnapshot, SessionExecutor, SnapshotSlot,
+    SnapshotWatcher, TrafficGen, WatcherConfig, WatcherReport,
 };
 use crate::tables::indexer::Indexer;
 use anyhow::Result;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
 
 pub use crate::serving::ServeReport;
 
@@ -28,6 +31,8 @@ fn engine_config(session: &DlrmSession, cfg: &ServeConfig) -> EngineConfig {
         max_batch: if cfg.max_batch == 0 { eval_batch } else { cfg.max_batch },
         max_wait: cfg.max_wait(),
         queue_depth: cfg.queue_depth,
+        admission: cfg.admission_policy(),
+        pace: cfg.pace(),
     }
 }
 
@@ -102,4 +107,48 @@ pub fn serve_snapshot(
     let mut rep = run_engine(session, &slot, ds, cfg)?;
     rep.load_secs = load_secs;
     Ok(rep)
+}
+
+/// Boot from the newest fully-verified segment in a directory and serve
+/// with a `SnapshotWatcher` attached (`cce serve --snapshot-dir`): newer
+/// generations written by a concurrent `cce train --snapshot-dir` run are
+/// checksum-verified and hot-swapped in automatically; corrupt or torn
+/// files are retried then skipped without disturbing the run.
+pub fn serve_watch(
+    session: &DlrmSession,
+    dir: &Path,
+    ds: &SyntheticDataset,
+    cfg: &ServeConfig,
+) -> Result<(ServeReport, WatcherReport)> {
+    cfg.validate()?;
+    let t_load = std::time::Instant::now();
+    let Some((path, loaded)) = watcher::load_newest_verified(dir)? else {
+        anyhow::bail!(
+            "no usable segment in {} (none present, or none passed verification)",
+            dir.display()
+        );
+    };
+    let load_secs = t_load.elapsed().as_secs_f64();
+    log::info!(
+        "booting from {} (generation {}), watching {} for newer generations",
+        path.display(),
+        loaded.generation,
+        dir.display()
+    );
+    let boot_generation = loaded.generation;
+    let slot = Arc::new(SnapshotSlot::new(loaded.snapshot));
+    let watcher = SnapshotWatcher::spawn(
+        slot.clone(),
+        WatcherConfig {
+            dir: dir.to_path_buf(),
+            poll: Duration::from_millis(cfg.watch_poll_ms),
+            ..WatcherConfig::new(dir)
+        },
+        Some(boot_generation),
+    );
+    let engine_result = run_engine(session, &slot, ds, cfg);
+    let watch_rep = watcher.stop();
+    let mut rep = engine_result?;
+    rep.load_secs = load_secs;
+    Ok((rep, watch_rep))
 }

@@ -143,6 +143,7 @@ fn write_snapshot_generation(
     dir: &str,
     artifact: &str,
     indexer: &Indexer,
+    keep: usize,
     out: &mut TrainOutcome,
 ) -> Result<()> {
     if dir.is_empty() {
@@ -155,15 +156,62 @@ fn write_snapshot_generation(
         .with_context(|| format!("create snapshot dir {dir}"))?;
     let path = std::path::Path::new(dir).join(format!("{artifact}-gen{generation}.cceseg"));
     let bytes = crate::serving::segment::write_segment(&snap, generation, &path)?;
+    let pruned = prune_snapshot_generations(dir, artifact, keep, &path)?;
     out.snapshot_write_secs += t0.elapsed().as_secs_f64();
     log::info!(
-        "snapshot generation {generation}: {} ({:.1} MB in {:.1} ms)",
+        "snapshot generation {generation}: {} ({:.1} MB in {:.1} ms, {pruned} pruned)",
         path.display(),
         bytes as f64 / 1e6,
         t0.elapsed().as_secs_f64() * 1e3
     );
     out.snapshot_files.push(path.display().to_string());
     Ok(())
+}
+
+/// Retention GC for `snapshot_dir` (`[train] snapshot_keep = K`): remove
+/// this artifact's segment files beyond the newest `keep` generations.
+/// `keep == 0` disables pruning. `current` — the generation just published —
+/// is never removed, even when stale bookkeeping would rank it prunable
+/// (e.g. a fresh run restarting at generation 0 in a directory that still
+/// holds a previous run's higher generations): deleting the file a serving
+/// watcher is about to install is the one failure mode GC must never have.
+/// `.tmp` siblings and files of other artifacts are untouched.
+pub fn prune_snapshot_generations(
+    dir: &str,
+    artifact: &str,
+    keep: usize,
+    current: &std::path::Path,
+) -> Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let prefix = format!("{artifact}-gen");
+    let rd = std::fs::read_dir(dir).with_context(|| format!("read snapshot dir {dir}"))?;
+    let mut gens: Vec<(u64, std::path::PathBuf)> = Vec::new();
+    for entry in rd.flatten() {
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        let Some(g) = name
+            .strip_prefix(&prefix)
+            .and_then(|s| s.strip_suffix(".cceseg"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        gens.push((g, path));
+    }
+    // newest first; everything past the keep window goes
+    gens.sort_by(|a, b| b.0.cmp(&a.0));
+    let mut pruned = 0usize;
+    for (_, path) in gens.into_iter().skip(keep) {
+        if path.as_path() == current {
+            continue;
+        }
+        if std::fs::remove_file(&path).is_ok() {
+            pruned += 1;
+        }
+    }
+    Ok(pruned)
 }
 
 /// Build the indexer an artifact's manifest calls for.
@@ -327,6 +375,7 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                             &cfg.snapshot_dir,
                             &cfg.artifact,
                             &indexer,
+                            cfg.snapshot_keep,
                             &mut out,
                         )?;
                     }
@@ -398,6 +447,7 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                         &cfg.snapshot_dir,
                         &cfg.artifact,
                         &indexer,
+                        cfg.snapshot_keep,
                         &mut out,
                     )?;
                 }
@@ -503,7 +553,90 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
     out.test_bce = tacc.bce();
     out.test_auc = tacc.auc();
     // final generation: the checkpoint that actually ships to serving
-    write_snapshot_generation(&cfg.snapshot_dir, &cfg.artifact, &ck_indexer, &mut out)?;
+    write_snapshot_generation(&cfg.snapshot_dir, &cfg.artifact, &ck_indexer, cfg.snapshot_keep, &mut out)?;
     out.best_checkpoint = Some(Checkpoint { state: ck_state, indexer: ck_indexer });
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn touch_gen(dir: &std::path::Path, artifact: &str, gen: u64) -> std::path::PathBuf {
+        let p = dir.join(format!("{artifact}-gen{gen}.cceseg"));
+        std::fs::write(&p, b"x").unwrap();
+        p
+    }
+
+    fn names(dir: &std::path::Path) -> Vec<String> {
+        let mut v: Vec<String> = std::fs::read_dir(dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn prune_keeps_newest_k_generations() {
+        let dir = TempDir::new("prune_keep");
+        for g in 0..5 {
+            touch_gen(dir.path(), "a", g);
+        }
+        let current = dir.path().join("a-gen4.cceseg");
+        let d = dir.path().to_str().unwrap();
+        let pruned = prune_snapshot_generations(d, "a", 2, &current).unwrap();
+        assert_eq!(pruned, 3);
+        assert_eq!(names(dir.path()), vec!["a-gen3.cceseg", "a-gen4.cceseg"]);
+        // keep = 0 disables pruning entirely
+        assert_eq!(prune_snapshot_generations(d, "a", 0, &current).unwrap(), 0);
+        assert_eq!(names(dir.path()).len(), 2);
+    }
+
+    #[test]
+    fn prune_never_removes_the_generation_being_written() {
+        // a fresh run restarting at generation 0 in a dir still holding a
+        // previous run's generations 5..=7: gen 0 ranks oldest, but it is
+        // the file just published — GC must not eat it
+        let dir = TempDir::new("prune_current");
+        for g in 5..8 {
+            touch_gen(dir.path(), "a", g);
+        }
+        let current = touch_gen(dir.path(), "a", 0);
+        let d = dir.path().to_str().unwrap();
+        let pruned = prune_snapshot_generations(d, "a", 2, &current).unwrap();
+        assert_eq!(pruned, 1, "only gen 5 goes: 7 and 6 are kept, 0 is current");
+        assert_eq!(
+            names(dir.path()),
+            vec!["a-gen0.cceseg", "a-gen6.cceseg", "a-gen7.cceseg"]
+        );
+    }
+
+    #[test]
+    fn prune_ignores_other_artifacts_tmp_and_unparseable_names() {
+        let dir = TempDir::new("prune_foreign");
+        for g in 0..4 {
+            touch_gen(dir.path(), "a", g);
+        }
+        touch_gen(dir.path(), "other", 9);
+        std::fs::write(dir.path().join("a-gen5.cceseg.tmp"), b"x").unwrap();
+        std::fs::write(dir.path().join("a-genX.cceseg"), b"x").unwrap();
+        std::fs::write(dir.path().join("notes.txt"), b"x").unwrap();
+        let current = dir.path().join("a-gen3.cceseg");
+        let d = dir.path().to_str().unwrap();
+        let pruned = prune_snapshot_generations(d, "a", 1, &current).unwrap();
+        assert_eq!(pruned, 3, "only a-gen{{0,1,2}} are prunable");
+        assert_eq!(
+            names(dir.path()),
+            vec![
+                "a-gen3.cceseg",
+                "a-gen5.cceseg.tmp",
+                "a-genX.cceseg",
+                "notes.txt",
+                "other-gen9.cceseg"
+            ]
+        );
+    }
 }

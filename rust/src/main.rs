@@ -280,6 +280,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // --train-steps N: train first and serve the best-validation
     // checkpoint (state + contemporaneous index maps); 0 keeps the old
     // random-initialized serving path for pure serving benchmarks
+    let mut watch_rep = None;
     let (rep, served) = if cfg.train_steps > 0 {
         let tcfg = TrainConfig {
             artifact: cfg.artifact.clone(),
@@ -306,6 +307,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let path = std::path::Path::new(&cfg.snapshot_path);
         let rep = cce::coordinator::serve::serve_snapshot(&session, path, &ds, &cfg)?;
         (rep, format!("segment {}", cfg.snapshot_path))
+    } else if !cfg.snapshot_dir.is_empty() {
+        // boot from the newest verified segment and follow the directory:
+        // a concurrent `cce train --snapshot-dir` run's new generations are
+        // hot-swapped in by the watcher (corrupt files skipped, not fatal)
+        let mut rng = cce::util::Rng::new(cfg.seed ^ 0x57A7E);
+        let state = cce::tables::init::init_state(&m.layout, m.state_size, &mut rng);
+        session.set_state(&state)?;
+        let dir = std::path::Path::new(&cfg.snapshot_dir);
+        let (rep, wrep) = cce::coordinator::serve::serve_watch(&session, dir, &ds, &cfg)?;
+        watch_rep = Some(wrep);
+        (rep, format!("watched dir {}", cfg.snapshot_dir))
     } else {
         log::warn!("serving a random-initialized model; pass --train-steps N to train first");
         let indexer = cce::coordinator::trainer::build_indexer(&m, cfg.seed)?;
@@ -320,7 +332,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &["metric", "value"],
     );
     t.row(vec!["model".into(), served]);
-    t.row(vec!["requests".into(), rep.requests.to_string()]);
+    t.row(vec!["admission".into(), cfg.admission.clone()]);
+    t.row(vec!["offered".into(), rep.offered.to_string()]);
+    t.row(vec!["served".into(), rep.requests.to_string()]);
+    if rep.rejected + rep.expired > 0 || cfg.admission == "shed" {
+        t.row(vec![
+            "shed".into(),
+            format!(
+                "{} rejected + {} expired ({:.2}% of offered)",
+                rep.rejected,
+                rep.expired,
+                rep.shed_rate * 100.0
+            ),
+        ]);
+        t.row(vec![
+            "deadline misses".into(),
+            format!("{} ({:.2}% of served)", rep.deadline_misses, rep.deadline_miss_rate * 100.0),
+        ]);
+        t.row(vec!["goodput".into(), format!("{:.0} req/s", rep.goodput_rps)]);
+    }
     t.row(vec!["batches".into(), rep.batches.to_string()]);
     t.row(vec!["padded rows".into(), rep.padded_rows.to_string()]);
     t.row(vec!["throughput".into(), format!("{:.0} req/s", rep.throughput_rps)]);
@@ -343,6 +373,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         t.row(vec![
             "hot swaps".into(),
             format!("{} (final generation {})", rep.snapshot_swaps, rep.generation),
+        ]);
+    }
+    if let Some(w) = watch_rep {
+        t.row(vec![
+            "watcher".into(),
+            format!(
+                "{} polls, {} installs (generation {}), {} retries, \
+                 {} corrupt + {} incompatible skipped",
+                w.polls, w.installs, w.generation, w.retries, w.skipped_corrupt,
+                w.skipped_incompatible
+            ),
         ]);
     }
     t.print();

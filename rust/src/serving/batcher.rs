@@ -2,12 +2,21 @@
 //! max-batch / max-wait admission, fed by a Zipf-skewed synthetic traffic
 //! generator.
 //!
-//! Admission policy (the standard dynamic-batching contract): a worker
+//! Batch formation (the standard dynamic-batching contract): a worker
 //! blocks until at least one request is queued, then waits up to `max_wait`
 //! for the batch to fill to `max_batch` before dispatching whatever has
 //! accumulated. Under backlog every batch is full; only the tail of a burst
 //! is partial — so device padding is confined to tail batches, unlike the
 //! seed serve loop which padded every batch to `eval_batch`.
+//!
+//! Admission is a separate, orthogonal choice ([`AdmissionPolicy`]): in
+//! `Block` mode a full queue blocks the producer (the PR-1 behavior — fine
+//! for replay benchmarks, catastrophic under real overload, where it
+//! silently stretches every latency instead of bounding any); in `Shed`
+//! mode a full queue rejects the request immediately (`try_push`) and
+//! requests that outlive their deadline are dropped at batch formation
+//! rather than executed. Shedding keeps p99 bounded at any offered load —
+//! the overload group in `perf_hot_paths` tracks exactly that.
 
 use crate::data::synthetic::SyntheticDataset;
 use crate::data::zipf::Zipf;
@@ -16,13 +25,58 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// How the engine admits traffic into the bounded request queue.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Producers block while the queue is full. Every request is eventually
+    /// served, but under sustained overload the wait is unbounded — latency
+    /// grows with backlog length instead of being bounded by queue depth.
+    Block,
+    /// Reject-with-budget load shedding: the queue is capped at
+    /// `queue_depth` and a full queue rejects new requests outright
+    /// (`BatchQueue::try_push`); when `deadline` is set, each request is
+    /// stamped `arrival + deadline` and workers drop already-expired
+    /// requests at batch formation — counted, never executed. The latency
+    /// of every request that IS served stays bounded near
+    /// `queue_depth / capacity`, no matter the offered load.
+    Shed {
+        /// queue budget: at most this many requests wait at once
+        queue_depth: usize,
+        /// per-request deadline, measured from arrival; `None` sheds on
+        /// queue pressure only
+        deadline: Option<Duration>,
+    },
+}
+
+impl AdmissionPolicy {
+    /// The shed deadline, if this policy carries one.
+    pub fn deadline(&self) -> Option<Duration> {
+        match self {
+            AdmissionPolicy::Block => None,
+            AdmissionPolicy::Shed { deadline, .. } => *deadline,
+        }
+    }
+}
+
 /// One inference request: raw features plus its arrival stamp (the clock
-/// per-request latency is measured against).
+/// per-request latency is measured against) and an optional deadline after
+/// which serving it is useless (shed mode drops it instead of executing).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub dense: Vec<f32>,
     pub cats: Vec<u32>,
     pub arrival: Instant,
+    pub deadline: Option<Instant>,
+}
+
+/// Outcome of a non-blocking [`BatchQueue::try_push`]. The rejected item
+/// rides back out so the caller can count or repurpose it without a clone.
+pub enum TryPush<T> {
+    Pushed,
+    /// queue at capacity — the admission-control rejection
+    Full(T),
+    /// queue closed (shutdown) — producers should stop
+    Closed(T),
 }
 
 struct QueueState<T> {
@@ -68,6 +122,24 @@ impl<T> BatchQueue<T> {
         drop(st);
         self.not_empty.notify_one();
         true
+    }
+
+    /// Enqueue one item WITHOUT blocking: a full queue rejects it instead.
+    /// This is the shed-mode admission edge — the producer learns about
+    /// overload immediately and can count a rejection, rather than silently
+    /// converting overload into unbounded queue wait the way `push` does.
+    pub fn try_push(&self, item: T) -> TryPush<T> {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return TryPush::Closed(item);
+        }
+        if st.q.len() >= self.cap {
+            return TryPush::Full(item);
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        TryPush::Pushed
     }
 
     /// Close the queue: producers unblock and fail, consumers drain the
@@ -140,6 +212,8 @@ pub struct TrafficGen<'a> {
     rng: Rng,
     base: usize,
     len: usize,
+    /// pre-drawn requests served before any live draw (see `pregenerate`)
+    replay: VecDeque<Request>,
 }
 
 impl<'a> TrafficGen<'a> {
@@ -154,11 +228,10 @@ impl<'a> TrafficGen<'a> {
             let q = if (skew - 1.0).abs() <= 1e-9 { 1.0 + 1e-6 } else { skew };
             Some(Zipf::new(len as u64, q))
         };
-        TrafficGen { ds, zipf, rng: Rng::new(seed ^ 0x7AFF1C), base, len }
+        TrafficGen { ds, zipf, rng: Rng::new(seed ^ 0x7AFF1C), base, len, replay: VecDeque::new() }
     }
 
-    /// Draw the next request (arrival stamped now).
-    pub fn next_request(&mut self) -> Request {
+    fn draw(&mut self) -> Request {
         let rank = match &self.zipf {
             Some(z) => z.sample(&mut self.rng) as usize,
             None => self.rng.below(self.len as u64) as usize,
@@ -166,7 +239,26 @@ impl<'a> TrafficGen<'a> {
         let mut dense = vec![0f32; self.ds.spec.n_dense];
         let mut cats = vec![0u32; self.ds.n_features()];
         self.ds.sample_into(self.base + rank, &mut dense, &mut cats);
-        Request { dense, cats, arrival: Instant::now() }
+        Request { dense, cats, arrival: Instant::now(), deadline: None }
+    }
+
+    /// Pre-draw `n` requests so `next_request` becomes a pop + arrival
+    /// restamp. The overload bench needs the producer to offer traffic
+    /// faster than the engine can serve it; a live `sample_into` draw per
+    /// request cannot guarantee that, a `VecDeque` pop can.
+    pub fn pregenerate(&mut self, n: usize) {
+        self.replay = (0..n).map(|_| self.draw()).collect();
+    }
+
+    /// Draw the next request (arrival stamped now).
+    pub fn next_request(&mut self) -> Request {
+        match self.replay.pop_front() {
+            Some(mut r) => {
+                r.arrival = Instant::now();
+                r
+            }
+            None => self.draw(),
+        }
     }
 }
 
@@ -247,6 +339,128 @@ mod tests {
         h.join().unwrap();
         assert_eq!(pushed.load(Ordering::SeqCst), 1);
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn try_push_rejects_on_full_and_closed() {
+        let q = BatchQueue::new(2);
+        assert!(matches!(q.try_push(1u32), TryPush::Pushed));
+        assert!(matches!(q.try_push(2u32), TryPush::Pushed));
+        // full: the item comes back, the queue is untouched
+        match q.try_push(3u32) {
+            TryPush::Full(x) => assert_eq!(x, 3),
+            _ => panic!("full queue must reject"),
+        }
+        assert_eq!(q.len(), 2);
+        // draining frees budget again
+        let b = q.pop_batch(1, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(matches!(q.try_push(3u32), TryPush::Pushed));
+        q.close();
+        match q.try_push(4u32) {
+            TryPush::Closed(x) => assert_eq!(x, 4),
+            _ => panic!("closed queue must refuse"),
+        }
+        // the accepted items still drain after close
+        let b = q.pop_batch(8, Duration::from_millis(1)).unwrap();
+        assert_eq!(b, vec![2, 3]);
+    }
+
+    /// Shutdown race: close() fires while several producers are BLOCKED in
+    /// push() and consumers are mid-drain. The conservation invariant: every
+    /// item whose push returned true is drained exactly once, every item
+    /// whose push returned false is drained never — no loss, no duplicates,
+    /// and everyone unblocks.
+    #[test]
+    fn close_while_producers_blocked_loses_nothing() {
+        use std::sync::Arc;
+        for producers in [1usize, 2, 4] {
+            let q = Arc::new(BatchQueue::new(2));
+            let per = 50usize;
+            let (accepted, drained) = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..producers)
+                    .map(|p| {
+                        let q = q.clone();
+                        s.spawn(move || {
+                            let mut ok = Vec::new();
+                            for i in 0..per {
+                                let item = (p * per + i) as u32;
+                                if q.push(item) {
+                                    ok.push(item);
+                                }
+                            }
+                            ok
+                        })
+                    })
+                    .collect();
+                // drain a few batches so producers make progress, then slam
+                // the door while some are still blocked on the full queue
+                let mut drained = Vec::new();
+                for _ in 0..3 {
+                    if let Some(b) = q.pop_batch(4, Duration::from_millis(1)) {
+                        drained.extend(b);
+                    }
+                }
+                q.close();
+                while let Some(b) = q.pop_batch(16, Duration::from_millis(1)) {
+                    drained.extend(b);
+                }
+                let mut accepted = Vec::new();
+                for h in handles {
+                    accepted.extend(h.join().unwrap());
+                }
+                (accepted, drained)
+            });
+            let mut a = accepted.clone();
+            let mut d = drained.clone();
+            a.sort_unstable();
+            d.sort_unstable();
+            // items are unique by construction, so equality of the sorted
+            // vectors rules out loss AND duplicate dispatch at once
+            assert_eq!(a, d, "accepted != drained with {producers} producers");
+        }
+    }
+
+    /// The multi-consumer empty-drain path (`pop_batch`'s "sibling consumer
+    /// drained the queue during our fill wait" continue): consumers with a
+    /// generous fill window race over a trickle of items; each item must be
+    /// dispatched to exactly one consumer and every consumer must see `None`
+    /// after close instead of an empty batch or a hang.
+    #[test]
+    fn multi_consumer_empty_drain_dispatches_exactly_once() {
+        use std::sync::Arc;
+        for consumers in [2usize, 4] {
+            let q = Arc::new(BatchQueue::new(64));
+            let n = 200u32;
+            let per_consumer = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..consumers)
+                    .map(|_| {
+                        let q = q.clone();
+                        s.spawn(move || {
+                            let mut got = Vec::new();
+                            // large max_batch + long max_wait maximizes the
+                            // window where a sibling empties the queue under us
+                            while let Some(b) = q.pop_batch(64, Duration::from_millis(5)) {
+                                assert!(!b.is_empty(), "empty batch dispatched");
+                                got.extend(b);
+                            }
+                            got
+                        })
+                    })
+                    .collect();
+                for i in 0..n {
+                    assert!(q.push(i));
+                    if i % 16 == 0 {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+                q.close();
+                handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+            });
+            let mut all: Vec<u32> = per_consumer.into_iter().flatten().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "{consumers} consumers");
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //! end-to-end time and computed (then discarded) a percentile.
 
 use crate::runtime::session::{DlrmSession, EmbInput};
-use crate::serving::batcher::{BatchQueue, Request, TrafficGen};
+use crate::serving::batcher::{AdmissionPolicy, BatchQueue, Request, TrafficGen, TryPush};
 use crate::serving::segment;
 use crate::serving::snapshot::ServingSnapshot;
 use crate::tables::indexer::MethodKind;
@@ -41,10 +41,19 @@ pub struct EngineConfig {
     pub workers: usize,
     /// admitted requests per device batch (clamped to the device batch)
     pub max_batch: usize,
-    /// admission deadline for partial batches
+    /// batch-formation fill window for partial batches
     pub max_wait: Duration,
-    /// bounded request-queue depth
+    /// bounded request-queue depth (Block mode; Shed carries its own budget)
     pub queue_depth: usize,
+    /// block the producer on a full queue, or shed (reject + drop expired)
+    pub admission: AdmissionPolicy,
+    /// offered-load pacing: emit one request per this interval, stamping
+    /// each with its INTENDED arrival time. `None` = emit as fast as the
+    /// queue accepts (the replay-benchmark behavior). Pacing is what makes
+    /// overload honest: a blocked producer falls behind its schedule, and
+    /// the backlog shows up in every subsequent request's measured latency
+    /// instead of being silently absorbed.
+    pub pace: Option<Duration>,
 }
 
 /// Embedding-side input of one prepared batch, padded to the device batch.
@@ -105,9 +114,14 @@ impl SnapshotSlot {
         Ok(g.0)
     }
 
-    /// Zero-copy load a segment file and swap it in — the live-deploy API.
+    /// Load a segment file and swap it in — the live-deploy API. Every
+    /// section checksum is verified first: a quick (header-only) load is
+    /// fine for a cold boot, where a corrupt table crashes one process at
+    /// startup, but swapping into a LIVE engine must never publish a
+    /// bit-flipped gather table to in-flight traffic, so this path pays the
+    /// O(file) hash before the old generation is released.
     pub fn install_snapshot(&self, path: &Path) -> Result<u64> {
-        let loaded = segment::load_segment(path)?;
+        let loaded = segment::load_segment_verified(path)?;
         self.install(loaded.snapshot)
     }
 }
@@ -120,7 +134,9 @@ pub struct PreparedBatch {
     /// real (admitted) requests; rows `real..device_batch` are padding
     pub real: usize,
     pub arrivals: Vec<Instant>,
-    /// per-request queue+admission wait, measured at batch formation
+    /// per-request deadlines (shed mode; `None` entries never miss)
+    pub deadlines: Vec<Option<Instant>>,
+    /// per-request queue+formation wait, measured at batch formation
     pub queue_wait_ns: Vec<u64>,
     /// time this batch spent in snapshot index generation
     pub index_ns: u64,
@@ -183,6 +199,7 @@ pub fn prepare(snap: &ServingSnapshot, reqs: &[Request], device_batch: usize) ->
         emb,
         real,
         arrivals: reqs.iter().map(|r| r.arrival).collect(),
+        deadlines: reqs.iter().map(|r| r.deadline).collect(),
         queue_wait_ns: reqs
             .iter()
             .map(|r| formed.duration_since(r.arrival).as_nanos() as u64)
@@ -267,10 +284,56 @@ impl Executor for CountingExecutor {
     }
 }
 
+/// Fault-injection executor for tests and chaos drills: behaves like
+/// [`CountingExecutor`] until `fail_after` batches have executed, then every
+/// further `execute` fails — the "device fell over mid-stream" scenario the
+/// engine must shut down cleanly from (producer and workers unblocked, error
+/// propagated, no hang). `fail_after = 0` fails immediately.
+#[derive(Debug)]
+pub struct FaultyExecutor {
+    pub inner: CountingExecutor,
+    pub fail_after: usize,
+}
+
+impl FaultyExecutor {
+    pub fn new(batch: usize, fail_after: usize) -> FaultyExecutor {
+        FaultyExecutor { inner: CountingExecutor::new(batch), fail_after }
+    }
+}
+
+impl Executor for FaultyExecutor {
+    fn device_batch(&self) -> usize {
+        self.inner.batch
+    }
+
+    fn execute(&mut self, batch: &PreparedBatch) -> Result<()> {
+        if self.inner.batches >= self.fail_after {
+            anyhow::bail!("injected device fault after {} batches", self.inner.batches);
+        }
+        self.inner.execute(batch)
+    }
+}
+
 /// What a serving run reports (printed by `cce serve` and the bench).
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// requests actually executed on the device
     pub requests: usize,
+    /// requests the traffic source offered (`requests + rejected + expired`)
+    pub offered: usize,
+    /// shed at admission: the queue was at its budget when they arrived
+    pub rejected: usize,
+    /// shed at batch formation: their deadline passed while they queued
+    pub expired: usize,
+    /// `(rejected + expired) / offered`
+    pub shed_rate: f64,
+    /// served requests that completed after their deadline
+    pub deadline_misses: usize,
+    /// `deadline_misses / requests` (0 when no deadlines are in force)
+    pub deadline_miss_rate: f64,
+    /// served-within-deadline requests per second — the throughput that
+    /// actually mattered to callers
+    pub goodput_rps: f64,
     pub batches: usize,
     /// padding rows sent to the device (tail batches only under backlog)
     pub padded_rows: usize,
@@ -296,9 +359,13 @@ pub struct ServeReport {
     pub generation: u64,
 }
 
-/// Run the engine until `n_requests` have been served. The engine serves
-/// whatever snapshot `slot` currently holds; `SnapshotSlot::install` /
-/// `install_snapshot` from any other thread hot-swaps it between batches.
+/// Run the engine until `n_requests` have been **offered**. In `Block` mode
+/// every offered request is eventually served; in `Shed` mode requests the
+/// queue budget rejects or whose deadline expires in the queue are counted
+/// and dropped, never executed — `requests + rejected + expired == offered`
+/// always holds. The engine serves whatever snapshot `slot` currently holds;
+/// `SnapshotSlot::install` / `install_snapshot` from any other thread
+/// hot-swaps it between batches.
 pub fn run<E: Executor>(
     executor: &mut E,
     slot: &SnapshotSlot,
@@ -309,13 +376,20 @@ pub fn run<E: Executor>(
     assert!(n_requests >= 1 && cfg.workers >= 1);
     let device_batch = executor.device_batch();
     let max_batch = cfg.max_batch.clamp(1, device_batch);
-    let queue = BatchQueue::new(cfg.queue_depth);
+    let depth = match &cfg.admission {
+        AdmissionPolicy::Block => cfg.queue_depth,
+        AdmissionPolicy::Shed { queue_depth, .. } => *queue_depth,
+    };
+    let queue = BatchQueue::new(depth);
     let index_ns = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    let expired = AtomicU64::new(0);
     let mut latencies = Vec::with_capacity(n_requests);
     let mut queue_waits = Vec::with_capacity(n_requests);
     let mut batches = 0usize;
     let mut padded_rows = 0usize;
     let mut served = 0usize;
+    let mut deadline_misses = 0usize;
     let mut exec_secs = 0f64;
     let mut snapshot_swaps = 0usize;
     let mut last_gen: Option<u64> = None;
@@ -325,25 +399,70 @@ pub fn run<E: Executor>(
     std::thread::scope(|s| {
         let (ready_tx, ready_rx) = sync_channel::<PreparedBatch>(cfg.workers * 2);
 
-        // producer: stamp arrivals and feed the bounded queue
-        let producer_queue = &queue;
+        // producer: stamp arrivals and feed the bounded queue under the
+        // configured admission policy
+        let (producer_queue, rejected) = (&queue, &rejected);
+        let admission = cfg.admission.clone();
+        let pace = cfg.pace;
         s.spawn(move || {
             let mut traffic = traffic;
-            for _ in 0..n_requests {
-                if !producer_queue.push(traffic.next_request()) {
-                    return; // queue closed under us (exec error shutdown)
+            let t0 = Instant::now();
+            for i in 0..n_requests {
+                let mut req = traffic.next_request();
+                if let Some(gap) = pace {
+                    // the request's arrival is its INTENDED emission time on
+                    // the offered-load schedule, whether or not the producer
+                    // is on time — a blocked producer's backlog then shows up
+                    // in every subsequent request's measured latency, which
+                    // is exactly how real clients experience an overloaded
+                    // blocking server
+                    let target_ns = (gap.as_nanos() as u64).saturating_mul(i as u64);
+                    let target = t0 + Duration::from_nanos(target_ns);
+                    let now = Instant::now();
+                    if let Some(ahead) = target.checked_duration_since(now) {
+                        if ahead > Duration::from_micros(50) {
+                            std::thread::sleep(ahead);
+                        }
+                    }
+                    req.arrival = target;
+                }
+                match &admission {
+                    AdmissionPolicy::Block => {
+                        if !producer_queue.push(req) {
+                            return; // queue closed under us (exec error)
+                        }
+                    }
+                    AdmissionPolicy::Shed { deadline, .. } => {
+                        req.deadline = deadline.map(|d| req.arrival + d);
+                        match producer_queue.try_push(req) {
+                            TryPush::Pushed => {}
+                            TryPush::Full(_) => {
+                                rejected.fetch_add(1, Ordering::Relaxed);
+                            }
+                            TryPush::Closed(_) => return,
+                        }
+                    }
                 }
             }
             producer_queue.close();
         });
 
         // index-generation workers: re-read the slot per batch so installed
-        // snapshots take effect at the next batch boundary
+        // snapshots take effect at the next batch boundary; drop requests
+        // whose deadline already passed — executing them would burn device
+        // time on answers nobody is waiting for
         for _ in 0..cfg.workers {
             let tx = ready_tx.clone();
-            let (queue, index_ns) = (&queue, &index_ns);
+            let (queue, index_ns, expired) = (&queue, &index_ns, &expired);
             s.spawn(move || {
-                while let Some(reqs) = queue.pop_batch(max_batch, cfg.max_wait) {
+                while let Some(mut reqs) = queue.pop_batch(max_batch, cfg.max_wait) {
+                    let now = Instant::now();
+                    let before = reqs.len();
+                    reqs.retain(|r| r.deadline.map_or(true, |d| d > now));
+                    expired.fetch_add((before - reqs.len()) as u64, Ordering::Relaxed);
+                    if reqs.is_empty() {
+                        continue; // whole batch expired in the queue
+                    }
                     let (generation, snap) = slot.current();
                     let mut pb = prepare(&snap, &reqs, device_batch);
                     pb.generation = generation;
@@ -375,9 +494,12 @@ pub fn run<E: Executor>(
                     last_gen = Some(pb.generation);
                 }
                 let done = Instant::now();
-                for (arrival, wait_ns) in pb.arrivals.iter().zip(&pb.queue_wait_ns) {
+                for ((arrival, wait_ns), deadline) in
+                    pb.arrivals.iter().zip(&pb.queue_wait_ns).zip(&pb.deadlines)
+                {
                     latencies.push(done.duration_since(*arrival).as_nanos() as f64);
                     queue_waits.push(*wait_ns as f64);
+                    deadline_misses += usize::from(deadline.map_or(false, |d| done > d));
                 }
                 served += pb.real;
                 batches += 1;
@@ -390,8 +512,18 @@ pub fn run<E: Executor>(
     }
 
     let elapsed = t_all.elapsed().as_secs_f64();
+    let rejected = rejected.into_inner() as usize;
+    let expired = expired.into_inner() as usize;
+    debug_assert_eq!(served + rejected + expired, n_requests, "request conservation");
     Ok(ServeReport {
         requests: served,
+        offered: n_requests,
+        rejected,
+        expired,
+        shed_rate: (rejected + expired) as f64 / (n_requests as f64).max(1.0),
+        deadline_misses,
+        deadline_miss_rate: deadline_misses as f64 / (served as f64).max(1.0),
+        goodput_rps: (served - deadline_misses) as f64 / elapsed.max(1e-12),
         batches,
         padded_rows,
         workers: cfg.workers,
@@ -444,6 +576,8 @@ mod tests {
             max_batch,
             max_wait: Duration::from_millis(20),
             queue_depth: 256,
+            admission: AdmissionPolicy::Block,
+            pace: None,
         }
     }
 
@@ -481,6 +615,8 @@ mod tests {
             max_batch: 16,
             max_wait: Duration::from_millis(200),
             queue_depth: 256,
+            admission: AdmissionPolicy::Block,
+            pace: None,
         };
         let rep = run(&mut exec, &slot, traffic, &c, 100).unwrap();
         assert_eq!(rep.requests, 100);
@@ -520,20 +656,124 @@ mod tests {
 
     #[test]
     fn executor_error_shuts_down_cleanly() {
-        struct FailingExecutor;
-        impl Executor for FailingExecutor {
-            fn device_batch(&self) -> usize {
-                16
-            }
-            fn execute(&mut self, _b: &PreparedBatch) -> Result<()> {
-                anyhow::bail!("device fell over")
-            }
-        }
         let ds = ds();
         let slot = SnapshotSlot::new(snapshot());
-        let traffic = TrafficGen::new(&ds, 0.0, 1);
-        let err = run(&mut FailingExecutor, &slot, traffic, &cfg(4, 16), 1000);
-        assert!(err.is_err(), "error must propagate");
+        for fail_after in [0usize, 3] {
+            let mut exec = FaultyExecutor::new(16, fail_after);
+            let traffic = TrafficGen::new(&ds, 0.0, 1);
+            let err = run(&mut exec, &slot, traffic, &cfg(4, 16), 1000);
+            assert!(err.is_err(), "error must propagate (fail_after={fail_after})");
+            assert_eq!(exec.inner.batches, fail_after, "fails exactly at the injection point");
+        }
+    }
+
+    #[test]
+    fn shed_mode_conserves_every_offered_request() {
+        // a tiny queue budget against a generous burst: some requests are
+        // rejected at admission, but served + rejected + expired must equal
+        // offered exactly — nothing lost, nothing double-counted
+        let ds = ds();
+        let slot = SnapshotSlot::new(snapshot());
+        let mut exec = CountingExecutor::new(16);
+        let traffic = TrafficGen::new(&ds, 0.99, 13);
+        let c = EngineConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 256, // ignored in Shed mode
+            admission: AdmissionPolicy::Shed { queue_depth: 4, deadline: None },
+            pace: None,
+        };
+        let rep = run(&mut exec, &slot, traffic, &c, 500).unwrap();
+        assert_eq!(rep.offered, 500);
+        assert_eq!(rep.requests + rep.rejected + rep.expired, 500, "conservation");
+        assert_eq!(rep.requests, exec.rows_seen, "every served request hit the device once");
+        assert_eq!(rep.latency.n, rep.requests);
+        assert_eq!(rep.expired, 0, "no deadline configured, so nothing can expire");
+        let want_rate = (rep.rejected + rep.expired) as f64 / 500.0;
+        assert!((rep.shed_rate - want_rate).abs() < 1e-12);
+        assert!(rep.requests >= 1, "an unloaded engine must serve something");
+    }
+
+    #[test]
+    fn expired_requests_are_dropped_at_batch_formation() {
+        // a zero deadline expires every request the instant it is admitted:
+        // the device must execute NOTHING, and the report must say so
+        // without panicking on the empty latency set
+        let ds = ds();
+        let slot = SnapshotSlot::new(snapshot());
+        let mut exec = CountingExecutor::new(16);
+        let traffic = TrafficGen::new(&ds, 0.0, 17);
+        let c = EngineConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(5),
+            queue_depth: 256,
+            admission: AdmissionPolicy::Shed {
+                queue_depth: 64,
+                deadline: Some(Duration::ZERO),
+            },
+            pace: None,
+        };
+        let rep = run(&mut exec, &slot, traffic, &c, 200).unwrap();
+        assert_eq!(rep.requests, 0, "expired requests must never execute");
+        assert_eq!(exec.batches, 0);
+        assert_eq!(rep.requests + rep.rejected + rep.expired, 200, "conservation");
+        assert!(rep.expired >= 1, "zero deadline must expire whatever was admitted");
+        assert_eq!(rep.latency.n, 0);
+        assert_eq!(rep.deadline_misses, 0, "nothing served, nothing can miss");
+        assert!((rep.shed_rate - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generous_deadline_sheds_nothing_and_misses_nothing() {
+        let ds = ds();
+        let slot = SnapshotSlot::new(snapshot());
+        let mut exec = CountingExecutor::new(16);
+        let traffic = TrafficGen::new(&ds, 0.5, 19);
+        let c = EngineConfig {
+            workers: 2,
+            max_batch: 16,
+            max_wait: Duration::from_millis(20),
+            queue_depth: 256,
+            admission: AdmissionPolicy::Shed {
+                queue_depth: 4096,
+                deadline: Some(Duration::from_secs(3600)),
+            },
+            pace: None,
+        };
+        let rep = run(&mut exec, &slot, traffic, &c, 300).unwrap();
+        assert_eq!(rep.requests, 300, "roomy budget + hour deadline serves everything");
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.expired, 0);
+        assert_eq!(rep.deadline_misses, 0);
+        assert_eq!(rep.shed_rate, 0.0);
+        assert_eq!(rep.deadline_miss_rate, 0.0);
+        assert!(rep.goodput_rps > 0.0);
+    }
+
+    #[test]
+    fn install_snapshot_rejects_bit_flipped_segment_and_keeps_serving() {
+        // satellite: a corrupt segment offered to a live slot must be
+        // rejected by checksum BEFORE the swap, leaving the old generation
+        // serving traffic undisturbed
+        let dir = crate::testutil::TempDir::new("engine_corrupt_install");
+        let path = dir.path().join("snap-gen1.cceseg");
+        segment::write_segment(&snapshot(), 1, &path).unwrap();
+        crate::testutil::fault::flip_section_byte(&path, "rows", 0).unwrap();
+
+        let slot = SnapshotSlot::new(snapshot());
+        let err = slot.install_snapshot(&path);
+        assert!(err.is_err(), "bit-flipped section must fail verification");
+        assert_eq!(slot.generation(), 0, "failed install must not bump the generation");
+
+        // the old generation still serves a full run
+        let ds = ds();
+        let mut exec = CountingExecutor::new(16);
+        let traffic = TrafficGen::new(&ds, 0.0, 23);
+        let rep = run(&mut exec, &slot, traffic, &cfg(2, 16), 100).unwrap();
+        assert_eq!(rep.requests, 100);
+        assert_eq!(rep.generation, 0);
     }
 
     #[test]

@@ -19,8 +19,44 @@
 //!   cores and feed one device-execution thread; per-request p50/p95/p99
 //!   latency and queue-wait are captured honestly. The engine serves from a
 //!   generation-tagged [`SnapshotSlot`] so snapshots hot-swap under load.
+//! * [`watcher`] — a fault-tolerant directory poller that auto-installs new
+//!   snapshot generations into the slot with full checksum verification,
+//!   bounded retry + exponential backoff, and graceful skip of corrupt,
+//!   torn, or incompatible files.
 //!
-//! # Snapshot lifecycle: bake → write → mmap → swap
+//! # Admission: `Block` vs `Shed`
+//!
+//! The queue between traffic and workers is bounded either way; the
+//! [`AdmissionPolicy`] knob (`[serve] admission`) decides what a full queue
+//! means:
+//!
+//! * **`Block`** — producers wait for room. Every request is eventually
+//!   served, which is the right contract for offline replay (benchmarks,
+//!   batch scoring). Under sustained overload it is the WRONG contract for
+//!   a service: queue wait grows with the backlog, so every latency
+//!   percentile climbs without bound while throughput stays pinned at
+//!   capacity — clients time out on their side, invisibly to the server.
+//! * **`Shed { queue_depth, deadline }`** — a full queue rejects new
+//!   requests at admission (counted in `ServeReport::rejected`), and each
+//!   admitted request is stamped `arrival + deadline`; workers drop
+//!   already-expired requests at batch formation (counted in
+//!   `ServeReport::expired`, never executed — device time is never spent on
+//!   an answer nobody is waiting for). The latency of every request that IS
+//!   served stays bounded near `queue_depth / capacity` regardless of
+//!   offered load. `requests + rejected + expired == offered` always holds.
+//!
+//! **Deadline semantics**: the deadline clock starts at *arrival* (the
+//! intended emission time under paced load — see `EngineConfig::pace`), not
+//! at admission. Expiry is checked when a batch is formed; a request that
+//! expires between formation and device completion still executes and is
+//! counted as a `deadline_miss` instead. `ServeReport` carries the derived
+//! rates (`shed_rate`, `deadline_miss_rate`) plus `goodput_rps` — requests
+//! served *within* deadline per second, the number a capacity planner
+//! actually wants. The `overload` group in `perf_hot_paths` drives both
+//! policies at {0.5×, 1×, 2×, 4×} capacity and `scripts/verify.sh` gates
+//! that shed-mode p99 stays bounded at 4× while block-mode p99 explodes.
+//!
+//! # Snapshot lifecycle: bake → write → load → watch → swap
 //!
 //! 1. **Train** with a live `Indexer`; CCE clustering events rewrite its
 //!    `IndexMap`s freely (`Algorithm 3` lines 14–16).
@@ -28,13 +64,31 @@
 //!    into flat gather tables. The snapshot is immutable and `Sync`.
 //! 3. **Write**: `segment::write_segment` persists the bake as generation N
 //!    (`--snapshot-dir` makes `cce train` do this after every clustering
-//!    event and at the end of the run).
+//!    event and at the end of the run; `[train] snapshot_keep = K` prunes
+//!    all but the newest K generations after each write).
 //! 4. **Load**: `segment::load_segment` maps the file and serves straight
 //!    off the page cache — cold start is O(header), not O(table), so a
 //!    serving process boots in milliseconds (`cce serve --snapshot`).
-//! 5. **Swap**: `SnapshotSlot::install_snapshot(path)` publishes generation
-//!    N+1 to a running engine; workers pick it up at the next batch boundary
-//!    while in-flight batches finish on generation N.
+//!    `load_segment_verified` additionally checksums every section.
+//! 5. **Watch**: `cce serve --snapshot-dir` boots from the newest segment
+//!    that passes full verification ([`watcher::load_newest_verified`]) and
+//!    attaches a [`SnapshotWatcher`] that polls for newer generations.
+//! 6. **Swap**: `SnapshotSlot::install_snapshot(path)` verifies every
+//!    section checksum, then publishes generation N+1 to the running
+//!    engine; workers pick it up at the next batch boundary while in-flight
+//!    batches finish on generation N.
+//!
+//! **Corrupt segments cannot reach traffic.** A cold boot may trust the
+//! header-only load (a bad table crashes one process at startup), but every
+//! live-swap path — explicit `install_snapshot` or the watcher — pays the
+//! O(file) checksum first. The watcher additionally survives the failure:
+//! a corrupt or torn file is retried with exponential backoff up to its
+//! retry budget, then skipped (counted in `WatcherReport::skipped_corrupt`)
+//! until its `(len, mtime)` identity changes; a shape-incompatible file is
+//! skipped immediately and never retried; an old generation reappearing
+//! cannot roll the slot backwards. The engine keeps serving the generation
+//! it has through all of it — `testutil::fault` is the corruption harness
+//! that pins this in tests.
 //!
 //! Parity with the live indexer is bit-exact through the whole cycle —
 //! bake, write, load, swap — pinned by `tests/proptests.rs`, so train-time
@@ -48,11 +102,13 @@ pub mod batcher;
 pub mod engine;
 pub mod segment;
 pub mod snapshot;
+pub mod watcher;
 
-pub use batcher::{BatchQueue, Request, TrafficGen};
+pub use batcher::{AdmissionPolicy, BatchQueue, Request, TrafficGen, TryPush};
 pub use engine::{
-    prepare, run, CountingExecutor, EngineConfig, Executor, PreparedBatch, PreparedEmb,
-    ServeReport, SessionExecutor, SnapshotSlot,
+    prepare, run, CountingExecutor, EngineConfig, Executor, FaultyExecutor, PreparedBatch,
+    PreparedEmb, ServeReport, SessionExecutor, SnapshotSlot,
 };
 pub use segment::{load_segment, load_segment_verified, write_segment, LoadedSegment};
 pub use snapshot::ServingSnapshot;
+pub use watcher::{SnapshotWatcher, WatcherConfig, WatcherReport, WatcherState};

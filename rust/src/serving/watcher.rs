@@ -1,0 +1,561 @@
+//! Fault-tolerant snapshot watcher: poll a directory for new segment
+//! generations and auto-install them into a live [`SnapshotSlot`] — the
+//! serving half of the train→disk→serve loop that `cce train --snapshot-dir`
+//! starts. With a watcher attached, a serving process follows the trainer's
+//! generations with no explicit `install_snapshot` call and no restart.
+//!
+//! # Robustness contract
+//!
+//! A snapshot directory is a shared mutable boundary: the trainer writes to
+//! it, operators copy files into it, disks corrupt bytes in it. The watcher
+//! therefore treats every file as hostile until proven otherwise, and a bad
+//! file must never take down — or worse, poison — a serving run:
+//!
+//! * **Verified installs only.** Candidates go through
+//!   [`SnapshotSlot::install_snapshot`], which checksums every section
+//!   before the swap. A bit flip anywhere in the payload is caught before
+//!   traffic can observe it.
+//! * **Bounded retry with exponential backoff.** A failed candidate (torn
+//!   write still in flight, transient I/O error) is retried up to
+//!   `max_retries` times with doubling backoff, then given up on until the
+//!   file's `(len, mtime)` changes — a rewritten file gets a fresh budget.
+//! * **Graceful skip.** Corrupt, truncated, or incompatible segments are
+//!   counted ([`WatcherReport`]) and skipped; the slot keeps serving the
+//!   generation it has. Incompatibility (different method kind or sample
+//!   stride than the running engine was compiled for) is detected from the
+//!   header and never retried — no amount of waiting fixes a wrong shape.
+//! * **Monotonic generations.** Only files whose header generation exceeds
+//!   the last installed generation are candidates, so replaying an old file
+//!   into the directory cannot roll a live engine backwards.
+//!
+//! The polling core is a deterministic state machine ([`WatcherState`]):
+//! `tick()` performs exactly one scan-select-install step, so tests drive
+//! it directly on the main thread with zero-backoff configs and no sleeps.
+//! [`SnapshotWatcher`] is the thin thread wrapper production uses.
+
+use crate::serving::engine::SnapshotSlot;
+use crate::serving::segment::{self, SegmentHeader};
+use crate::tables::indexer::MethodKind;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant, SystemTime};
+
+/// Watcher tuning knobs (derived from `config::ServeConfig`).
+#[derive(Clone, Debug)]
+pub struct WatcherConfig {
+    /// directory to poll for `*.cceseg` files
+    pub dir: PathBuf,
+    /// poll interval between ticks
+    pub poll: Duration,
+    /// install/parse attempts per file before giving up on it
+    pub max_retries: u32,
+    /// base retry backoff; doubles per failed attempt
+    pub backoff: Duration,
+}
+
+impl WatcherConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> WatcherConfig {
+        WatcherConfig {
+            dir: dir.into(),
+            poll: Duration::from_millis(200),
+            max_retries: 3,
+            backoff: Duration::from_millis(50),
+        }
+    }
+}
+
+/// What a watcher observed over its lifetime (returned by
+/// [`SnapshotWatcher::stop`], printed by `cce serve`).
+#[derive(Clone, Debug, Default)]
+pub struct WatcherReport {
+    /// directory scans performed
+    pub polls: u64,
+    /// snapshots successfully verified and installed
+    pub installs: u64,
+    /// failed attempts that were rescheduled with backoff
+    pub retries: u64,
+    /// files abandoned after exhausting their retry budget
+    pub skipped_corrupt: u64,
+    /// files rejected for shape/method mismatch (never retried)
+    pub skipped_incompatible: u64,
+    /// header generation of the last successful install (0 = none)
+    pub generation: u64,
+}
+
+/// Per-file bookkeeping. Keyed on the file's `(len, mtime)` identity: when
+/// either changes the file is treated as new content and all verdicts —
+/// cached generation, retry budget, given-up flag — are reset.
+#[derive(Debug)]
+struct FileState {
+    len: u64,
+    mtime: SystemTime,
+    /// header generation, once parsed successfully
+    generation: Option<u64>,
+    attempts: u32,
+    /// earliest instant the next attempt may run (backoff gate)
+    next_attempt: Option<Instant>,
+    /// retry budget exhausted (corrupt) or shape mismatch (incompatible)
+    given_up: bool,
+}
+
+impl FileState {
+    fn fresh(len: u64, mtime: SystemTime) -> FileState {
+        FileState { len, mtime, generation: None, attempts: 0, next_attempt: None, given_up: false }
+    }
+
+    fn ready(&self, now: Instant) -> bool {
+        !self.given_up && self.next_attempt.map_or(true, |t| now >= t)
+    }
+}
+
+/// Deterministic polling core: one `tick` = one scan-select-install step.
+pub struct WatcherState {
+    cfg: WatcherConfig,
+    files: HashMap<PathBuf, FileState>,
+    /// header generation last installed through THIS watcher (or the boot
+    /// load); distinct from the slot's own install counter, which also
+    /// counts swaps from other sources
+    installed: Option<u64>,
+    report: WatcherReport,
+}
+
+impl WatcherState {
+    /// `installed` seeds the generation floor: a server that booted from
+    /// generation G passes `Some(G)` so the watcher does not reinstall the
+    /// file it started from.
+    pub fn new(cfg: WatcherConfig, installed: Option<u64>) -> WatcherState {
+        let report =
+            WatcherReport { generation: installed.unwrap_or(0), ..WatcherReport::default() };
+        WatcherState { cfg, files: HashMap::new(), installed, report }
+    }
+
+    pub fn report(&self) -> &WatcherReport {
+        &self.report
+    }
+
+    /// One poll: scan the directory, refresh per-file state, and try to
+    /// install the highest-generation ready candidate newer than what is
+    /// already installed. Every failure path is absorbed into the report —
+    /// `tick` never returns an error and never panics on directory contents.
+    pub fn tick(&mut self, slot: &SnapshotSlot) {
+        self.report.polls += 1;
+        let now = Instant::now();
+        let seen = self.scan(now);
+        // forget files that vanished (pruned by retention GC, or deleted by
+        // an operator) so the map cannot grow without bound
+        self.files.retain(|p, _| seen.contains(p));
+
+        // resolve unparsed headers for ready files: O(header) per file, and
+        // only re-done when the file's (len, mtime) identity changes
+        let mut paths: Vec<PathBuf> = self.files.keys().cloned().collect();
+        paths.sort(); // deterministic attempt order
+        for p in &paths {
+            let st = self.files.get_mut(p).unwrap();
+            if st.generation.is_some() || !st.ready(now) {
+                continue;
+            }
+            match segment::inspect(p, false) {
+                Ok(info) => {
+                    if compatible(&info.header, slot) {
+                        st.generation = Some(info.header.generation);
+                    } else {
+                        st.given_up = true;
+                        self.report.skipped_incompatible += 1;
+                    }
+                }
+                Err(_) => self.fail_attempt(p.clone(), now),
+            }
+        }
+
+        // best ready candidate strictly newer than what we installed
+        let floor = self.installed;
+        let best = self
+            .files
+            .iter()
+            .filter(|(_, st)| st.ready(now))
+            .filter_map(|(p, st)| st.generation.map(|g| (g, p.clone())))
+            .filter(|(g, _)| floor.map_or(true, |f| *g > f))
+            .max_by(|a, b| a.0.cmp(&b.0).then_with(|| b.1.cmp(&a.1)));
+        let Some((generation, path)) = best else { return };
+
+        match slot.install_snapshot(&path) {
+            Ok(_) => {
+                self.installed = Some(generation);
+                self.report.installs += 1;
+                self.report.generation = generation;
+                if let Some(st) = self.files.get_mut(&path) {
+                    st.attempts = 0;
+                    st.next_attempt = None;
+                }
+            }
+            // header parsed and shapes matched, so this is payload
+            // corruption or transient I/O — retry with backoff
+            Err(_) => self.fail_attempt(path, now),
+        }
+    }
+
+    /// Enumerate `*.cceseg` files and refresh their `(len, mtime)` identity.
+    /// `.tmp` siblings (in-flight atomic writes) and unreadable entries are
+    /// ignored without error.
+    fn scan(&mut self, _now: Instant) -> Vec<PathBuf> {
+        let mut seen = Vec::new();
+        let Ok(rd) = std::fs::read_dir(&self.cfg.dir) else { return seen };
+        for entry in rd.flatten() {
+            let path = entry.path();
+            if path.extension().map_or(true, |e| e != "cceseg") {
+                continue;
+            }
+            let Ok(meta) = entry.metadata() else { continue };
+            if !meta.is_file() {
+                continue;
+            }
+            let len = meta.len();
+            let mtime = meta.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            match self.files.get_mut(&path) {
+                Some(st) if st.len == len && st.mtime == mtime => {}
+                Some(st) => *st = FileState::fresh(len, mtime),
+                None => {
+                    self.files.insert(path.clone(), FileState::fresh(len, mtime));
+                }
+            }
+            seen.push(path);
+        }
+        seen
+    }
+
+    fn fail_attempt(&mut self, path: PathBuf, now: Instant) {
+        let Some(st) = self.files.get_mut(&path) else { return };
+        st.attempts += 1;
+        if st.attempts > self.cfg.max_retries {
+            st.given_up = true;
+            self.report.skipped_corrupt += 1;
+        } else {
+            self.report.retries += 1;
+            // exponential backoff: base, 2×base, 4×base, …
+            let factor = 1u32 << (st.attempts - 1).min(16);
+            st.next_attempt = Some(now + self.cfg.backoff.saturating_mul(factor));
+        }
+    }
+}
+
+/// Shape compatibility from the header alone — no payload read. Mirrors the
+/// `SnapshotSlot::install` check: the running executable is compiled for a
+/// fixed method kind and embedding-input stride.
+fn compatible(h: &SegmentHeader, slot: &SnapshotSlot) -> bool {
+    let current = slot.current().1;
+    let stride = match h.kind {
+        MethodKind::RowWise => h.n_features * h.stride,
+        MethodKind::ElementWise => h.n_features * h.dim,
+        MethodKind::Dhe => h.n_features * h.n_hash,
+    };
+    h.kind == current.kind() && stride == current.sample_stride()
+}
+
+/// Boot helper: load the newest generation in `dir` that passes FULL
+/// checksum verification, trying candidates newest-first and skipping any
+/// that fail to parse or verify. `Ok(None)` means no usable segment exists.
+pub fn load_newest_verified(dir: &Path) -> Result<Option<(PathBuf, segment::LoadedSegment)>> {
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("read snapshot dir {}", dir.display()))?;
+    let mut candidates = Vec::new();
+    for entry in rd.flatten() {
+        let path = entry.path();
+        if path.extension().map_or(true, |e| e != "cceseg") {
+            continue;
+        }
+        if let Ok(info) = segment::inspect(&path, false) {
+            candidates.push((info.header.generation, path));
+        }
+    }
+    // newest generation first; path as deterministic tiebreak
+    candidates.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+    for (_, path) in candidates {
+        if let Ok(loaded) = segment::load_segment_verified(&path) {
+            return Ok(Some((path, loaded)));
+        }
+    }
+    Ok(None)
+}
+
+/// Thread wrapper around [`WatcherState`]: ticks every `cfg.poll` until
+/// stopped, sleeping in small slices so `stop()` returns promptly.
+pub struct SnapshotWatcher {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<WatcherReport>,
+}
+
+impl SnapshotWatcher {
+    /// Start watching. `installed` is the generation the engine booted from
+    /// (see [`WatcherState::new`]).
+    pub fn spawn(
+        slot: Arc<SnapshotSlot>,
+        cfg: WatcherConfig,
+        installed: Option<u64>,
+    ) -> SnapshotWatcher {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let poll = cfg.poll;
+            let mut state = WatcherState::new(cfg, installed);
+            while !stop2.load(Ordering::Relaxed) {
+                state.tick(&slot);
+                let mut slept = Duration::ZERO;
+                while slept < poll && !stop2.load(Ordering::Relaxed) {
+                    let slice = (poll - slept).min(Duration::from_millis(10));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+            }
+            state.report().clone()
+        });
+        SnapshotWatcher { stop, handle }
+    }
+
+    /// Signal the watcher thread and join it, returning what it observed.
+    pub fn stop(self) -> WatcherReport {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.join().expect("watcher thread panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::snapshot::ServingSnapshot;
+    use crate::tables::indexer::Indexer;
+    use crate::tables::layout::TablePlan;
+    use crate::testutil::{fault, TempDir};
+    use crate::util::Rng;
+
+    fn snapshot(seed: u64) -> ServingSnapshot {
+        let mut rng = Rng::new(seed);
+        let ix = Indexer::new_rowwise(&mut rng, TablePlan::new(&[11, 50], 8, 2, 2, 4));
+        ServingSnapshot::bake(&ix)
+    }
+
+    fn zero_backoff(dir: &Path) -> WatcherConfig {
+        WatcherConfig {
+            dir: dir.to_path_buf(),
+            poll: Duration::from_millis(1),
+            max_retries: 2,
+            backoff: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn installs_newest_generation_and_ignores_older() {
+        let dir = TempDir::new("watcher_newest");
+        segment::write_segment(&snapshot(1), 3, &dir.path().join("a-gen3.cceseg")).unwrap();
+        segment::write_segment(&snapshot(2), 7, &dir.path().join("a-gen7.cceseg")).unwrap();
+        segment::write_segment(&snapshot(3), 5, &dir.path().join("a-gen5.cceseg")).unwrap();
+        let slot = SnapshotSlot::new(snapshot(0));
+        let mut w = WatcherState::new(zero_backoff(dir.path()), None);
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 1, "exactly one install: the newest");
+        assert_eq!(w.report().generation, 7);
+        assert_eq!(slot.generation(), 1, "one slot swap");
+        // steady state: nothing new → no further installs
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 1);
+        assert_eq!(w.report().polls, 2);
+        // an OLDER generation appearing later must not roll us back
+        segment::write_segment(&snapshot(4), 6, &dir.path().join("a-gen6.cceseg")).unwrap();
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 1, "generation 6 < installed 7");
+        // a newer one is picked up
+        segment::write_segment(&snapshot(5), 9, &dir.path().join("a-gen9.cceseg")).unwrap();
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 2);
+        assert_eq!(w.report().generation, 9);
+    }
+
+    #[test]
+    fn corrupt_segment_is_retried_then_skipped_and_old_generation_keeps_serving() {
+        let dir = TempDir::new("watcher_corrupt");
+        let bad = dir.path().join("a-gen5.cceseg");
+        segment::write_segment(&snapshot(1), 5, &bad).unwrap();
+        fault::flip_section_byte(&bad, "rows", 11).unwrap();
+        let slot = SnapshotSlot::new(snapshot(0));
+        let mut w = WatcherState::new(zero_backoff(dir.path()), None);
+        // attempts 1..=max_retries fail and reschedule; the next one gives up
+        for _ in 0..4 {
+            w.tick(&slot);
+        }
+        assert_eq!(w.report().installs, 0);
+        assert_eq!(w.report().retries, 2, "max_retries reschedules");
+        assert_eq!(w.report().skipped_corrupt, 1, "then the file is abandoned");
+        assert_eq!(slot.generation(), 0, "slot untouched by the corrupt file");
+        // once given up, further ticks don't touch it again
+        w.tick(&slot);
+        assert_eq!(w.report().skipped_corrupt, 1);
+        // a GOOD newer file still gets through — the bad one poisoned nothing
+        segment::write_segment(&snapshot(2), 6, &dir.path().join("a-gen6.cceseg")).unwrap();
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 1);
+        assert_eq!(w.report().generation, 6);
+        assert_eq!(slot.generation(), 1);
+    }
+
+    #[test]
+    fn rewritten_file_gets_a_fresh_retry_budget() {
+        let dir = TempDir::new("watcher_rewrite");
+        let p = dir.path().join("a-gen5.cceseg");
+        segment::write_segment(&snapshot(1), 5, &p).unwrap();
+        fault::flip_section_byte(&p, "rows", 0).unwrap();
+        let slot = SnapshotSlot::new(snapshot(0));
+        let mut w = WatcherState::new(zero_backoff(dir.path()), None);
+        for _ in 0..4 {
+            w.tick(&slot);
+        }
+        assert_eq!(w.report().skipped_corrupt, 1);
+        assert_eq!(w.report().installs, 0);
+        // the trainer rewrites the file intact (len/mtime change with the
+        // content rewrite) → the give-up verdict is reset and it installs
+        segment::write_segment(&snapshot(1), 5, &p).unwrap();
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 1, "rewritten file must be reconsidered");
+        assert_eq!(w.report().generation, 5);
+    }
+
+    #[test]
+    fn incompatible_segment_is_skipped_immediately_without_retry() {
+        let dir = TempDir::new("watcher_incompat");
+        let mut rng = Rng::new(9);
+        let robe = ServingSnapshot::bake(&Indexer::new_robe(&mut rng, &[11, 50], 30, 8, 2));
+        segment::write_segment(&robe, 5, &dir.path().join("b-gen5.cceseg")).unwrap();
+        let slot = SnapshotSlot::new(snapshot(0)); // rowwise engine
+        let mut w = WatcherState::new(zero_backoff(dir.path()), None);
+        w.tick(&slot);
+        w.tick(&slot);
+        assert_eq!(w.report().skipped_incompatible, 1, "flagged once, never retried");
+        assert_eq!(w.report().retries, 0, "shape mismatch is not retryable");
+        assert_eq!(w.report().installs, 0);
+        assert_eq!(slot.generation(), 0);
+    }
+
+    #[test]
+    fn tmp_and_truncated_files_are_ignored_or_skipped() {
+        let dir = TempDir::new("watcher_torn");
+        // an in-flight atomic write: .tmp extension → not even a candidate
+        std::fs::write(dir.path().join("a-gen8.cceseg.tmp"), b"partial").unwrap();
+        // a torn write published by a non-atomic copier: header intact,
+        // payload cut short
+        let torn = dir.path().join("a-gen9.cceseg");
+        segment::write_segment(&snapshot(1), 9, &torn).unwrap();
+        let full = std::fs::metadata(&torn).unwrap().len();
+        fault::truncate_segment(&torn, full - 32).unwrap();
+        let slot = SnapshotSlot::new(snapshot(0));
+        let mut w = WatcherState::new(zero_backoff(dir.path()), None);
+        for _ in 0..4 {
+            w.tick(&slot);
+        }
+        assert_eq!(w.report().installs, 0);
+        assert_eq!(w.report().skipped_corrupt, 1, "torn file abandoned after retries");
+        assert_eq!(slot.generation(), 0);
+    }
+
+    #[test]
+    fn generation_floor_skips_the_boot_segment() {
+        let dir = TempDir::new("watcher_floor");
+        segment::write_segment(&snapshot(1), 4, &dir.path().join("a-gen4.cceseg")).unwrap();
+        let slot = SnapshotSlot::new(snapshot(0));
+        // server claims it already booted from generation 4
+        let mut w = WatcherState::new(zero_backoff(dir.path()), Some(4));
+        w.tick(&slot);
+        assert_eq!(w.report().installs, 0, "must not reinstall the boot generation");
+        assert_eq!(w.report().generation, 4, "report starts at the boot generation");
+    }
+
+    #[test]
+    fn load_newest_verified_skips_corrupt_newer_files() {
+        let dir = TempDir::new("watcher_boot");
+        segment::write_segment(&snapshot(1), 2, &dir.path().join("a-gen2.cceseg")).unwrap();
+        let newer = dir.path().join("a-gen5.cceseg");
+        segment::write_segment(&snapshot(2), 5, &newer).unwrap();
+        fault::flip_section_byte(&newer, "rows", 3).unwrap();
+        let (path, loaded) = load_newest_verified(dir.path()).unwrap().unwrap();
+        assert_eq!(loaded.generation, 2, "corrupt gen 5 skipped, gen 2 booted");
+        assert!(path.ends_with("a-gen2.cceseg"));
+        // empty dir → Ok(None)
+        let empty = TempDir::new("watcher_boot_empty");
+        assert!(load_newest_verified(empty.path()).unwrap().is_none());
+    }
+
+    /// Acceptance: a corrupt segment dropped into the watched directory
+    /// mid-run must not fail a single request — the engine completes the
+    /// whole run on the prior generation.
+    #[test]
+    fn corrupt_drop_in_never_poisons_a_live_run() {
+        use crate::data::synthetic::{DatasetSpec, SyntheticDataset};
+        use crate::serving::batcher::{AdmissionPolicy, TrafficGen};
+        use crate::serving::engine::{self, CountingExecutor, EngineConfig};
+
+        let ds = SyntheticDataset::new(DatasetSpec {
+            name: "t".into(),
+            vocabs: vec![11, 50],
+            n_dense: 3,
+            train_samples: 40,
+            val_samples: 8,
+            test_samples: 32,
+            latent_clusters: 4,
+            zipf_exponent: 1.05,
+            label_noise: 0.0,
+            seed: 1,
+        });
+        let dir = TempDir::new("watcher_poison_run");
+        let slot = Arc::new(SnapshotSlot::new(snapshot(0)));
+        let mut w = WatcherState::new(zero_backoff(dir.path()), None);
+
+        let rep = std::thread::scope(|s| {
+            let slot2 = slot.clone();
+            let handle = s.spawn(move || {
+                let mut exec = CountingExecutor::new(16);
+                let traffic = TrafficGen::new(&ds, 0.99, 31);
+                let cfg = EngineConfig {
+                    workers: 2,
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                    queue_depth: 64,
+                    admission: AdmissionPolicy::Block,
+                    pace: None,
+                };
+                engine::run(&mut exec, &slot2, traffic, &cfg, 600).unwrap()
+            });
+            // drop the corrupt segment in while the engine serves, and keep
+            // the watcher polling until the run finishes
+            let bad = dir.path().join("a-gen3.cceseg");
+            segment::write_segment(&snapshot(7), 3, &bad).unwrap();
+            fault::flip_section_byte(&bad, "rows", 5).unwrap();
+            while !handle.is_finished() {
+                w.tick(&slot);
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            handle.join().unwrap()
+        });
+        assert_eq!(rep.requests, 600, "zero failed/lost requests");
+        assert_eq!(rep.generation, 0, "served entirely on the prior generation");
+        assert_eq!(slot.generation(), 0, "corrupt file never installed");
+        assert_eq!(w.report().installs, 0);
+        assert!(w.report().skipped_corrupt <= 1);
+    }
+
+    #[test]
+    fn spawned_watcher_installs_and_stops_cleanly() {
+        let dir = TempDir::new("watcher_thread");
+        let slot = Arc::new(SnapshotSlot::new(snapshot(0)));
+        let w = SnapshotWatcher::spawn(slot.clone(), zero_backoff(dir.path()), None);
+        segment::write_segment(&snapshot(1), 1, &dir.path().join("a-gen1.cceseg")).unwrap();
+        // wait (bounded) for the poll loop to pick it up
+        let t0 = Instant::now();
+        while slot.generation() == 0 && t0.elapsed() < Duration::from_secs(10) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let rep = w.stop();
+        assert_eq!(slot.generation(), 1, "spawned watcher never installed");
+        assert_eq!(rep.installs, 1);
+        assert!(rep.polls >= 1);
+    }
+}

@@ -10,6 +10,78 @@
 //! });
 //! ```
 
+use std::path::{Path, PathBuf};
+
+/// RAII temp directory for tests that need real files (segments, snapshot
+/// dirs). Unique per process + tag so parallel test binaries never collide;
+/// recreated fresh on `new` (a leftover from a killed run must not leak
+/// state) and removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(tag: &str) -> TempDir {
+        let path = std::env::temp_dir().join(format!("cce_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+/// Fault-injection helpers for segment files: controlled corruption that
+/// tests (and the watcher's skip-don't-crash contract) exercise. Every
+/// helper damages the file in a way the header-only `load_segment` CANNOT
+/// see — that asymmetry is the point: it proves the verified paths
+/// (`load_segment_verified`, `SnapshotSlot::install_snapshot`, the watcher)
+/// are what stand between a bit flip and live traffic.
+pub mod fault {
+    use crate::serving::segment::{parse_header, SECTION_NAMES};
+    use anyhow::{Context, Result};
+    use std::path::Path;
+
+    /// Flip one byte inside the named section's payload (`byte` is taken
+    /// modulo the section length). The header — including the section's
+    /// STORED checksum — is untouched, so `parse_header`/`load_segment`
+    /// still accept the file; only checksum verification catches the flip.
+    pub fn flip_section_byte(path: &Path, section: &str, byte: u64) -> Result<()> {
+        let mut bytes =
+            std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+        let h = parse_header(&bytes)?;
+        let idx = SECTION_NAMES
+            .iter()
+            .position(|&n| n == section)
+            .with_context(|| format!("unknown section {section:?}"))?;
+        let d = h.sections[idx];
+        anyhow::ensure!(d.len > 0, "section {section:?} is empty in this segment");
+        let off = (d.offset + byte % d.len) as usize;
+        bytes[off] ^= 0xFF;
+        std::fs::write(path, &bytes).with_context(|| format!("rewrite {}", path.display()))
+    }
+
+    /// Cut the file to `keep` bytes — a torn write that crashed before the
+    /// tail sections landed. Callers pass `keep >= HEADER_BYTES` to model a
+    /// file whose header is intact but whose data is missing; the loader's
+    /// `file_len` check rejects it without reading any section.
+    pub fn truncate_segment(path: &Path, keep: u64) -> Result<()> {
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        f.set_len(keep).with_context(|| format!("truncate {}", path.display()))
+    }
+}
+
 pub mod prop {
     use crate::util::Rng;
 

@@ -17,8 +17,26 @@ pub struct TimingStats {
 }
 
 impl TimingStats {
+    /// Zeroed stats with `n == 0`: the honest summary of a run that produced
+    /// no samples (e.g. a fully-shed serving run where every request was
+    /// rejected or expired before execution).
+    pub fn empty() -> TimingStats {
+        TimingStats {
+            n: 0,
+            mean_ns: 0.0,
+            std_ns: 0.0,
+            min_ns: 0.0,
+            p50_ns: 0.0,
+            p95_ns: 0.0,
+            p99_ns: 0.0,
+            max_ns: 0.0,
+        }
+    }
+
     pub fn from_samples(mut ns: Vec<f64>) -> TimingStats {
-        assert!(!ns.is_empty());
+        if ns.is_empty() {
+            return TimingStats::empty();
+        }
         ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let n = ns.len();
         let mean = ns.iter().sum::<f64>() / n as f64;
@@ -123,6 +141,14 @@ mod tests {
         assert_eq!(s.std_ns, 0.0);
         assert_eq!(s.p95_ns, 100.0);
         assert_eq!(s.p99_ns, 100.0);
+    }
+
+    #[test]
+    fn empty_samples_yield_zeroed_stats() {
+        let s = TimingStats::from_samples(Vec::new());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean_ns, 0.0);
+        assert_eq!(s.p99_ns, 0.0);
     }
 
     #[test]

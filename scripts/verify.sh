@@ -107,10 +107,38 @@ par = [r for r in results if r.get("group") == "load_parity"]
 assert par, "load_parity row missing"
 assert all(r.get("parity", 0) > 0 for r in par), f"bad parity rows: {par}"
 
+# overload: block vs shed at {0.5, 1, 2, 4}x capacity. Every row carries the
+# admission fields; at 4x, shed-mode p99 must stay bounded (below block-mode
+# p99, and within 5x of the 1x-load p99) while block-mode backlogs.
+ov = [r for r in results if r.get("group") == "overload"]
+assert len(ov) >= 8, f"overload group missing or incomplete: {len(ov)} rows"
+for r in ov:
+    assert r.get("mode") in ("block", "shed"), f"overload row with bad mode: {r}"
+    for key in ("load_mult", "offered_rps", "p99_ns", "shed_rate",
+                "deadline_miss_rate", "goodput_rps", "throughput_rps"):
+        assert isinstance(r.get(key), (int, float)) and r[key] >= 0, \
+            f"overload row missing {key}: {r}"
+
+def p99(mode, mult):
+    rows = [r for r in ov if r["mode"] == mode and r["load_mult"] == mult]
+    assert rows, f"overload row missing for mode={mode} load_mult={mult}"
+    return rows[0]["p99_ns"]
+
+shed4, block4 = p99("shed", 4.0), p99("block", 4.0)
+base1 = max(p99("shed", 1.0), p99("block", 1.0))
+assert shed4 < block4, \
+    f"shed p99 at 4x ({shed4/1e6:.2f} ms) not below block p99 ({block4/1e6:.2f} ms)"
+assert shed4 <= 5 * base1, \
+    f"shed p99 at 4x ({shed4/1e6:.2f} ms) exceeds 5x the 1x-load p99 ({base1/1e6:.2f} ms)"
+shed_rows4 = [r for r in ov if r["mode"] == "shed" and r["load_mult"] == 4.0]
+assert shed_rows4[0]["shed_rate"] > 0, \
+    "shed mode at 4x load reported zero shed rate — admission control inert"
+
 print(f"BENCH_serving.json OK ({len(results)} results, mode={doc['mode']}, "
       f"terabyte cold start {tb[0]['cold_start_ns']/1e6:.2f} ms = "
       f"{tb[0]['speedup']:.0f}x over bake, "
-      f"swap pause p99 {hs[0]['swap_pause_ns']/1e6:.2f} ms)")
+      f"swap pause p99 {hs[0]['swap_pause_ns']/1e6:.2f} ms, "
+      f"overload 4x p99 shed {shed4/1e6:.2f} ms vs block {block4/1e6:.2f} ms)")
 PY
 fi
 

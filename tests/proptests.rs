@@ -7,7 +7,9 @@ use cce::data::synthetic::{DatasetSpec, SyntheticDataset};
 use cce::kmeans;
 use cce::metrics::extrapolate::{params_to_reach, Crossing, SweepPoint};
 use cce::runtime::manifest::{FieldDesc, InitSpec};
-use cce::serving::{load_segment, load_segment_verified, write_segment, ServingSnapshot};
+use cce::serving::{
+    load_segment, load_segment_verified, write_segment, BatchQueue, ServingSnapshot, TryPush,
+};
 use cce::tables::indexer::Indexer;
 use cce::tables::layout::{SubtableId, TablePlan};
 use cce::testutil::prop;
@@ -304,6 +306,89 @@ fn prop_segment_rejects_random_corruption() {
             bytes.len()
         );
         std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_batch_queue_shutdown_races_conserve_every_request() {
+    // the admission-control conservation contract under shutdown races:
+    // across random producer/consumer splits, capacities, admission modes
+    // (blocking push vs non-blocking try_push) and close() timing — including
+    // close landing while producers are blocked on a full queue and while
+    // sibling consumers race to drain — every accepted item is dispatched to
+    // exactly one batch. Nothing lost, nothing double-dispatched.
+    prop::check(20, |g| {
+        let producers = g.usize(1..5);
+        let consumers = g.usize(1..4);
+        let cap = g.usize(1..9);
+        let per_producer = g.usize(1..60);
+        let max_batch = g.usize(1..17);
+        let use_try = g.bool();
+        let close_early = g.bool();
+        let close_after_us = g.usize(0..400) as u64;
+        let q: BatchQueue<usize> = BatchQueue::new(cap);
+        let (mut accepted, mut drained) = std::thread::scope(|s| {
+            let q = &q;
+            let prod: Vec<_> = (0..producers)
+                .map(|p| {
+                    s.spawn(move || {
+                        let mut acc = Vec::new();
+                        for i in 0..per_producer {
+                            let item = p * 100_000 + i;
+                            if use_try {
+                                match q.try_push(item) {
+                                    TryPush::Pushed => acc.push(item),
+                                    TryPush::Full(_) => {} // shed at the edge
+                                    TryPush::Closed(_) => break,
+                                }
+                            } else if q.push(item) {
+                                acc.push(item);
+                            } else {
+                                break; // closed while blocked
+                            }
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            let cons: Vec<_> = (0..consumers)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut got = Vec::new();
+                        while let Some(b) =
+                            q.pop_batch(max_batch, std::time::Duration::from_micros(50))
+                        {
+                            assert!(!b.is_empty(), "pop_batch dispatched an empty batch");
+                            got.extend(b);
+                        }
+                        got
+                    })
+                })
+                .collect();
+            if close_early {
+                // let close land mid-flight, possibly with producers blocked
+                std::thread::sleep(std::time::Duration::from_micros(close_after_us));
+                q.close();
+            }
+            let accepted: Vec<usize> =
+                prod.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            if !close_early {
+                q.close();
+            }
+            let drained: Vec<usize> =
+                cons.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            (accepted, drained)
+        });
+        accepted.sort_unstable();
+        drained.sort_unstable();
+        prop::prop_assert!(
+            g,
+            accepted == drained,
+            "accepted {} != drained {} (producers={producers} consumers={consumers} \
+             cap={cap} try={use_try} close_early={close_early})",
+            accepted.len(),
+            drained.len()
+        );
     });
 }
 
