@@ -356,6 +356,8 @@ fn main() -> anyhow::Result<()> {
         let (rep, samples) = std::thread::scope(|scope| -> anyhow::Result<SwapRun> {
             let swapper = scope.spawn(|| {
                 let mut samples = Vec::new();
+                // ORDERING: Relaxed stop flag — samples travel through the
+                // join, the flag publishes nothing
                 while !stop.load(Ordering::Relaxed) {
                     let t0 = Instant::now();
                     slot.install_snapshot(kaggle_seg).expect("swap must stay compatible");
@@ -367,6 +369,7 @@ fn main() -> anyhow::Result<()> {
             let mut exec = CountingExecutor::new(256);
             let traffic = TrafficGen::new(&ds, 0.99, 11);
             let rep = serving::run(&mut exec, &slot, traffic, &cfg, requests);
+            // ORDERING: Relaxed stop flag — see the load above
             stop.store(true, Ordering::Relaxed);
             let samples = swapper.join().expect("swapper thread panicked");
             Ok((rep?, samples))

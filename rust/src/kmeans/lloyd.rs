@@ -26,7 +26,7 @@
 //! kmeans n/k/d sweep rows 4–6×.
 
 use crate::kmeans::{assign_t, inertia_t, AssignStage, ACC_CHUNK, ASSIGN_BLOCK};
-use crate::util::threadpool::{self, SyncPtr};
+use crate::util::threadpool::{self, SharedSlice};
 use crate::util::Rng;
 
 #[derive(Clone, Debug)]
@@ -105,11 +105,13 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
         // weight sums (chunk-parallel; per-point math is unchanged scalar)
         let c = &centroids[(j - 1) * d..j * d];
         {
-            let md_ptr = SyncPtr::new(min_d2.as_mut_ptr());
-            let wp_ptr = SyncPtr::new(weight_partials.as_mut_ptr());
+            let md_s = SharedSlice::new(&mut min_d2);
+            let wp_s = SharedSlice::new(&mut weight_partials);
             threadpool::par_for_each_dynamic(n_chunks, threads, |ci| {
                 let (s, e) = (ci * ACC_CHUNK, ((ci + 1) * ACC_CHUNK).min(sn));
-                let md = unsafe { std::slice::from_raw_parts_mut(md_ptr.get().add(s), e - s) };
+                // SAFETY: chunk ci exclusively owns min_d2[s..e]; the fixed
+                // ACC_CHUNK ranges are pairwise disjoint and e <= sn.
+                let md = unsafe { md_s.range_mut(s, e - s) };
                 let mut acc = 0f64;
                 for (o, i) in (s..e).enumerate() {
                     let x = &sub[i * d..(i + 1) * d];
@@ -123,7 +125,9 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
                     }
                     acc += md[o] as f64;
                 }
-                unsafe { *wp_ptr.get().add(ci) = acc };
+                // SAFETY: chunk ci exclusively owns weight_partials[ci] and
+                // ci < n_chunks == wp_s.len().
+                unsafe { wp_s.write(ci, acc) };
             });
         }
         // ordered merge → thread-count-invariant total
@@ -152,18 +156,23 @@ pub fn kmeans(points: &[f32], d: usize, cfg: &KmeansConfig) -> KmeansResult {
         iterations = it + 1;
         let stage = AssignStage::new(&centroids, d);
         {
-            let asg_ptr = SyncPtr::new(asg.as_mut_ptr());
-            let d2_ptr = SyncPtr::new(d2.as_mut_ptr());
-            let ps_ptr = SyncPtr::new(psums.as_mut_ptr());
-            let pc_ptr = SyncPtr::new(pcounts.as_mut_ptr());
+            let asg_s = SharedSlice::new(&mut asg);
+            let d2_s = SharedSlice::new(&mut d2);
+            let ps_s = SharedSlice::new(&mut psums);
+            let pc_s = SharedSlice::new(&mut pcounts);
             threadpool::par_for_each_dynamic(n_chunks, threads, |ci| {
                 let (s, e) = (ci * ACC_CHUNK, ((ci + 1) * ACC_CHUNK).min(sn));
-                let asg = unsafe { std::slice::from_raw_parts_mut(asg_ptr.get().add(s), e - s) };
-                let d2 = unsafe { std::slice::from_raw_parts_mut(d2_ptr.get().add(s), e - s) };
-                let sums =
-                    unsafe { std::slice::from_raw_parts_mut(ps_ptr.get().add(ci * k * d), k * d) };
-                let counts =
-                    unsafe { std::slice::from_raw_parts_mut(pc_ptr.get().add(ci * k), k) };
+                // SAFETY: chunk ci exclusively owns asg[s..e]; the fixed
+                // ACC_CHUNK ranges are pairwise disjoint and e <= sn.
+                let asg = unsafe { asg_s.range_mut(s, e - s) };
+                // SAFETY: same disjoint chunk range, over d2 this time.
+                let d2 = unsafe { d2_s.range_mut(s, e - s) };
+                // SAFETY: chunk ci exclusively owns its psums partial
+                // [ci*k*d, (ci+1)*k*d) — disjoint per ci, n_chunks*k*d total.
+                let sums = unsafe { ps_s.range_mut(ci * k * d, k * d) };
+                // SAFETY: chunk ci exclusively owns its pcounts partial
+                // [ci*k, (ci+1)*k) — disjoint per ci, n_chunks*k total.
+                let counts = unsafe { pc_s.range_mut(ci * k, k) };
                 sums.fill(0.0);
                 counts.fill(0);
                 let mut dist = [0f32; ASSIGN_BLOCK];

@@ -20,7 +20,7 @@ mod lloyd;
 
 pub use lloyd::{kmeans, KmeansConfig, KmeansResult};
 
-use crate::util::threadpool::{self, SyncPtr};
+use crate::util::threadpool::{self, SharedSlice};
 
 /// Points per accumulation chunk for every deterministic parallel
 /// reduction (centroid sums, kmeans++ weights, inertia). Fixed — NOT a
@@ -129,10 +129,11 @@ pub fn assign_t(points: &[f32], centroids: &[f32], d: usize, out: &mut [u32], n_
     assert_eq!(points.len(), n * d);
     assert_eq!(out.len(), n);
     let stage = AssignStage::new(centroids, d);
-    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    let out_s = SharedSlice::new(out);
     threadpool::scope_chunks(n, n_threads, |_, s, e| {
-        // chunks write disjoint [s, e) ranges
-        let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(s), e - s) };
+        // SAFETY: scope_chunks hands each worker a distinct [s, e) range
+        // with e <= n == out_s.len(), so the chunk slices are disjoint.
+        let out = unsafe { out_s.range_mut(s, e - s) };
         let mut dist = [0f32; ASSIGN_BLOCK];
         for (slot, i) in out.iter_mut().zip(s..e) {
             *slot = stage.nearest(&points[i * d..(i + 1) * d], &mut dist).0;

@@ -13,6 +13,14 @@
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
+//!
+//! Unsafe/atomics policy: see `docs/UNSAFE_POLICY.md` and run
+//! `scripts/analyze.sh` — every `unsafe` needs a `// SAFETY:` comment,
+//! every atomic `Ordering` a `// ORDERING:` justification.
+
+// Every unsafe operation must sit in an explicit `unsafe { }` block with
+// its own SAFETY comment, even inside `unsafe fn` bodies.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baselines;
 pub mod cce;

@@ -2,7 +2,7 @@
 //! algorithms need. f64 (not f32) because the convergence experiments
 //! measure losses down to 1e-12 of the optimum (Figure 8).
 
-use crate::util::threadpool::{self, SyncPtr};
+use crate::util::threadpool::{self, SharedSlice};
 use crate::util::Rng;
 use std::ops::{Index, IndexMut};
 
@@ -70,14 +70,18 @@ impl Matrix {
         assert_eq!(self.cols, other.rows, "matmul {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        let out_ptr = SyncPtr::new(out.data.as_mut_ptr());
+        let out_s = SharedSlice::new(&mut out.data);
         let threads = if m * n * k > 1 << 18 { threadpool::default_threads() } else { 1 };
         threadpool::scope_chunks(m, threads, |_, rs, re| {
-            // chunks write disjoint row ranges of `out`
-            let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.get(), m * n) };
+            // SAFETY: each worker claims only its own row range
+            // [rs*n, re*n) — scope_chunks row chunks are disjoint and
+            // re <= m, so re*n <= m*n == out_s.len(). (Previously every
+            // chunk materialized an aliasing whole-buffer &mut [f32];
+            // the writes were disjoint but the references overlapped.)
+            let rows = unsafe { out_s.range_mut(rs * n, (re - rs) * n) };
             // i-k-j loop order: streams `other` rows, vectorizes over j
             for i in rs..re {
-                let orow = &mut out[i * n..(i + 1) * n];
+                let orow = &mut rows[(i - rs) * n..(i - rs + 1) * n];
                 for kk in 0..k {
                     let a = self.data[i * k + kk];
                     if a == 0.0 {
@@ -90,6 +94,7 @@ impl Matrix {
                 }
             }
         });
+        drop(out_s); // end the borrow of `out.data` (the scope has joined)
         out
     }
 

@@ -330,13 +330,19 @@ mod tests {
         let (q2, p2) = (q.clone(), pushed.clone());
         let h = std::thread::spawn(move || {
             assert!(q2.push(2));
+            // ORDERING: SeqCst — cross-thread flag asserted while the other
+            // thread is live; strongest order keeps the test race-free by
+            // construction rather than by argument
             p2.fetch_add(1, Ordering::SeqCst);
         });
         std::thread::sleep(Duration::from_millis(10));
+        // ORDERING: SeqCst — see the producer-side store above
         assert_eq!(pushed.load(Ordering::SeqCst), 0, "producer should be blocked");
         let b = q.pop_batch(2, Duration::from_millis(1)).unwrap();
         assert_eq!(b.len(), 2);
         h.join().unwrap();
+        // ORDERING: SeqCst — read after join; any order would do, kept
+        // consistent with the store above
         assert_eq!(pushed.load(Ordering::SeqCst), 1);
         assert_eq!(q.len(), 1);
     }

@@ -85,7 +85,17 @@ impl SnapshotSlot {
     }
 
     /// Latest installed generation (0 = the snapshot the slot started with).
+    ///
+    /// Coherence contract (pinned by `tests/interleavings.rs`): this mirror
+    /// is never AHEAD of what `current()` returns — `install` publishes the
+    /// mirror inside the lock, after updating the pair — and a `current()`
+    /// call happening-after an install observes at least that generation
+    /// via the mutex. So for any thread: `generation() <= current().0 <=
+    /// generation()` sampled in that order never decreases.
     pub fn generation(&self) -> u64 {
+        // ORDERING: Acquire pairs with the Release store in install() so a
+        // reader that sees generation N also sees everything the installer
+        // wrote before publishing N (report fields, segment bookkeeping).
         self.generation.load(Ordering::Acquire)
     }
 
@@ -110,6 +120,14 @@ impl SnapshotSlot {
         );
         g.0 += 1;
         g.1 = Arc::new(snap);
+        // ORDERING: Release pairs with the Acquire load in generation().
+        // The placement is load-bearing for the audit invariant "no worker
+        // observes generation N+1 while reading snapshot N": the store
+        // happens INSIDE the critical section and AFTER the pair update, so
+        // the mirror can lag the pair (benign: a reader sees N, then
+        // current() returns N+1) but can never lead it — and once a reader
+        // DOES see N+1 here, the mutex release/acquire guarantees its next
+        // current() returns generation >= N+1.
         self.generation.store(g.0, Ordering::Release);
         Ok(g.0)
     }
@@ -437,6 +455,8 @@ pub fn run<E: Executor>(
                         match producer_queue.try_push(req) {
                             TryPush::Pushed => {}
                             TryPush::Full(_) => {
+                                // ORDERING: Relaxed counter; aggregated only
+                                // after the scope joins every thread
                                 rejected.fetch_add(1, Ordering::Relaxed);
                             }
                             TryPush::Closed(_) => return,
@@ -459,6 +479,7 @@ pub fn run<E: Executor>(
                     let now = Instant::now();
                     let before = reqs.len();
                     reqs.retain(|r| r.deadline.map_or(true, |d| d > now));
+                    // ORDERING: Relaxed counter; aggregated after scope join
                     expired.fetch_add((before - reqs.len()) as u64, Ordering::Relaxed);
                     if reqs.is_empty() {
                         continue; // whole batch expired in the queue
@@ -466,6 +487,7 @@ pub fn run<E: Executor>(
                     let (generation, snap) = slot.current();
                     let mut pb = prepare(&snap, &reqs, device_batch);
                     pb.generation = generation;
+                    // ORDERING: Relaxed counter; aggregated after scope join
                     index_ns.fetch_add(pb.index_ns, Ordering::Relaxed);
                     if tx.send(pb).is_err() {
                         return; // exec thread gone
@@ -514,7 +536,12 @@ pub fn run<E: Executor>(
     let elapsed = t_all.elapsed().as_secs_f64();
     let rejected = rejected.into_inner() as usize;
     let expired = expired.into_inner() as usize;
-    debug_assert_eq!(served + rejected + expired, n_requests, "request conservation");
+    // Always-on accounting invariant (was a release-mode no-op
+    // debug_assert): a run that lost or double-counted requests must fail
+    // the report, not ship corrupt admission metrics. Checked only on the
+    // clean path — the exec-error return above legitimately abandons
+    // in-flight batches.
+    check_conservation(served, rejected, expired, n_requests)?;
     Ok(ServeReport {
         requests: served,
         offered: n_requests,
@@ -531,6 +558,7 @@ pub fn run<E: Executor>(
         throughput_rps: served as f64 / elapsed.max(1e-12),
         latency: TimingStats::from_samples(latencies),
         queue_wait: TimingStats::from_samples(queue_waits),
+        // ORDERING: Relaxed — the scope joined; all worker adds are visible
         index_secs: index_ns.load(Ordering::Relaxed) as f64 / 1e9,
         exec_secs,
         snapshot_bytes: slot.current().1.host_bytes(),
@@ -539,6 +567,23 @@ pub fn run<E: Executor>(
         snapshot_swaps,
         generation: last_gen.unwrap_or(0),
     })
+}
+
+/// Request-conservation invariant: every offered request must be accounted
+/// for as served, rejected at admission, or expired in the queue — exactly
+/// once. Split out of `run` so the failure path is unit-testable.
+fn check_conservation(
+    served: usize,
+    rejected: usize,
+    expired: usize,
+    offered: usize,
+) -> Result<()> {
+    anyhow::ensure!(
+        served + rejected + expired == offered,
+        "request conservation violated: served {served} + rejected {rejected} + \
+         expired {expired} != offered {offered}"
+    );
+    Ok(())
 }
 
 #[cfg(test)]
@@ -797,6 +842,8 @@ mod tests {
         let rep = std::thread::scope(|s| {
             // swapper: keep installing rebaked generations while serving
             s.spawn(|| {
+                // ORDERING: Relaxed stop flag — no data is published
+                // through it, and the scope join bounds its lifetime
                 while !stop.load(Ordering::Relaxed) {
                     slot.install(snapshot()).unwrap();
                     std::thread::sleep(Duration::from_micros(200));
@@ -805,6 +852,7 @@ mod tests {
             let mut exec = CountingExecutor::new(16);
             let traffic = TrafficGen::new(&ds, 0.5, 11);
             let rep = run(&mut exec, &slot, traffic, &cfg(2, 8), 400).unwrap();
+            // ORDERING: Relaxed stop flag — see the load above
             stop.store(true, Ordering::Relaxed);
             rep
         });
@@ -812,5 +860,16 @@ mod tests {
         assert_eq!(rep.requests, 400);
         assert!(slot.generation() >= 1, "swapper never installed");
         assert!(rep.generation <= slot.generation());
+    }
+
+    #[test]
+    fn conservation_check_accepts_balanced_and_rejects_drift() {
+        assert!(check_conservation(10, 0, 0, 10).is_ok());
+        assert!(check_conservation(5, 3, 2, 10).is_ok());
+        assert!(check_conservation(0, 0, 0, 0).is_ok());
+        // a lost request must fail the report, in release builds too
+        let err = check_conservation(5, 3, 1, 10).unwrap_err();
+        assert!(err.to_string().contains("request conservation"), "{err}");
+        assert!(check_conservation(11, 0, 0, 10).is_err(), "double count");
     }
 }

@@ -99,6 +99,10 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 
 /// View a typed slice's memory as raw bytes (for writing + checksums).
 fn bytes_of<T>(s: &[T]) -> &[u8] {
+    // SAFETY: size_of_val is exactly the slice's byte extent, u8 has no
+    // alignment requirement and accepts all bit patterns (callers only pass
+    // plain number slices — no padding bytes), and the borrow keeps the
+    // memory immutable for the returned lifetime.
     unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s)) }
 }
 

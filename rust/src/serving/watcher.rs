@@ -300,9 +300,13 @@ impl SnapshotWatcher {
         let handle = std::thread::spawn(move || {
             let poll = cfg.poll;
             let mut state = WatcherState::new(cfg, installed);
+            // ORDERING: Relaxed stop flag — it publishes no data (the
+            // report travels through the join), so only the eventual
+            // visibility of the bool matters
             while !stop2.load(Ordering::Relaxed) {
                 state.tick(&slot);
                 let mut slept = Duration::ZERO;
+                // ORDERING: Relaxed — same stop flag, same argument
                 while slept < poll && !stop2.load(Ordering::Relaxed) {
                     let slice = (poll - slept).min(Duration::from_millis(10));
                     std::thread::sleep(slice);
@@ -316,6 +320,8 @@ impl SnapshotWatcher {
 
     /// Signal the watcher thread and join it, returning what it observed.
     pub fn stop(self) -> WatcherReport {
+        // ORDERING: Relaxed stop flag — the join below is the
+        // synchronization point for everything the thread produced
         self.stop.store(true, Ordering::Relaxed);
         self.handle.join().expect("watcher thread panicked")
     }

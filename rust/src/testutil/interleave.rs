@@ -1,0 +1,443 @@
+//! Deterministic interleaving harness (loom-lite, no deps).
+//!
+//! Model-checks small concurrent scenarios by running their steps under a
+//! scheduler that enforces ONE chosen interleaving at a time, with no
+//! wall-clock sleeps: a [`Plan`] declares per-thread step lists, a schedule
+//! is a sequence of thread indices, and [`explore`] enumerates every
+//! interleaving (all multiset permutations that preserve per-thread program
+//! order) up to a bound, falling back to deterministic seeded sampling when
+//! the space is larger.
+//!
+//! Steps come in two flavors:
+//! * [`step`] — runs to completion before the scheduler grants the next
+//!   schedule entry (strict serialization).
+//! * [`blocking_step`] — may park inside a lock/condvar (e.g. a bounded
+//!   queue `push` against a full queue); the scheduler waits only for the
+//!   step to START, then moves on so a later entry can unblock it.
+//!
+//! The only timeout in the harness is a generous watchdog used purely as a
+//! deadlock DETECTOR (it panics with the stuck state); it never orders
+//! steps. Scenario invariants live in the plan's `check` closure, which
+//! runs after every thread has finished.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One schedulable action of a scenario thread.
+pub struct Step {
+    name: &'static str,
+    blocking: bool,
+    run: Box<dyn FnOnce() + Send>,
+}
+
+/// A step the scheduler serializes: the next schedule entry is granted only
+/// after this one returns.
+pub fn step(name: &'static str, f: impl FnOnce() + Send + 'static) -> Step {
+    Step { name, blocking: false, run: Box::new(f) }
+}
+
+/// A step that may park (blocking queue op, condvar wait): the scheduler
+/// waits for it to start, then proceeds so a later entry can unblock it.
+pub fn blocking_step(name: &'static str, f: impl FnOnce() + Send + 'static) -> Step {
+    Step { name, blocking: true, run: Box::new(f) }
+}
+
+/// A scenario: per-thread step lists plus a final invariant check that runs
+/// once every thread has finished.
+pub struct Plan {
+    threads: Vec<Vec<Step>>,
+    check: Box<dyn FnOnce() + Send>,
+}
+
+impl Plan {
+    pub fn new(threads: Vec<Vec<Step>>, check: impl FnOnce() + Send + 'static) -> Plan {
+        Plan { threads, check: Box::new(check) }
+    }
+}
+
+/// Deadlock DETECTOR only — never used to order steps.
+const WATCHDOG: Duration = Duration::from_secs(5);
+
+struct CtrlState {
+    /// per thread: number of steps granted by the scheduler
+    granted: Vec<usize>,
+    /// per thread: number of steps that have begun executing
+    started: Vec<usize>,
+    /// per thread: number of steps that have finished executing
+    done: Vec<usize>,
+    /// per thread: the worker closure exited (normally or by panic)
+    finished: Vec<bool>,
+}
+
+struct Ctrl {
+    state: Mutex<CtrlState>,
+    cv: Condvar,
+}
+
+impl Ctrl {
+    fn new(n_threads: usize) -> Ctrl {
+        Ctrl {
+            state: Mutex::new(CtrlState {
+                granted: vec![0; n_threads],
+                started: vec![0; n_threads],
+                done: vec![0; n_threads],
+                finished: vec![false; n_threads],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until `pred` holds; watchdog-panic if it stays false.
+    fn wait_until(&self, what: &str, mut pred: impl FnMut(&CtrlState) -> bool) {
+        let mut st = self.state.lock().unwrap();
+        while !pred(&st) {
+            let (s2, to) = self.cv.wait_timeout(st, WATCHDOG).unwrap();
+            st = s2;
+            if to.timed_out() && !pred(&st) {
+                panic!(
+                    "interleave watchdog: stuck waiting for {what}; granted={:?} \
+                     started={:?} done={:?} finished={:?}",
+                    st.granted, st.started, st.done, st.finished
+                );
+            }
+        }
+    }
+
+    fn set(&self, update: impl FnOnce(&mut CtrlState)) {
+        let mut st = self.state.lock().unwrap();
+        update(&mut st);
+        self.cv.notify_all();
+    }
+
+    /// Scheduler side: pick the first unconsumed schedule entry whose
+    /// thread is idle and grant its next step. Entries of finished threads
+    /// (a step panicked) are consumed without granting so the scheduler can
+    /// drain and let the scope join surface the panic. Returns
+    /// `(entry index, Some(step index))` on grant, `(entry index, None)`
+    /// on a dead-thread skip.
+    fn pick_and_grant(&self, schedule: &[usize], consumed: &[bool]) -> (usize, Option<usize>) {
+        let mut st = self.state.lock().unwrap();
+        let mut timed_out = false;
+        loop {
+            for (idx, &t) in schedule.iter().enumerate() {
+                if consumed[idx] {
+                    continue;
+                }
+                if st.finished[t] {
+                    return (idx, None);
+                }
+                if st.done[t] == st.granted[t] {
+                    let k = st.granted[t];
+                    st.granted[t] += 1;
+                    self.cv.notify_all();
+                    return (idx, Some(k));
+                }
+            }
+            if timed_out {
+                panic!(
+                    "interleave watchdog: schedule {schedule:?} stuck (every remaining \
+                     entry's thread is blocked); granted={:?} done={:?} finished={:?}",
+                    st.granted, st.done, st.finished
+                );
+            }
+            let (s2, to) = self.cv.wait_timeout(st, WATCHDOG).unwrap();
+            st = s2;
+            timed_out = to.timed_out();
+        }
+    }
+}
+
+/// Marks a step done even if it panics, so the scheduler can drain.
+struct DoneGuard<'a> {
+    ctrl: &'a Ctrl,
+    ti: usize,
+    k: usize,
+}
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let (ti, k) = (self.ti, self.k);
+        self.ctrl.set(|st| st.done[ti] = k + 1);
+    }
+}
+
+/// Marks the thread finished even if a step panics.
+struct FinishGuard<'a> {
+    ctrl: &'a Ctrl,
+    ti: usize,
+}
+
+impl Drop for FinishGuard<'_> {
+    fn drop(&mut self) {
+        let ti = self.ti;
+        self.ctrl.set(|st| st.finished[ti] = true);
+    }
+}
+
+/// Run `plan` under exactly one interleaving. `schedule[j]` names the
+/// thread whose next step is granted `j`-th; thread `t` must appear exactly
+/// `plan.threads[t].len()` times. Use this to pin a regression schedule
+/// found by [`explore`].
+pub fn run_one(schedule: &[usize], plan: Plan) {
+    let Plan { threads, check } = plan;
+    let n_threads = threads.len();
+    let mut have = vec![0usize; n_threads];
+    for &t in schedule {
+        assert!(t < n_threads, "schedule names thread {t}, plan has {n_threads}");
+        have[t] += 1;
+    }
+    let need: Vec<usize> = threads.iter().map(|t| t.len()).collect();
+    assert_eq!(have, need, "schedule step counts must match the plan");
+
+    let blocking: Vec<Vec<bool>> =
+        threads.iter().map(|s| s.iter().map(|st| st.blocking).collect()).collect();
+    let ctrl = Ctrl::new(n_threads);
+    std::thread::scope(|s| {
+        for (ti, steps) in threads.into_iter().enumerate() {
+            let ctrl = &ctrl;
+            s.spawn(move || {
+                let _fin = FinishGuard { ctrl, ti };
+                for (k, step) in steps.into_iter().enumerate() {
+                    ctrl.wait_until(step.name, |st| st.granted[ti] > k);
+                    ctrl.set(|st| st.started[ti] = k + 1);
+                    let _dg = DoneGuard { ctrl, ti, k };
+                    (step.run)();
+                }
+            });
+        }
+        let mut consumed = vec![false; schedule.len()];
+        let mut remaining = schedule.len();
+        while remaining > 0 {
+            let (idx, granted) = ctrl.pick_and_grant(schedule, &consumed);
+            consumed[idx] = true;
+            remaining -= 1;
+            if let Some(k) = granted {
+                let t = schedule[idx];
+                ctrl.wait_until("step start", |st| st.started[t] > k);
+                if !blocking[t][k] {
+                    ctrl.wait_until("step completion", |st| st.done[t] > k);
+                }
+            }
+        }
+        ctrl.wait_until("all threads finished", |st| st.finished.iter().all(|&f| f));
+    });
+    check();
+}
+
+/// Number of program-order-preserving interleavings of threads with the
+/// given step counts (multinomial coefficient), exact in u128.
+pub fn count_interleavings(counts: &[usize]) -> u128 {
+    let mut total: u128 = 1;
+    let mut seen: u128 = 0;
+    for &c in counts {
+        for i in 1..=c {
+            seen += 1;
+            // running product total·C(seen, i) stays integral at each step
+            total = total * seen / i as u128;
+        }
+    }
+    total
+}
+
+/// Lexicographic next multiset permutation; false once exhausted.
+fn next_permutation(v: &mut [usize]) -> bool {
+    if v.len() < 2 {
+        return false;
+    }
+    let mut i = v.len() - 1;
+    while i > 0 && v[i - 1] >= v[i] {
+        i -= 1;
+    }
+    if i == 0 {
+        return false;
+    }
+    let mut j = v.len() - 1;
+    while v[j] <= v[i - 1] {
+        j -= 1;
+    }
+    v.swap(i - 1, j);
+    v[i..].reverse();
+    true
+}
+
+/// Explore the scenario produced by `build` under every interleaving when
+/// the space fits in `max_schedules`, otherwise under `max_schedules`
+/// deterministic seeded samples (duplicates possible). `build` is called
+/// once per schedule and must produce an equivalent plan each time (fresh
+/// state, same step structure). Returns the number of schedules run.
+pub fn explore(max_schedules: usize, build: impl Fn() -> Plan) -> usize {
+    let counts: Vec<usize> = build().threads.iter().map(|t| t.len()).collect();
+    let mut base: Vec<usize> = Vec::new();
+    for (t, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            base.push(t);
+        }
+    }
+    if base.is_empty() {
+        run_one(&[], build());
+        return 1;
+    }
+
+    let total = count_interleavings(&counts);
+    let mut ran = 0usize;
+    if total <= max_schedules as u128 {
+        // exhaustive: `base` starts lexicographically smallest (sorted)
+        let mut schedule = base;
+        loop {
+            run_schedule(&schedule, build());
+            ran += 1;
+            if !next_permutation(&mut schedule) {
+                break;
+            }
+        }
+    } else {
+        // bounded: deterministic seeded Fisher–Yates samples
+        let mut lcg = 0x5EED_1E55_C0FF_EE00u64;
+        let mut next = move || {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            lcg >> 33
+        };
+        let mut schedule = base;
+        for _ in 0..max_schedules {
+            for i in (1..schedule.len()).rev() {
+                let j = (next() % (i as u64 + 1)) as usize;
+                schedule.swap(i, j);
+            }
+            run_schedule(&schedule, build());
+            ran += 1;
+        }
+    }
+    ran
+}
+
+/// `run_one` plus schedule context on failure, so a panicking invariant
+/// names the interleaving that produced it.
+fn run_schedule(schedule: &[usize], plan: Plan) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_one(schedule, plan);
+    }));
+    if let Err(payload) = result {
+        eprintln!("interleave: failing schedule: {schedule:?}");
+        std::panic::resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn counts_match_multinomial() {
+        assert_eq!(count_interleavings(&[2, 1]), 3);
+        assert_eq!(count_interleavings(&[2, 2]), 6);
+        assert_eq!(count_interleavings(&[3, 3]), 20);
+        assert_eq!(count_interleavings(&[1, 1, 1]), 6);
+    }
+
+    #[test]
+    fn explores_every_interleaving_of_two_one() {
+        let logs: Arc<Mutex<Vec<Vec<&'static str>>>> = Arc::new(Mutex::new(Vec::new()));
+        let n = explore(100, || {
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let (a1, a2, b1) = (log.clone(), log.clone(), log.clone());
+            let logs = logs.clone();
+            Plan::new(
+                vec![
+                    vec![
+                        step("a1", move || a1.lock().unwrap().push("a1")),
+                        step("a2", move || a2.lock().unwrap().push("a2")),
+                    ],
+                    vec![step("b1", move || b1.lock().unwrap().push("b1"))],
+                ],
+                move || logs.lock().unwrap().push(log.lock().unwrap().clone()),
+            )
+        });
+        assert_eq!(n, 3);
+        let seen = logs.lock().unwrap();
+        // program order a1 < a2 always; b1 lands in all 3 positions
+        let want: [&[&str]; 3] =
+            [&["a1", "a2", "b1"], &["a1", "b1", "a2"], &["b1", "a1", "a2"]];
+        for w in want {
+            assert!(seen.iter().any(|s| s == w), "missing interleaving {w:?} in {seen:?}");
+        }
+    }
+
+    #[test]
+    fn exposes_lost_update_in_some_but_not_all_interleavings() {
+        // classic read-modify-write race: two threads each read the cell,
+        // then write back read+1. Serialized schedules end at 2; schedules
+        // where both read before either writes end at 1 (lost update).
+        let finals: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let n = explore(100, || {
+            let cell = Arc::new(Mutex::new(0usize));
+            let tmps: Vec<Arc<Mutex<usize>>> =
+                (0..2).map(|_| Arc::new(Mutex::new(0))).collect();
+            let mut threads = Vec::new();
+            for tmp in &tmps {
+                let (rc, rt) = (cell.clone(), tmp.clone());
+                let (wc, wt) = (cell.clone(), tmp.clone());
+                threads.push(vec![
+                    step("read", move || *rt.lock().unwrap() = *rc.lock().unwrap()),
+                    step("write", move || *wc.lock().unwrap() = *wt.lock().unwrap() + 1),
+                ]);
+            }
+            let (finals, cell) = (finals.clone(), cell.clone());
+            Plan::new(threads, move || finals.lock().unwrap().push(*cell.lock().unwrap()))
+        });
+        assert_eq!(n, 6);
+        let finals = finals.lock().unwrap();
+        assert!(finals.contains(&1), "no schedule exposed the lost update: {finals:?}");
+        assert!(finals.contains(&2), "no schedule serialized cleanly: {finals:?}");
+    }
+
+    #[test]
+    fn sampling_mode_bounds_the_schedule_count() {
+        let runs = Arc::new(Mutex::new(0usize));
+        let runs2 = runs.clone();
+        // [3, 3] has 20 interleavings > 5 → seeded sampling caps at 5
+        let n = explore(5, move || {
+            let runs = runs2.clone();
+            let mk = || step("noop", || {});
+            Plan::new(
+                vec![vec![mk(), mk(), mk()], vec![mk(), mk(), mk()]],
+                move || *runs.lock().unwrap() += 1,
+            )
+        });
+        assert_eq!(n, 5);
+        assert_eq!(*runs.lock().unwrap(), 5);
+    }
+
+    #[test]
+    fn blocking_step_is_unblocked_by_a_later_entry() {
+        // producer parks on a full bounded channel (capacity 0 rendezvous
+        // via Mutex+Condvar stand-in): a sync_channel(1) that is already
+        // full blocks the second send until the drainer receives.
+        let n = explore(100, || {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<u32>(1);
+            tx.send(0).unwrap(); // fill the buffer: next send blocks
+            let tx2 = tx.clone();
+            let got = Arc::new(Mutex::new(Vec::new()));
+            let (g1, g2) = (got.clone(), got.clone());
+            Plan::new(
+                vec![
+                    vec![blocking_step("send", move || tx2.send(1).unwrap())],
+                    vec![
+                        // recv1 never parks: the pre-filled item is always
+                        // still buffered when it runs (send only adds)
+                        step("recv1", move || g1.lock().unwrap().push(rx.recv().unwrap())),
+                        // recv2 may park on the empty channel until the
+                        // send entry is granted — must be a blocking step
+                        blocking_step("recv2", move || {
+                            g2.lock().unwrap().push(rx.recv().unwrap());
+                        }),
+                    ],
+                ],
+                move || {
+                    assert_eq!(*got.lock().unwrap(), vec![0, 1]);
+                },
+            )
+        });
+        assert_eq!(n, 3);
+    }
+}

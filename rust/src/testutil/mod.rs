@@ -10,6 +10,8 @@
 //! });
 //! ```
 
+pub mod interleave;
+
 use std::path::{Path, PathBuf};
 
 /// RAII temp directory for tests that need real files (segments, snapshot
@@ -184,8 +186,10 @@ mod tests {
         prop::check(25, |g| {
             let n = g.usize(1..10);
             assert!(n >= 1 && n < 10);
+            // ORDERING: Relaxed — single-threaded check loop, no races
             count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         });
+        // ORDERING: Relaxed — same thread as the adds above
         assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 25);
     }
 

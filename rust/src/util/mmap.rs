@@ -61,10 +61,12 @@ pub struct MappedFile {
     backing: Backing,
 }
 
-// The mapping is read-only for the lifetime of the struct and the backing
-// (kernel pages or an owned Vec) cannot move, so sharing across threads is
-// sound.
+// SAFETY: the mapping is read-only for the lifetime of the struct and the
+// backing (kernel pages or an owned Vec) cannot move, so the owner can change
+// threads freely.
 unsafe impl Send for MappedFile {}
+// SAFETY: all access goes through `&self` methods over immutable memory —
+// concurrent readers never race (same read-only/pinned argument as Send).
 unsafe impl Sync for MappedFile {}
 
 impl MappedFile {
@@ -73,9 +75,15 @@ impl MappedFile {
         let mut file =
             File::open(path).with_context(|| format!("open {} for mapping", path.display()))?;
         let len = file.metadata()?.len() as usize;
-        #[cfg(unix)]
+        // Miri has no mmap shim: skip the syscall attempt so `cargo miri
+        // test` deterministically exercises the heap fallback below.
+        #[cfg(all(unix, not(miri)))]
         if len > 0 {
             use std::os::unix::io::AsRawFd;
+            // SAFETY: a fresh anonymous-address PROT_READ/MAP_PRIVATE
+            // mapping of a file we hold open; len > 0 and offset 0 are
+            // valid for the fd, and the result is checked against
+            // MAP_FAILED before use.
             let ptr = unsafe {
                 sys::mmap(
                     std::ptr::null_mut(),
@@ -94,8 +102,11 @@ impl MappedFile {
         // Fallback: one read into an 8-byte-aligned buffer.
         let mut buf = vec![0u64; len.div_ceil(8)];
         if len > 0 {
-            let bytes =
-                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            let ptr = buf.as_mut_ptr() as *mut u8;
+            // SAFETY: the Vec allocation holds div_ceil(len, 8) u64s ≥ len
+            // bytes, u8 has no alignment requirement, and `bytes` is the
+            // only live reference to the buffer while it is written.
+            let bytes = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
             file.read_exact(bytes)
                 .with_context(|| format!("read {} into fallback buffer", path.display()))?;
         }
@@ -106,6 +117,8 @@ impl MappedFile {
         if self.len == 0 {
             return &[];
         }
+        // SAFETY: ptr/len describe the live backing (kernel mapping or the
+        // owned heap Vec), immutable and pinned until Drop.
         unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
     }
 
@@ -130,6 +143,9 @@ impl Drop for MappedFile {
     fn drop(&mut self) {
         #[cfg(unix)]
         if matches!(self.backing, Backing::Mmap) {
+            // SAFETY: ptr/len are exactly what mmap returned for this
+            // struct, unmapped exactly once here; no slice into the
+            // mapping can outlive the struct that owns it.
             unsafe { sys::munmap(self.ptr as *mut core::ffi::c_void, self.len) };
         }
     }
@@ -144,6 +160,9 @@ macro_rules! cast_helper {
             let size = std::mem::size_of::<$ty>();
             assert_eq!(bytes.len() % size, 0, "byte length {} not /{size}", bytes.len());
             assert_eq!(bytes.as_ptr() as usize % size, 0, "misaligned {} slice", stringify!($ty));
+            // SAFETY: length divisibility and pointer alignment were just
+            // asserted, the target type accepts all bit patterns, and the
+            // borrow keeps the bytes immutable for the slice's lifetime.
             unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const $ty, bytes.len() / size) }
         }
     };
@@ -171,7 +190,7 @@ mod tests {
         let m = MappedFile::open(&p).unwrap();
         assert_eq!(m.len(), data.len());
         assert_eq!(m.bytes(), &data[..]);
-        #[cfg(target_os = "linux")]
+        #[cfg(all(target_os = "linux", not(miri)))]
         assert!(m.is_mmap(), "linux should take the mmap fast path");
         std::fs::remove_file(&p).ok();
     }
@@ -198,11 +217,70 @@ mod tests {
         std::fs::remove_file(&p).ok();
     }
 
+    /// An 8-byte-aligned byte view of `words`, starting `offset` bytes in.
+    /// Misaligning is the point: the cast helpers must reject it, never
+    /// build the typed slice.
+    fn view(words: &[u64], offset: usize, len: usize) -> &[u8] {
+        assert!(offset + len <= words.len() * 8);
+        // SAFETY: in bounds of the u64 allocation per the assert above; u8
+        // views have no alignment requirement and the borrow of `words`
+        // keeps the bytes alive and immutable.
+        unsafe { std::slice::from_raw_parts((words.as_ptr() as *const u8).add(offset), len) }
+    }
+
     #[test]
     #[should_panic(expected = "not /4")]
     fn cast_rejects_ragged_length() {
         let buf = vec![0u64; 1];
-        let bytes = unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, 7) };
-        let _ = as_u32s(bytes);
+        let _ = as_u32s(view(&buf, 0, 7));
+    }
+
+    #[test]
+    #[should_panic(expected = "not /4")]
+    fn cast_i32_rejects_truncated_tail() {
+        let buf = vec![0u64; 1];
+        let _ = as_i32s(view(&buf, 0, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "not /4")]
+    fn cast_f32_rejects_truncated_tail() {
+        let buf = vec![0u64; 1];
+        let _ = as_f32s(view(&buf, 0, 6));
+    }
+
+    #[test]
+    #[should_panic(expected = "not /8")]
+    fn cast_u64_rejects_truncated_tail() {
+        let buf = vec![0u64; 2];
+        let _ = as_u64s(view(&buf, 0, 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned u32 slice")]
+    fn cast_u32_rejects_misaligned_offset() {
+        let buf = vec![0u64; 2];
+        let _ = as_u32s(view(&buf, 1, 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned i32 slice")]
+    fn cast_i32_rejects_misaligned_offset() {
+        let buf = vec![0u64; 2];
+        let _ = as_i32s(view(&buf, 2, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned f32 slice")]
+    fn cast_f32_rejects_misaligned_offset() {
+        let buf = vec![0u64; 2];
+        let _ = as_f32s(view(&buf, 3, 12));
+    }
+
+    #[test]
+    #[should_panic(expected = "misaligned u64 slice")]
+    fn cast_u64_rejects_misaligned_offset() {
+        let buf = vec![0u64; 3];
+        let _ = as_u64s(view(&buf, 4, 16));
     }
 }

@@ -16,8 +16,9 @@
 //! one lock acquisition for every item, plus a `Vec<Mutex<&mut T>>` of
 //! guards built up front. Items are claimed exactly once off the atomic
 //! queue, so the slots are disjoint by construction; results now go
-//! through a `SyncPtr` raw-pointer write with zero synchronization beyond
-//! the queue counter and the scope join.
+//! through a [`SharedSlice`] disjoint-claim write with zero synchronization
+//! beyond the queue counter and the scope join (the debug-build claim
+//! ledger asserts the disjointness instead of trusting it).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
@@ -36,7 +37,12 @@ pub fn default_threads() -> usize {
 /// capture the whole wrapper, not the raw-pointer field — edition-2021
 /// disjoint capture would otherwise grab the `!Sync` pointer.
 pub struct SyncPtr<T>(*mut T);
+// SAFETY: SyncPtr is a plain pointer wrapper with no interior access of its
+// own; every dereference happens inside an `unsafe` block whose contract is
+// that concurrent users touch disjoint elements. Moving/sharing the wrapper
+// therefore only requires the pointee type to be sendable between threads.
 unsafe impl<T: Send> Sync for SyncPtr<T> {}
+// SAFETY: see the Sync impl above — same disjoint-use contract.
 unsafe impl<T: Send> Send for SyncPtr<T> {}
 impl<T> SyncPtr<T> {
     pub fn new(p: *mut T) -> SyncPtr<T> {
@@ -45,6 +51,106 @@ impl<T> SyncPtr<T> {
 
     pub fn get(&self) -> *mut T {
         self.0
+    }
+}
+
+/// The audited funnel for disjoint parallel writes into one `&mut [T]`.
+///
+/// Wraps the buffer behind a [`SyncPtr`] so scoped worker threads can write
+/// concurrently, but narrows every access to an explicit, bounds-checked
+/// claim: [`write`](SharedSlice::write) for single slots,
+/// [`range_mut`](SharedSlice::range_mut) for contiguous chunks. In debug
+/// builds a claim ledger asserts that no two claims overlap for the lifetime
+/// of the wrapper, turning an aliasing bug into a deterministic panic
+/// instead of silent UB; release builds compile the ledger out.
+pub struct SharedSlice<'a, T> {
+    ptr: SyncPtr<T>,
+    len: usize,
+    #[cfg(debug_assertions)]
+    claims: std::sync::Mutex<Vec<(usize, usize)>>,
+    _borrow: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: SharedSlice hands out only exclusive, caller-disjoint access to
+// the underlying elements (each element reached by at most one thread at a
+// time, per the unsafe-method contracts below), so sharing the wrapper only
+// ever mutates a `T` from one thread at once — `T: Send` suffices and
+// `T: Sync` is not required.
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    pub fn new(data: &'a mut [T]) -> SharedSlice<'a, T> {
+        SharedSlice {
+            len: data.len(),
+            ptr: SyncPtr::new(data.as_mut_ptr()),
+            #[cfg(debug_assertions)]
+            claims: std::sync::Mutex::new(Vec::new()),
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Debug-only claim ledger: panics on out-of-bounds or overlapping
+    /// claims. Kept sorted by start so each claim costs one binary search
+    /// plus two neighbor checks, not a scan of every prior claim.
+    #[cfg(debug_assertions)]
+    fn claim(&self, start: usize, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let end = start + len;
+        assert!(end <= self.len, "claim {start}..{end} out of bounds (len {})", self.len);
+        let mut claims = self.claims.lock().unwrap();
+        let i = claims.partition_point(|&(s, _)| s < start);
+        if i > 0 {
+            let (ps, pe) = claims[i - 1];
+            assert!(pe <= start, "claim {start}..{end} overlaps earlier claim {ps}..{pe}");
+        }
+        if i < claims.len() {
+            let (ns, ne) = claims[i];
+            assert!(end <= ns, "claim {start}..{end} overlaps claim {ns}..{ne}");
+        }
+        claims.insert(i, (start, end));
+    }
+
+    /// Claim `start..start + len` as an exclusive chunk.
+    ///
+    /// # Safety
+    ///
+    /// The range must be in bounds and must not overlap any other claim on
+    /// this wrapper that is still in use (one claimant per element). Debug
+    /// builds verify both; release builds trust the caller.
+    // disjointness is the caller contract above, ledger-checked in debug
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [T] {
+        #[cfg(debug_assertions)]
+        self.claim(start, len);
+        // SAFETY: in bounds and non-overlapping per the caller contract, so
+        // this exclusive slice aliases no other live reference.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.get().add(start), len) }
+    }
+
+    /// Claim slot `i` and assign `v` into it (the previous value is dropped
+    /// in place — intended for pre-initialized output buffers such as the
+    /// `T::default()`-filled vector in [`par_map_with`]).
+    ///
+    /// # Safety
+    ///
+    /// `i` must be in bounds, the slot must hold a valid `T`, and it must be
+    /// claimed by exactly one caller across the wrapper's lifetime. Debug
+    /// builds verify bounds and exclusivity.
+    pub unsafe fn write(&self, i: usize, v: T) {
+        #[cfg(debug_assertions)]
+        self.claim(i, 1);
+        // SAFETY: in bounds and exclusively claimed per the caller contract.
+        unsafe { *self.ptr.get().add(i) = v };
     }
 }
 
@@ -99,6 +205,10 @@ where
         for _ in 0..n_threads {
             let (next, f) = (&next, &f);
             s.spawn(move || loop {
+                // ORDERING: Relaxed suffices for the work-queue ticket — the
+                // RMW is atomic (each index handed out once) and any writes
+                // done by `f` are published by the scope join, not by this
+                // counter.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -111,7 +221,7 @@ where
 
 /// Parallel map collecting results in order. Each index is claimed exactly
 /// once off the dynamic queue, so results are written through disjoint
-/// `SyncPtr` slots — no per-element locking.
+/// [`SharedSlice`] slots — no per-element locking.
 pub fn par_map<T, F>(n: usize, n_threads: usize, f: F) -> Vec<T>
 where
     T: Send + Default,
@@ -144,24 +254,31 @@ where
         return out;
     }
     let next = AtomicUsize::new(0);
-    let out_ptr = SyncPtr::new(out.as_mut_ptr());
+    let shared = SharedSlice::new(&mut out);
     std::thread::scope(|s| {
         for _ in 0..n_threads {
-            let (next, init, f, out_ptr) = (&next, &init, &f, &out_ptr);
+            let (next, init, f, shared) = (&next, &init, &f, &shared);
             s.spawn(move || {
                 let mut scratch = init();
                 loop {
+                    // ORDERING: Relaxed suffices for the work-queue ticket —
+                    // the RMW is atomic (each index claimed exactly once) and
+                    // the slot writes are published by the scope join, not by
+                    // this counter.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
                     let v = f(&mut scratch, i);
-                    // each index is claimed by exactly one worker → disjoint
-                    unsafe { *out_ptr.get().add(i) = v };
+                    // SAFETY: index i was claimed by exactly one worker off
+                    // the atomic queue and i < n == shared.len(), so every
+                    // write targets a distinct in-bounds slot.
+                    unsafe { shared.write(i, v) };
                 }
             });
         }
     });
+    drop(shared); // end the borrow of `out` (the scope has joined)
     out
 }
 
@@ -272,9 +389,11 @@ mod tests {
         let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
         scope_chunks(1000, 7, |_, s, e| {
             for i in s..e {
+                // ORDERING: Relaxed test counter, read only after the join
                 hits[i].fetch_add(1, Ordering::Relaxed);
             }
         });
+        // ORDERING: Relaxed — scope_chunks joined, writes already visible
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
@@ -283,8 +402,10 @@ mod tests {
         for (n, c) in [(0, 4), (1, 4), (3, 8), (8, 3)] {
             let count = AtomicU64::new(0);
             scope_chunks(n, c, |_, s, e| {
+                // ORDERING: Relaxed test counter, read only after the join
                 count.fetch_add((e - s) as u64, Ordering::Relaxed);
             });
+            // ORDERING: Relaxed — scope joined, writes already visible
             assert_eq!(count.load(Ordering::Relaxed), n as u64);
         }
     }
@@ -293,8 +414,10 @@ mod tests {
     fn dynamic_queue_processes_everything() {
         let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
         par_for_each_dynamic(257, 5, |i| {
+            // ORDERING: Relaxed test counter, read only after the join
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
+        // ORDERING: Relaxed — the dynamic scope joined before this read
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
     }
 
@@ -323,6 +446,7 @@ mod tests {
             200,
             4,
             || {
+                // ORDERING: Relaxed test counter, read only after the join
                 inits.fetch_add(1, Ordering::Relaxed);
                 Vec::<usize>::new()
             },
@@ -332,7 +456,52 @@ mod tests {
             },
         );
         assert_eq!(out, (0..200).map(|i| i * 2).collect::<Vec<_>>());
+        // ORDERING: Relaxed — par_map_with joined, writes already visible
         assert!(inits.load(Ordering::Relaxed) <= 4, "scratch built per worker, not per item");
+    }
+
+    #[test]
+    fn par_map_with_bit_identical_across_thread_sweep() {
+        // arena-reuse stress: ragged n across the full thread sweep must be
+        // bit-identical with the single-threaded result (ordered output,
+        // disjoint SharedSlice writes, per-worker scratch reuse)
+        for n in [1usize, 13, 97, 257] {
+            let payload = |i: usize| {
+                let x = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                vec![x, x ^ 0xdead_beef, x.rotate_left(17)]
+            };
+            let want: Vec<Vec<u64>> = (0..n).map(payload).collect();
+            for threads in [1usize, 2, 3, 7, 16] {
+                let got = par_map_with(n, threads, Vec::<u64>::new, |scratch, i| {
+                    scratch.push(i as u64); // arena grows across claimed items
+                    payload(i)
+                });
+                assert_eq!(got, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "overlaps")]
+    fn shared_slice_overlapping_claims_panic_in_debug() {
+        let mut data = vec![0u32; 8];
+        let s = SharedSlice::new(&mut data);
+        // SAFETY: 0..4 is in bounds and unclaimed.
+        let _a = unsafe { s.range_mut(0, 4) };
+        // SAFETY: never materializes — the overlapping claim is the point of
+        // the test; the ledger panics before any aliasing reference exists.
+        let _b = unsafe { s.range_mut(2, 4) };
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn shared_slice_out_of_bounds_claim_panics_in_debug() {
+        let mut data = vec![0u32; 8];
+        let s = SharedSlice::new(&mut data);
+        // SAFETY: never materializes — the ledger rejects the range first
+        let _a = unsafe { s.range_mut(4, 8) };
     }
 
     #[test]

@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Unsafe-and-atomics correctness gate (docs/UNSAFE_POLICY.md):
+#
+#   1. in-repo analyzer (tools/analyze): SAFETY/ORDERING comment coverage,
+#      determinism-region bans, bench-JSON field drift vs verify.sh
+#   2. the analyzer's own self-tests (including the seeded-violation check
+#      that proves the lint actually fires)
+#   3. clippy with the curated deny-list
+#   4. Miri on the pointer-heavy modules (skipped when miri is not installed)
+#   5. ThreadSanitizer on the serving concurrency tests (skipped unless a
+#      nightly toolchain with rust-src is available; also skipped by --quick)
+#
+#   scripts/analyze.sh          # full pass
+#   scripts/analyze.sh --quick  # skip the sanitizer pass
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+quick=0
+[[ "${1:-}" == "--quick" ]] && quick=1
+
+# The analyzer crate is a standalone package; prefer workspace resolution,
+# fall back to its own manifest when it is not a workspace member.
+if cargo pkgid -p analyze >/dev/null 2>&1; then
+  analyze_run=(cargo run -q -p analyze --)
+  analyze_test=(cargo test -q -p analyze)
+else
+  analyze_run=(cargo run -q --manifest-path tools/analyze/Cargo.toml --)
+  analyze_test=(cargo test -q --manifest-path tools/analyze/Cargo.toml)
+fi
+
+echo "== analyze: SAFETY/ORDERING/determinism/bench-field lint =="
+"${analyze_run[@]}" --root .
+
+echo "== analyze: self-tests (seeded violations must be caught) =="
+"${analyze_test[@]}"
+
+echo "== cargo clippy (curated deny-list) =="
+cargo clippy -- -D warnings -D clippy::undocumented_unsafe_blocks
+
+if cargo miri --version >/dev/null 2>&1; then
+  echo "== cargo miri test (mmap casts + threadpool aliasing) =="
+  MIRIFLAGS="-Zmiri-disable-isolation" \
+    cargo miri test --lib -- util::mmap util::threadpool
+else
+  echo "== miri not installed; skipping (rustup +nightly component add miri) =="
+fi
+
+if [[ "$quick" -eq 1 ]]; then
+  echo "== --quick: skipping ThreadSanitizer pass =="
+elif cargo +nightly --version >/dev/null 2>&1 \
+    && rustc +nightly --print sysroot >/dev/null 2>&1 \
+    && [[ -d "$(rustc +nightly --print sysroot)/lib/rustlib/src/rust/library" ]]; then
+  echo "== ThreadSanitizer: serving concurrency tests =="
+  host="$(rustc +nightly -vV | awk '/^host:/{print $2}')"
+  RUSTFLAGS="-Zsanitizer=thread" \
+    cargo +nightly test -Zbuild-std --target "$host" --lib -- \
+    serving::batcher serving::engine
+else
+  echo "== nightly+rust-src unavailable; skipping ThreadSanitizer =="
+fi
+
+echo "analyze: OK"

@@ -22,8 +22,12 @@ cargo test -q
 echo "== cargo fmt --check =="
 cargo fmt --check
 
-echo "== cargo clippy -- -D warnings =="
-cargo clippy -- -D warnings
+# lint + unsafe/atomics gate (includes clippy with the curated deny-list)
+if [[ "$quick" -eq 1 ]]; then
+  scripts/analyze.sh --quick
+else
+  scripts/analyze.sh
+fi
 
 if [[ "$quick" -eq 0 ]]; then
   echo "== perf_cluster bench (smoke) =="

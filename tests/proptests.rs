@@ -156,6 +156,7 @@ fn tmp_seg(tag: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!(
         "cce_prop_{}_{tag}_{}.cceseg",
         std::process::id(),
+        // ORDERING: Relaxed — only uniqueness of the ticket matters
         N.fetch_add(1, Ordering::Relaxed)
     ))
 }

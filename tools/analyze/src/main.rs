@@ -1,0 +1,692 @@
+//! Repo-specific static analysis for the CCE codebase (no external deps).
+//!
+//! Rules:
+//! - R1-safety: every line containing an `unsafe` token (block, fn, impl)
+//!   must carry a `// SAFETY:` justification — trailing on the same line or
+//!   on the run of comment/attribute/blank lines immediately above. Doc
+//!   comments with a `# Safety` section also count (public `unsafe fn`).
+//! - R2-ordering: every `Ordering::{Relaxed,Acquire,Release,AcqRel,SeqCst}`
+//!   site must carry a `// ORDERING:` justification (same placement rules).
+//! - R3-determinism: inside the deterministic chunk-merge regions
+//!   (`rust/src/kmeans/**`, `rust/src/util/threadpool.rs`) no wall-clock or
+//!   RNG calls (`Instant::now`, `SystemTime::now`, `thread_rng`,
+//!   `from_entropy`) may appear outside `#[cfg(test)]` code.
+//! - R4-bench-sync: every bench-JSON field name asserted by the schema
+//!   checks in `scripts/verify.sh` must exist as a string literal in the
+//!   bench that emits it (`benches/perf_cluster.rs` for BENCH_cluster.json,
+//!   `benches/perf_hot_paths.rs` for BENCH_serving.json).
+//!
+//! Exit status: 0 when the tree is clean, 1 when any violation is found.
+//! Usage: `cargo run -p analyze -- [--root <repo-root>]`.
+
+use std::env;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+// ---------------------------------------------------------------------------
+// Lexer: split each source line into code text and comment text
+// ---------------------------------------------------------------------------
+
+/// One source line with string/char literals blanked out of `code` and all
+/// comment text (line + block, doc or not) collected into `comment`.
+#[derive(Debug, Default, Clone)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+#[derive(Clone, Copy)]
+enum St {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+}
+
+fn strip_lines(src: &str) -> Vec<Line> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines: Vec<Line> = vec![Line::default()];
+    let mut st = St::Normal;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Normal;
+            }
+            lines.push(Line::default());
+            i += 1;
+            continue;
+        }
+        let cur = lines.last_mut().expect("line buffer is never empty");
+        match st {
+            St::Normal => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((hashes, skip)) = raw_str_open(&chars, i) {
+                        st = St::RawStr(hashes);
+                        cur.code.push(' ');
+                        i += skip;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if let Some(skip) = char_literal_len(&chars, i) {
+                        cur.code.push(' ');
+                        i += skip;
+                    } else {
+                        // lifetime marker: keep as code
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(d) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Normal } else { St::BlockComment(d - 1) };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(d + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // consume the escape; an escaped newline keeps its line break
+                    if chars.get(i + 1) == Some(&'\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                } else if c == '"' {
+                    st = St::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && count_hashes(&chars, i + 1) >= h {
+                    st = St::Normal;
+                    i += 1 + h as usize;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If `chars[i..]` opens a raw (byte) string (`r"`, `r#"`, `br##"`, ...),
+/// return (hash count, chars to skip past the opening quote).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut h = 0u32;
+    while chars.get(j) == Some(&'#') {
+        h += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((h, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn count_hashes(chars: &[char], mut i: usize) -> u32 {
+    let mut h = 0u32;
+    while chars.get(i) == Some(&'#') {
+        h += 1;
+        i += 1;
+    }
+    h
+}
+
+/// If `chars[i]` opens a char literal (not a lifetime), return its length.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    if chars.get(i) != Some(&'\'') {
+        return None;
+    }
+    if chars.get(i + 1) == Some(&'\\') {
+        let mut j = i + 2;
+        while j < chars.len() && j < i + 14 {
+            if chars[j] == '\'' {
+                return Some(j + 1 - i);
+            }
+            j += 1;
+        }
+        None
+    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token helpers
+// ---------------------------------------------------------------------------
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Word-boundary token search over stripped code text.
+fn has_token(code: &str, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let p = start + pos;
+        let before_ok = p == 0 || !is_ident_byte(bytes[p - 1]);
+        let after = p + tok.len();
+        let after_ok = after >= bytes.len() || !is_ident_byte(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+const ORDERING_VARIANTS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// True if the stripped code references a memory-ordering constant.
+fn has_ordering_site(code: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find("Ordering::") {
+        let p = start + pos;
+        let rest = &code[p + "Ordering::".len()..];
+        for v in ORDERING_VARIANTS {
+            if rest.starts_with(v) {
+                let tail = &rest[v.len()..];
+                if !tail.starts_with(|c: char| c.is_alphanumeric() || c == '_') {
+                    return true;
+                }
+            }
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// True if the line itself, or the run of comment/attribute/blank lines
+/// immediately above it, carries one of the `markers`.
+fn justified(lines: &[Line], line: usize, markers: &[&str]) -> bool {
+    let hit = |l: &Line| markers.iter().any(|m| l.comment.contains(m));
+    if hit(&lines[line]) {
+        return true;
+    }
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        if hit(l) {
+            return true;
+        }
+        let code = l.code.trim();
+        let passthrough = code.is_empty() || code.starts_with("#[") || code.starts_with("#![");
+        if !passthrough {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rules R1–R3 (per-file)
+// ---------------------------------------------------------------------------
+
+/// A violation inside one file: (1-based line, rule id, message).
+type FileViolation = (usize, &'static str, String);
+
+const DETERMINISM_BANNED: [&str; 4] =
+    ["Instant::now", "SystemTime::now", "thread_rng", "from_entropy"];
+
+/// True for files under the deterministic chunk-merge contract (R3).
+fn is_determinism_region(relpath: &str) -> bool {
+    let p = relpath.replace('\\', "/");
+    p.contains("rust/src/kmeans/") || p.ends_with("rust/src/util/threadpool.rs")
+}
+
+fn check_file(relpath: &str, src: &str) -> Vec<FileViolation> {
+    let lines = strip_lines(src);
+    let mut out = Vec::new();
+
+    // first line of `#[cfg(test)]`: code after it is exempt from R3
+    let test_start = lines
+        .iter()
+        .position(|l| l.code.contains("#[cfg(test)]"))
+        .unwrap_or(lines.len());
+    let deterministic = is_determinism_region(relpath);
+
+    for (idx, line) in lines.iter().enumerate() {
+        if has_token(&line.code, "unsafe") && !justified(&lines, idx, &["SAFETY:", "# Safety"]) {
+            out.push((
+                idx + 1,
+                "R1-safety",
+                "`unsafe` without a `// SAFETY:` justification".to_string(),
+            ));
+        }
+        if has_ordering_site(&line.code) && !justified(&lines, idx, &["ORDERING:"]) {
+            out.push((
+                idx + 1,
+                "R2-ordering",
+                "atomic `Ordering::` site without a `// ORDERING:` justification".to_string(),
+            ));
+        }
+        if deterministic && idx < test_start {
+            for banned in DETERMINISM_BANNED {
+                if line.code.contains(banned) {
+                    out.push((
+                        idx + 1,
+                        "R3-determinism",
+                        format!("`{banned}` inside a deterministic chunk-merge region"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule R4: verify.sh schema checks <-> bench JSON field names
+// ---------------------------------------------------------------------------
+
+/// Extract candidate JSON field names from a python schema-check snippet:
+/// `.get("x")`, `ident["x"]` / `]["x"]` indexing, and the string tuple of a
+/// `for key in (...)` loop (possibly spanning lines).
+fn extract_fields(py: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut push = |s: &str| {
+        if is_fieldish(s) && !out.iter().any(|x| x == s) {
+            out.push(s.to_string());
+        }
+    };
+
+    // .get("x")
+    let mut start = 0;
+    while let Some(pos) = py[start..].find(".get(\"") {
+        let p = start + pos + ".get(\"".len();
+        if let Some(end) = py[p..].find('"') {
+            push(&py[p..p + end]);
+        }
+        start = p;
+    }
+
+    // ident["x"] or ]["x"] or )["x"]
+    let mut start = 0;
+    while let Some(pos) = py[start..].find("[\"") {
+        let p = start + pos;
+        let prev = py[..p].bytes().rev().find(|b| !b.is_ascii_whitespace());
+        let indexing = matches!(prev, Some(b) if is_ident_byte(b) || b == b']' || b == b')');
+        if indexing {
+            let q = p + 2;
+            if let Some(end) = py[q..].find('"') {
+                push(&py[q..q + end]);
+            }
+        }
+        start = p + 2;
+    }
+
+    // for key in ("a", "b", ...):  — tuple may span lines
+    let mut start = 0;
+    while let Some(pos) = py[start..].find("for key in (") {
+        let mut p = start + pos + "for key in (".len();
+        let bytes = py.as_bytes();
+        let mut depth = 1u32;
+        while p < bytes.len() && depth > 0 {
+            match bytes[p] {
+                b'(' => depth += 1,
+                b')' => depth -= 1,
+                b'"' => {
+                    if let Some(end) = py[p + 1..].find('"') {
+                        push(&py[p + 1..p + 1 + end]);
+                        p += 1 + end;
+                    }
+                }
+                _ => {}
+            }
+            p += 1;
+        }
+        start = p;
+    }
+    out
+}
+
+/// Field-name shape: lowercase start, then lowercase/digits/underscore.
+/// Filters out schema version strings, mode values with hyphens, etc.
+fn is_fieldish(s: &str) -> bool {
+    let mut it = s.chars();
+    matches!(it.next(), Some(c) if c.is_ascii_lowercase())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Check every field asserted in a verify.sh section exists as a `"literal"`
+/// in the bench source that emits the corresponding JSON document.
+fn check_bench_sync(
+    verify_section: &str,
+    bench_name: &str,
+    bench_src: &str,
+) -> Vec<(String, String)> {
+    extract_fields(verify_section)
+        .into_iter()
+        .filter(|f| !bench_src.contains(&format!("\"{f}\"")))
+        .map(|f| {
+            let msg = format!("verify.sh asserts field \"{f}\" but {bench_name} never emits it");
+            (f, msg)
+        })
+        .collect()
+}
+
+/// Marker separating the BENCH_cluster checks from the BENCH_serving checks.
+const SERVING_MARKER: &str = "== BENCH_serving.json well-formed ==";
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+const SCAN_DIRS: [&str; 5] = ["rust/src", "benches", "tests", "examples", "tools/analyze/src"];
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name == "target" || name == ".git" || name == "bench_results" {
+            continue;
+        }
+        if p.is_dir() {
+            collect_rs_files(&p, out);
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+}
+
+struct Report {
+    files: usize,
+    violations: Vec<String>,
+}
+
+fn analyze_root(root: &Path) -> Report {
+    let mut violations = Vec::new();
+    let mut files = 0usize;
+
+    for dir in SCAN_DIRS {
+        let mut rs = Vec::new();
+        collect_rs_files(&root.join(dir), &mut rs);
+        for path in rs {
+            let Ok(src) = fs::read_to_string(&path) else { continue };
+            files += 1;
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            for (line, rule, msg) in check_file(&rel, &src) {
+                violations.push(format!("{rel}:{line}: [{rule}] {msg}"));
+            }
+        }
+    }
+
+    // R4: verify.sh <-> bench field sync
+    let verify = fs::read_to_string(root.join("scripts/verify.sh")).unwrap_or_default();
+    if verify.is_empty() {
+        violations.push("scripts/verify.sh: [R4-bench-sync] missing or unreadable".to_string());
+    } else {
+        let (cluster_sec, serving_sec) = match verify.find(SERVING_MARKER) {
+            Some(p) => verify.split_at(p),
+            None => (verify.as_str(), ""),
+        };
+        let pairs = [
+            (cluster_sec, "benches/perf_cluster.rs"),
+            (serving_sec, "benches/perf_hot_paths.rs"),
+        ];
+        for (section, bench) in pairs {
+            let bench_src = fs::read_to_string(root.join(bench)).unwrap_or_default();
+            for (_, msg) in check_bench_sync(section, bench, &bench_src) {
+                violations.push(format!("scripts/verify.sh: [R4-bench-sync] {msg}"));
+            }
+        }
+    }
+
+    Report { files, violations }
+}
+
+fn main() -> ExitCode {
+    let mut root = env::current_dir().expect("cwd");
+    let mut args = env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let v = args.next().expect("--root needs a path");
+                root = PathBuf::from(v);
+            }
+            other => {
+                eprintln!("analyze: unknown argument `{other}`");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let report = analyze_root(&root);
+    if report.violations.is_empty() {
+        println!(
+            "analyze: OK ({} files clean: SAFETY/ORDERING/determinism/bench-sync)",
+            report.files
+        );
+        ExitCode::SUCCESS
+    } else {
+        for v in &report.violations {
+            eprintln!("{v}");
+        }
+        eprintln!(
+            "analyze: {} violation(s) in {} files scanned",
+            report.violations.len(),
+            report.files
+        );
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-tests: each rule must catch a seeded violation and pass a clean twin
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_strips_comments_and_strings() {
+        let src = "let a = 1; // trailing note\nlet s = \"unsafe Ordering::Relaxed\";\n";
+        let lines = strip_lines(src);
+        assert!(lines[0].code.contains("let a = 1;"));
+        assert!(!lines[0].code.contains("trailing"));
+        assert!(lines[0].comment.contains("trailing note"));
+        assert!(!lines[1].code.contains("unsafe"));
+        assert!(!lines[1].code.contains("Ordering"));
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_nesting() {
+        let src = "let r = r#\"unsafe \" quote\"#; /* outer /* unsafe */ still */ let b = 2;\n";
+        let lines = strip_lines(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].code.contains("let b = 2;"));
+        assert!(lines[0].comment.contains("still"));
+    }
+
+    #[test]
+    fn lexer_keeps_lifetimes_but_blanks_char_literals() {
+        let src = "fn f<'a>(x: &'a u8) -> char { '\"' }\n";
+        let lines = strip_lines(src);
+        assert!(lines[0].code.contains("<'a>"));
+        assert!(!lines[0].code.contains('"'));
+    }
+
+    #[test]
+    fn r1_flags_uncommented_unsafe_block() {
+        let bad = "fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n";
+        let v = check_file("rust/src/x.rs", bad);
+        assert!(v.iter().any(|(l, r, _)| *l == 2 && *r == "R1-safety"), "{v:?}");
+    }
+
+    #[test]
+    fn r1_accepts_safety_comment_above_and_through_attributes() {
+        let good = "fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid\n    \
+                    #[allow(unused)]\n    unsafe { *p = 1 };\n}\n";
+        assert!(check_file("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r1_accepts_safety_doc_section_on_unsafe_fn() {
+        let good = "/// Does a thing.\n///\n/// # Safety\n/// `p` must be valid.\n\
+                    pub unsafe fn f(p: *mut u8) {}\n";
+        assert!(check_file("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r1_ignores_unsafe_in_strings_and_attr_names() {
+        let good = "#![deny(unsafe_op_in_unsafe_fn)]\nlet s = \"unsafe\";\n";
+        assert!(check_file("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r2_flags_unjustified_ordering() {
+        let bad = "fn f(a: &AtomicU64) {\n    a.load(Ordering::Acquire);\n}\n";
+        let v = check_file("rust/src/x.rs", bad);
+        assert!(v.iter().any(|(l, r, _)| *l == 2 && *r == "R2-ordering"), "{v:?}");
+    }
+
+    #[test]
+    fn r2_accepts_trailing_and_above_justifications() {
+        let good = "fn f(a: &AtomicU64) {\n    a.load(Ordering::Acquire); // ORDERING: pairs \
+                    with the Release store in install()\n    // ORDERING: counter, read after \
+                    join\n    a.load(Ordering::Relaxed);\n}\n";
+        assert!(check_file("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_wall_clock_in_determinism_region_only() {
+        let bad = "fn f() { let t = Instant::now(); }\n";
+        let v = check_file("rust/src/kmeans/lloyd.rs", bad);
+        assert!(v.iter().any(|(_, r, _)| *r == "R3-determinism"), "{v:?}");
+        // same source outside the region is fine
+        assert!(check_file("rust/src/serving/engine.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn r3_exempts_test_code() {
+        let good = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let t = \
+                    Instant::now(); }\n}\n";
+        assert!(check_file("rust/src/util/threadpool.rs", good).is_empty());
+    }
+
+    #[test]
+    fn r4_extracts_fields_and_flags_drift() {
+        let verify = "assert doc.get(\"schema\") == \"cce.v1\"\nfor r in results:\n    \
+                      for key in (\"mean_ns\",\n                \"p50_ns\"):\n        \
+                      assert r[key] >= 0\nassert r[\"name\"] and tb[0][\"speedup\"] >= 10\n";
+        let fields = extract_fields(verify);
+        for f in ["schema", "mean_ns", "p50_ns", "name", "speedup"] {
+            assert!(fields.iter().any(|x| x == f), "missing {f} in {fields:?}");
+        }
+        // schema version string and non-field literals are filtered out
+        assert!(!fields.iter().any(|x| x == "cce.v1"));
+
+        let bench = "m.insert(\"schema\", ..); m.insert(\"mean_ns\", ..); \
+                     m.insert(\"p50_ns\", ..); m.insert(\"name\", ..);";
+        let drift = check_bench_sync(verify, "bench.rs", bench);
+        assert_eq!(drift.len(), 1, "{drift:?}");
+        assert_eq!(drift[0].0, "speedup");
+    }
+
+    /// The repo itself must pass every rule clean (acceptance criterion).
+    #[test]
+    fn real_repo_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+        if !root.join("scripts/verify.sh").exists() {
+            return; // detached build: nothing to scan
+        }
+        let report = analyze_root(&root);
+        assert!(
+            report.violations.is_empty(),
+            "repo has analyze violations:\n{}",
+            report.violations.join("\n")
+        );
+        assert!(report.files >= 20, "expected to scan the repo, saw {}", report.files);
+    }
+
+    /// Seeded-violation end-to-end check: a tree with an uncommented unsafe
+    /// block, an unjustified Ordering, and a bench/schema drift must fail.
+    #[test]
+    fn seeded_violations_are_caught() {
+        let dir = std::env::temp_dir().join(format!("analyze_seed_{}", std::process::id()));
+        let src_dir = dir.join("rust/src");
+        let scripts = dir.join("scripts");
+        let benches = dir.join("benches");
+        for d in [&src_dir, &scripts, &benches] {
+            fs::create_dir_all(d).unwrap();
+        }
+        fs::write(
+            src_dir.join("bad.rs"),
+            "fn f(p: *mut u8, a: &AtomicU64) {\n    unsafe { *p = 1 };\n    \
+             a.load(Ordering::Relaxed);\n}\n",
+        )
+        .unwrap();
+        fs::write(
+            scripts.join("verify.sh"),
+            "assert doc.get(\"phantom_field\") == 1\n",
+        )
+        .unwrap();
+        fs::write(benches.join("perf_cluster.rs"), "// emits nothing\n").unwrap();
+        fs::write(benches.join("perf_hot_paths.rs"), "// emits nothing\n").unwrap();
+
+        let report = analyze_root(&dir);
+        fs::remove_dir_all(&dir).ok();
+
+        let has = |rule: &str| report.violations.iter().any(|v| v.contains(rule));
+        assert!(has("R1-safety"), "{:?}", report.violations);
+        assert!(has("R2-ordering"), "{:?}", report.violations);
+        assert!(has("R4-bench-sync"), "{:?}", report.violations);
+    }
+}
