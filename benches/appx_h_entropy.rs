@@ -38,6 +38,7 @@ fn setup(vocab: usize, k: usize, c: usize, seed: u64) -> (Vec<f32>, FieldDesc, I
         offset: 0,
         size,
         init: InitSpec::Zeros,
+        group: "pool".into(),
     };
     (state, field, ix)
 }

@@ -64,6 +64,7 @@ fn setup_event(vocabs: &[usize], cap: usize) -> (Vec<f32>, FieldDesc, Indexer) {
         offset: 0,
         size,
         init: InitSpec::Zeros,
+        group: "pool".into(),
     };
     (state, field, indexer)
 }
@@ -262,12 +263,24 @@ fn main() -> anyhow::Result<()> {
     // training steps (`fill_rowwise` over a fixed synthetic batch — the
     // consumer-side host work) run between snapshot and apply. Rows are
     // tagged `"group": "sync_vs_overlap"` and carry stall_ns /
-    // event_wall_ns / stale_steps; scripts/verify.sh fails the JSON if
-    // those fields go missing.
+    // event_wall_ns / stale_steps plus the per-group-buffer wire cost
+    // (event_bytes_downloaded / event_bytes_uploaded / pool_bytes /
+    // full_state_bytes); scripts/verify.sh fails the JSON if those
+    // fields go missing and gates the event bytes against pool_bytes.
     {
         let worker = threadpool::BackgroundWorker::new("bench-cluster");
         let ov_cap = if smoke { 256 } else { 1024 };
-        let (state0, field, ix0) = setup_event(&kaggle, ov_cap);
+        let (mut state0, field, ix0) = setup_event(&kaggle, ov_cap);
+        // a dense-layer tail after the pool, like a real DLRM state: the
+        // event paths below must never touch (or ship) this share
+        let dense_tail = 4096usize;
+        state0.extend(std::iter::repeat(0.25f32).take(dense_tail));
+        // per-group-buffer wire accounting, mirroring DlrmSession's
+        // counter rules: sync event = 1 pool download + 1 pool upload;
+        // overlapped event = 2 pool downloads (snapshot + apply's pull)
+        // + 1 pool upload. The dense tail never crosses.
+        let pool_bytes = field.size * 4;
+        let full_state_bytes = state0.len() * 4;
         let plan = ix0.plan.clone();
         let batch = 256usize;
         let f_n = plan.n_features();
@@ -350,6 +363,10 @@ fn main() -> anyhow::Result<()> {
                 ("stall_ns", Json::from(s_sync.mean_ns)),
                 ("event_wall_ns", Json::from(s_sync.mean_ns)),
                 ("stale_steps", Json::from(0.0)),
+                ("event_bytes_downloaded", Json::from(pool_bytes)),
+                ("event_bytes_uploaded", Json::from(pool_bytes)),
+                ("pool_bytes", Json::from(pool_bytes)),
+                ("full_state_bytes", Json::from(full_state_bytes)),
             ],
         ));
         results.push(stat_json(
@@ -360,6 +377,10 @@ fn main() -> anyhow::Result<()> {
                 ("stall_ns", Json::from(s_ov.mean_ns)),
                 ("event_wall_ns", Json::from(mean(&ov_wall))),
                 ("stale_steps", Json::from(mean(&ov_stale))),
+                ("event_bytes_downloaded", Json::from(2 * pool_bytes)),
+                ("event_bytes_uploaded", Json::from(pool_bytes)),
+                ("pool_bytes", Json::from(pool_bytes)),
+                ("full_state_bytes", Json::from(full_state_bytes)),
             ],
         ));
     }

@@ -32,14 +32,20 @@ from jax._src.lib import xla_client as xc
 
 from . import model, specs
 from .kernels.kmeans import kmeans_step
-from .layout import METRIC_NAMES
+from .layout import METRIC_NAMES, SCHEMA_VERSION
 
 
-def to_hlo_text(lowered) -> str:
-    """StableHLO → XlaComputation → HLO text (single, non-tuple root)."""
+def to_hlo_text(lowered, return_tuple: bool = False) -> str:
+    """StableHLO → XlaComputation → HLO text.
+
+    ``return_tuple=True`` keeps a tuple root for multi-result functions
+    (``train_step`` returns one buffer per state group; PJRT untuples the
+    root into independent re-feedable buffers — docs/CALLING_CONVENTION.md).
+    Single-result functions lower with a plain array root.
+    """
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=False
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -61,7 +67,10 @@ def _input_desc(name: str, dtype: str, shape: tuple[int, ...]) -> dict:
 def lower_artifact(spec: specs.ArtifactSpec, out_dir: str, dump_stats: bool) -> dict:
     """Lower train/predict/readout for one spec; return its manifest."""
     lo = model.build_layout(spec)
-    s = jax.ShapeDtypeStruct((lo.size,), jnp.float32)
+    bufs = lo.buffers()  # [(group, offset, size)] in pool/dense/metrics order
+    group_s = {
+        g: jax.ShapeDtypeStruct((size,), jnp.float32) for g, _, size in bufs
+    }
     dense_t = jax.ShapeDtypeStruct((spec.batch, spec.n_dense), jnp.float32)
     dense_e = jax.ShapeDtypeStruct((spec.eval_batch, spec.n_dense), jnp.float32)
     emb_shape_t, emb_dtype = model.emb_input_shape(spec, spec.batch)
@@ -72,12 +81,22 @@ def lower_artifact(spec: specs.ArtifactSpec, out_dir: str, dump_stats: bool) -> 
 
     files = {}
     stats = {}
-    for kind, fn, args in [
-        ("train", model.make_train_step(spec, lo), (s, dense_t, emb_t, labels_t)),
-        ("predict", model.make_predict(spec, lo), (s, dense_e, emb_e)),
-        ("readout", model.make_readout(lo), (s,)),
+    for kind, fn, args, tuple_root in [
+        (
+            "train",
+            model.make_train_step(spec, lo),
+            (group_s["pool"], group_s["dense"], group_s["metrics"], dense_t, emb_t, labels_t),
+            True,
+        ),
+        (
+            "predict",
+            model.make_predict(spec, lo),
+            (group_s["pool"], group_s["dense"], dense_e, emb_e),
+            False,
+        ),
+        ("readout", model.make_readout(lo), (group_s["metrics"],), False),
     ]:
-        text = to_hlo_text(jax.jit(fn).lower(*args))
+        text = to_hlo_text(jax.jit(fn).lower(*args), return_tuple=tuple_root)
         fname = f"{spec.name}.{kind}.hlo.txt"
         with open(os.path.join(out_dir, fname), "w") as f:
             f.write(text)
@@ -85,8 +104,11 @@ def lower_artifact(spec: specs.ArtifactSpec, out_dir: str, dump_stats: bool) -> 
         if dump_stats:
             stats[kind] = hlo_stats(text)
 
+    emb_mdt = emb_dtype.replace("int32", "i32").replace("float32", "f32")
+    state_inputs = {g: _input_desc(f"state.{g}", "f32", (size,)) for g, _, size in bufs}
     manifest = {
         "name": spec.name,
+        "schema_version": SCHEMA_VERSION,
         "family": "dlrm",
         "kind": spec.kind,
         "dataset": spec.dataset,
@@ -113,24 +135,33 @@ def lower_artifact(spec: specs.ArtifactSpec, out_dir: str, dump_stats: bool) -> 
         "vocabs": spec.vocabs,
         "state_size": lo.size,
         "layout": lo.to_manifest(),
+        "buffers": lo.buffers_manifest(),
         "metrics": {"offset": lo["metrics"].offset, "names": list(METRIC_NAMES)},
         "executables": files,
         "inputs": {
             "train": [
-                _input_desc("state", "f32", (lo.size,)),
+                state_inputs["pool"],
+                state_inputs["dense"],
+                state_inputs["metrics"],
                 _input_desc("dense", "f32", (spec.batch, spec.n_dense)),
-                _input_desc("emb", emb_dtype.replace("int32", "i32").replace("float32", "f32"), emb_shape_t),
+                _input_desc("emb", emb_mdt, emb_shape_t),
                 _input_desc("labels", "f32", (spec.batch,)),
             ],
             "predict": [
-                _input_desc("state", "f32", (lo.size,)),
+                state_inputs["pool"],
+                state_inputs["dense"],
                 _input_desc("dense", "f32", (spec.eval_batch, spec.n_dense)),
-                _input_desc("emb", emb_dtype.replace("int32", "i32").replace("float32", "f32"), emb_shape_e),
+                _input_desc("emb", emb_mdt, emb_shape_e),
             ],
-            "readout": [_input_desc("state", "f32", (lo.size,))],
+            "readout": [state_inputs["metrics"]],
         },
         "outputs": {
-            "train": {"dtype": "f32", "shape": [lo.size]},
+            # train has a tuple root: one result per state buffer, in
+            # buffer order, re-fed by the runtime step-to-step
+            "train": {
+                "dtype": "f32",
+                "tuple_shapes": [[size] for _, _, size in bufs],
+            },
             "predict": {"dtype": "f32", "shape": [spec.eval_batch]},
             "readout": {"dtype": "f32", "shape": [len(METRIC_NAMES)]},
         },

@@ -1,15 +1,27 @@
-"""Packed-state parameter layout.
+"""Per-buffer parameter layout.
 
-All model parameters live in ONE flat ``f32[S]`` state vector so every
-executable has a single array output and the Rust coordinator can chain
-device buffers step-to-step (see DESIGN.md §7 — PJRT tuple outputs cannot
-be re-fed). The layout (field order, offsets, init specs) is defined here
-and exported verbatim into each artifact's JSON manifest; the Rust side
-(`rust/src/runtime/manifest.rs`, `rust/src/tables/layout.rs`) mirrors it.
+Model parameters live in THREE flat ``f32`` device buffers — one per
+field group — so state that never changes together never crosses the
+wire together (docs/CALLING_CONVENTION.md):
 
-The final ``metrics`` field holds the in-graph metric accumulators
-(loss-sum, example count, step count, last loss) that the tiny ``readout``
-executable extracts.
+  * ``pool``    — the embedding-side fields (``pool`` / ``pool_flat`` /
+                  the DHE MLP stacks); what clustering events rewrite.
+  * ``dense``   — the bottom/top MLP weights; untouched by events.
+  * ``metrics`` — the in-graph metric accumulators (loss-sum, example
+                  count, step count, last loss).
+
+Each executable takes one input parameter per group (``state.pool``,
+``state.dense``, ``state.metrics``) and ``train_step`` returns a tuple
+root with one result per group, which the Rust coordinator re-feeds
+buffer-for-buffer step-to-step. The *flat* view (fields at contiguous
+absolute offsets, groups in pool → dense → metrics order) is still the
+host-side interchange format for init vectors and checkpoints; a group
+is just a contiguous range of it.
+
+The layout (field order, group tags, offsets, init specs) is defined
+here and exported verbatim into each artifact's JSON manifest
+(``schema_version`` 2); the Rust side (`rust/src/runtime/manifest.rs`,
+`rust/src/tables/layout.rs`) mirrors it.
 """
 
 from __future__ import annotations
@@ -22,6 +34,15 @@ import jax.numpy as jnp
 
 METRIC_NAMES = ("loss_sum", "examples", "steps", "last_loss")
 
+#: canonical group order — groups must be added in this order so each
+#: one is a contiguous range of the flat state vector
+BUFFER_GROUPS = ("pool", "dense", "metrics")
+
+#: manifest schema: 2 = per-group device buffers (top-level "buffers"
+#: list + per-field "group" tags). Bump when the calling convention
+#: changes shape again; rust/src/runtime/manifest.rs rejects mismatches.
+SCHEMA_VERSION = 2
+
 
 @dataclasses.dataclass(frozen=True)
 class Field:
@@ -33,6 +54,8 @@ class Field:
     #: init spec, applied by the Rust coordinator: ("zeros",), ("normal",
     #: scale) or ("uniform", limit) — limit as in Glorot/LeCun fan-based init.
     init: tuple
+    #: which device buffer the field lives in (one of BUFFER_GROUPS)
+    group: str
 
     @property
     def size(self) -> int:
@@ -40,18 +63,29 @@ class Field:
 
 
 class Layout:
-    """Ordered collection of fields with contiguous offsets."""
+    """Ordered collection of fields with contiguous offsets, partitioned
+    into the BUFFER_GROUPS device buffers."""
 
     def __init__(self) -> None:
         self.fields: list[Field] = []
         self._by_name: dict[str, Field] = {}
         self.size = 0
 
-    def add(self, name: str, shape: Iterable[int], init: tuple) -> Field:
+    def add(self, name: str, shape: Iterable[int], init: tuple, group: str) -> Field:
         shape = tuple(int(s) for s in shape)
         if name in self._by_name:
             raise ValueError(f"duplicate field {name!r}")
-        f = Field(name, shape, self.size, init)
+        if group not in BUFFER_GROUPS:
+            raise ValueError(f"field {name!r}: unknown group {group!r}")
+        if self.fields:
+            prev = BUFFER_GROUPS.index(self.fields[-1].group)
+            if BUFFER_GROUPS.index(group) < prev:
+                raise ValueError(
+                    f"field {name!r}: group {group!r} added after "
+                    f"{self.fields[-1].group!r} — groups must be contiguous "
+                    f"in {BUFFER_GROUPS} order"
+                )
+        f = Field(name, shape, self.size, init, group)
         self.fields.append(f)
         self._by_name[name] = f
         self.size += f.size
@@ -63,6 +97,24 @@ class Layout:
     def __contains__(self, name: str) -> bool:
         return name in self._by_name
 
+    def group_fields(self, group: str) -> list[Field]:
+        return [f for f in self.fields if f.group == group]
+
+    def buffers(self) -> list[tuple[str, int, int]]:
+        """(group, offset, size) per device buffer, in BUFFER_GROUPS order.
+
+        Every group must be non-empty: the calling convention feeds one
+        parameter per group to every executable, so an artifact without
+        (say) dense fields would need a different lowering.
+        """
+        out = []
+        for g in BUFFER_GROUPS:
+            fs = self.group_fields(g)
+            if not fs:
+                raise ValueError(f"layout has no {g!r} fields")
+            out.append((g, fs[0].offset, sum(f.size for f in fs)))
+        return out
+
     def unpack(self, state: jnp.ndarray) -> dict[str, jnp.ndarray]:
         """Slice the flat state into named tensors (trace-time, zero-copy)."""
         out = {}
@@ -70,15 +122,41 @@ class Layout:
             out[f.name] = jnp.reshape(state[f.offset : f.offset + f.size], f.shape)
         return out
 
-    def pack(self, tensors: dict[str, jnp.ndarray]) -> jnp.ndarray:
-        """Concatenate named tensors back into the flat state vector."""
+    def unpack_groups(self, **groups: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        """Slice per-group flat buffers into named tensors.
+
+        Only the provided groups are unpacked (``predict`` never feeds
+        ``metrics``). Field offsets are absolute (flat-state) positions;
+        inside its group buffer a field starts at ``offset - group_offset``.
+        """
+        unknown = set(groups) - set(BUFFER_GROUPS)
+        if unknown:
+            raise ValueError(f"unknown groups {sorted(unknown)}")
+        out = {}
+        for g, g_off, g_size in self.buffers():
+            if g not in groups:
+                continue
+            buf = groups[g]
+            if buf.shape != (g_size,):
+                raise ValueError(f"group {g}: expected ({g_size},), got {buf.shape}")
+            for f in self.group_fields(g):
+                rel = f.offset - g_off
+                out[f.name] = jnp.reshape(buf[rel : rel + f.size], f.shape)
+        return out
+
+    def pack_group(self, group: str, tensors: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Concatenate the group's tensors back into its flat buffer."""
         parts = []
-        for f in self.fields:
+        for f in self.group_fields(group):
             t = tensors[f.name]
             if tuple(t.shape) != f.shape:
                 raise ValueError(f"field {f.name}: expected {f.shape}, got {t.shape}")
             parts.append(jnp.reshape(t, (f.size,)))
         return jnp.concatenate(parts)
+
+    def pack(self, tensors: dict[str, jnp.ndarray]) -> jnp.ndarray:
+        """Concatenate named tensors back into the flat state vector."""
+        return jnp.concatenate([self.pack_group(g, tensors) for g in BUFFER_GROUPS])
 
     def to_manifest(self) -> list[dict]:
         return [
@@ -88,8 +166,14 @@ class Layout:
                 "offset": f.offset,
                 "size": f.size,
                 "init": list(f.init),
+                "group": f.group,
             }
             for f in self.fields
+        ]
+
+    def buffers_manifest(self) -> list[dict]:
+        return [
+            {"name": g, "offset": off, "size": size} for g, off, size in self.buffers()
         ]
 
 
@@ -102,5 +186,5 @@ def mlp_fields(layout: Layout, prefix: str, sizes: list[int]) -> None:
     for i in range(len(sizes) - 1):
         fan_in, fan_out = sizes[i], sizes[i + 1]
         limit = math.sqrt(6.0 / (fan_in + fan_out))
-        layout.add(f"{prefix}_w{i}", (fan_in, fan_out), ("uniform", limit))
-        layout.add(f"{prefix}_b{i}", (fan_out,), ("zeros",))
+        layout.add(f"{prefix}_w{i}", (fan_in, fan_out), ("uniform", limit), "dense")
+        layout.add(f"{prefix}_b{i}", (fan_out,), ("zeros",), "dense")

@@ -5,13 +5,18 @@ features, one embedding per categorical feature (here: the generic
 compressed-embedding layer driven by Rust-computed indices), the
 pairwise-dot interaction, and a top MLP producing one logit.
 
-Everything is expressed over the packed ``f32[S]`` state vector from
-``layout.py`` so each executable has a single array output (DESIGN.md §7):
+Everything is expressed over the per-group flat buffers from
+``layout.py`` (``pool`` / ``dense`` / ``metrics``) so each executable
+takes one parameter per group and ``train_step`` returns a tuple root
+re-fed buffer-for-buffer by the coordinator
+(docs/CALLING_CONVENTION.md):
 
-  * ``train_step(state, dense, idx, labels) → state'`` — fwd + bwd + SGD +
-    in-graph metric accumulation, fused into one HLO module.
-  * ``predict(state, dense, idx) → f32[B]`` — probabilities.
-  * ``readout(state) → f32[4]`` — the metric slots.
+  * ``train_step(pool, dense_p, metrics, dense, idx, labels) →
+    (pool', dense_p', metrics')`` — fwd + bwd + SGD + in-graph metric
+    accumulation, fused into one HLO module.
+  * ``predict(pool, dense_p, dense, idx) → f32[B]`` — probabilities
+    (metrics never feeds the forward pass, so it is not an input).
+  * ``readout(metrics) → f32[4]`` — the metric slots.
 
 Index semantics per method kind:
   * rowwise     — ``idx i32[B, F, T, c]`` global row ids into pool[R, d/c]
@@ -42,15 +47,15 @@ def build_layout(spec: ArtifactSpec) -> Layout:
     if spec.kind == "rowwise":
         # N(0, 1/d) rows, the DLRM embedding init convention scaled to the
         # subtable width so the T-term sum keeps unit-ish variance.
-        lo.add("pool", (spec.pool_rows, spec.dc), ("normal", 1.0 / spec.dim))
+        lo.add("pool", (spec.pool_rows, spec.dc), ("normal", 1.0 / spec.dim), "pool")
     elif spec.kind == "elementwise":
-        lo.add("pool_flat", (spec.pool_rows,), ("normal", 1.0 / spec.dim))
+        lo.add("pool_flat", (spec.pool_rows,), ("normal", 1.0 / spec.dim), "pool")
     elif spec.kind == "dhe":
         h, d, f = spec.dhe_hidden, spec.dim, spec.n_features
         for i, (fi, fo) in enumerate([(spec.n_hash, h), (h, h), (h, d)]):
             limit = (6.0 / (fi + fo)) ** 0.5
-            lo.add(f"dhe_w{i}", (f, fi, fo), ("uniform", limit))
-            lo.add(f"dhe_b{i}", (f, fo), ("zeros",))
+            lo.add(f"dhe_w{i}", (f, fi, fo), ("uniform", limit), "pool")
+            lo.add(f"dhe_b{i}", (f, fo), ("zeros",), "pool")
     else:
         raise ValueError(spec.kind)
 
@@ -58,7 +63,7 @@ def build_layout(spec: ArtifactSpec) -> Layout:
     n = spec.n_features + 1
     n_inter = n * (n - 1) // 2
     mlp_fields(lo, "top", [spec.dim + n_inter, *spec.top_mlp, 1])
-    lo.add("metrics", (len(METRIC_NAMES),), ("zeros",))
+    lo.add("metrics", (len(METRIC_NAMES),), ("zeros",), "metrics")
     return lo
 
 
@@ -124,10 +129,11 @@ def bce_from_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
 
 
 def make_train_step(spec: ArtifactSpec, layout: Layout):
-    """``(state, dense, emb_in, labels) → state'`` with fused SGD + metrics."""
+    """``(pool, dense_p, metrics, dense, emb_in, labels) →
+    (pool', dense_p', metrics')`` with fused SGD + metrics."""
 
-    def train_step(state, dense, emb_in, labels):
-        tensors = layout.unpack(state)
+    def train_step(pool, dense_p, metrics_buf, dense, emb_in, labels):
+        tensors = layout.unpack_groups(pool=pool, dense=dense_p, metrics=metrics_buf)
         metrics = tensors.pop("metrics")
 
         def loss_fn(params):
@@ -145,13 +151,17 @@ def make_train_step(spec: ArtifactSpec, layout: Layout):
                 loss,  # last_loss
             ]
         )
-        return layout.pack(new)
+        return (
+            layout.pack_group("pool", new),
+            layout.pack_group("dense", new),
+            layout.pack_group("metrics", new),
+        )
 
     return train_step
 
 
 def make_predict(spec: ArtifactSpec, layout: Layout):
-    """``(state, dense, emb_in) → f32[B]`` probabilities.
+    """``(pool, dense_p, dense, emb_in) → f32[B]`` probabilities.
 
     Perf note (EXPERIMENTS.md §Perf #7): predict always lowers the
     reference (pure-jnp) graph. Interpret-mode Pallas re-stages the whole
@@ -165,20 +175,26 @@ def make_predict(spec: ArtifactSpec, layout: Layout):
 
     pspec = dataclasses.replace(spec, impl="reference")
 
-    def predict(state, dense, emb_in):
-        tensors = layout.unpack(state)
-        tensors.pop("metrics")
+    def predict(pool, dense_p, dense, emb_in):
+        tensors = layout.unpack_groups(pool=pool, dense=dense_p)
         return jax.nn.sigmoid(forward_logits(pspec, tensors, dense, emb_in))
 
     return predict
 
 
 def make_readout(layout: Layout):
-    """``state → f32[len(METRIC_NAMES)]`` (metric slots)."""
+    """``metrics → f32[len(METRIC_NAMES)]`` (metric slots).
+
+    The metrics group IS the metric slots, so this is an identity kept
+    only so older tooling that walks `executables` still finds a readout
+    HLO; the runtime reads the metrics buffer directly instead of
+    executing it. The ×1.0 keeps the lowering from collapsing to a bare
+    parameter root (bit-exact for every f32 the accumulators can hold).
+    """
     m = layout["metrics"]
 
-    def readout(state):
-        return state[m.offset : m.offset + m.size]
+    def readout(metrics):
+        return jnp.reshape(metrics, (m.size,)) * jnp.float32(1.0)
 
     return readout
 

@@ -53,11 +53,34 @@ def test_manifest_metrics_location(built):
 def test_manifest_input_shapes(built):
     _, spec, manifest = built
     tr = {i["name"]: i for i in manifest["inputs"]["train"]}
-    assert tr["state"]["shape"] == [manifest["state_size"]]
+    bufs = {b["name"]: b for b in manifest["buffers"]}
+    for g in ("pool", "dense", "metrics"):
+        assert tr[f"state.{g}"]["shape"] == [bufs[g]["size"]]
     assert tr["dense"]["shape"] == [spec.batch, spec.n_dense]
     assert tr["emb"]["shape"] == [spec.batch, spec.n_features, spec.t, spec.c]
     assert tr["emb"]["dtype"] == "i32"
-    assert manifest["outputs"]["train"]["shape"] == [manifest["state_size"]]
+    # train's tuple root: one result per state buffer, in buffer order
+    shapes = manifest["outputs"]["train"]["tuple_shapes"]
+    assert shapes == [[b["size"]] for b in manifest["buffers"]]
+    assert sum(s[0] for s in shapes) == manifest["state_size"]
+
+
+def test_manifest_buffers_tile_state(built):
+    _, _, manifest = built
+    assert manifest["schema_version"] == 2
+    bufs = manifest["buffers"]
+    assert [b["name"] for b in bufs] == ["pool", "dense", "metrics"]
+    off = 0
+    for b in bufs:
+        assert b["offset"] == off
+        off += b["size"]
+    assert off == manifest["state_size"]
+    # every layout field carries a group tag and fits inside that buffer
+    by_name = {b["name"]: b for b in bufs}
+    for f in manifest["layout"]:
+        b = by_name[f["group"]]
+        assert b["offset"] <= f["offset"]
+        assert f["offset"] + f["size"] <= b["offset"] + b["size"], f["name"]
 
 
 def test_hlo_stats_finds_ops():
@@ -66,23 +89,33 @@ def test_hlo_stats_finds_ops():
         dim=8, bot_mlp=(8,), top_mlp=(8,), impl="reference",
     )
     lo = model.build_layout(spec)
-    s = jax.ShapeDtypeStruct((lo.size,), jnp.float32)
+    gs = {g: jax.ShapeDtypeStruct((size,), jnp.float32) for g, _, size in lo.buffers()}
     d = jax.ShapeDtypeStruct((32, 13), jnp.float32)
     e = jax.ShapeDtypeStruct((32, 4, 1, 1), jnp.int32)
     l = jax.ShapeDtypeStruct((32,), jnp.float32)
-    text = aot.to_hlo_text(jax.jit(model.make_train_step(spec, lo)).lower(s, d, e, l))
+    lowered = jax.jit(model.make_train_step(spec, lo)).lower(
+        gs["pool"], gs["dense"], gs["metrics"], d, e, l
+    )
+    text = aot.to_hlo_text(lowered, return_tuple=True)
     stats = aot.hlo_stats(text)
     assert "dot" in stats and stats["dot"] >= 4  # fwd+bwd MLP matmuls
     assert any(k.startswith("scatter") for k in stats), stats  # embedding grad
 
 
-def test_single_array_root(built):
-    """The packed-state convention requires a non-tuple root (DESIGN.md §7)."""
+def test_train_root_is_tuple_of_buffers(built):
+    """Per-buffer convention: train's entry root is a tuple with one f32
+    array per state buffer; predict keeps a plain array root."""
     out, _, manifest = built
     text = open(os.path.join(out, manifest["executables"]["train"])).read()
-    root_lines = [ln for ln in text.splitlines() if "ROOT" in ln]
-    entry_root = root_lines[-1]
-    assert "f32[" in entry_root and "(f32" not in entry_root.split("=")[1].split(" ")[1], entry_root
+    entry_root = [ln for ln in text.splitlines() if "ROOT" in ln][-1]
+    rhs = entry_root.split("=")[1].strip()
+    assert rhs.startswith("(f32["), entry_root
+    shape = rhs[: rhs.index(")")]
+    assert shape.count("f32[") == len(manifest["buffers"]), entry_root
+    ptext = open(os.path.join(out, manifest["executables"]["predict"])).read()
+    proot = [ln for ln in ptext.splitlines() if "ROOT" in ln][-1]
+    pshape = proot.split("=")[1].strip().split(" ")[0]
+    assert pshape.startswith("f32["), proot
 
 
 def test_index_json_merging(tmp_path):

@@ -1,0 +1,73 @@
+"""Layout ↔ runtime manifest sync: what `Layout.to_manifest` /
+`Layout.buffers_manifest` emit must stay parseable by
+`rust/src/runtime/manifest.rs` — same JSON keys, same schema version,
+same structural invariants the Rust cross-validation enforces. A key
+rename on either side fails here before it fails at artifact load."""
+
+import os
+import re
+
+import pytest
+
+from compile import model, specs
+from compile.layout import BUFFER_GROUPS, SCHEMA_VERSION
+
+RUST_MANIFEST = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "src", "runtime", "manifest.rs"
+)
+
+
+@pytest.fixture(scope="module")
+def rust_src():
+    with open(RUST_MANIFEST) as f:
+        return f.read()
+
+
+def test_schema_version_matches_rust(rust_src):
+    """The version python stamps is the version rust requires."""
+    m = re.search(r"SCHEMA_VERSION:\s*u64\s*=\s*(\d+)", rust_src)
+    assert m, "manifest.rs must declare SCHEMA_VERSION"
+    assert int(m.group(1)) == SCHEMA_VERSION
+
+
+def test_rust_parses_every_emitted_key(rust_src):
+    """Every JSON key aot.py writes per field/buffer must be read by
+    the Rust parser (as a string literal in manifest.rs)."""
+    field_keys = ["name", "shape", "offset", "size", "init", "group"]
+    buffer_keys = ["name", "offset", "size"]
+    top_keys = ["schema_version", "buffers", "layout", "state_size", "tuple_shapes"]
+    for key in set(field_keys + buffer_keys + top_keys):
+        assert f'"{key}"' in rust_src, f"manifest.rs never reads {key!r}"
+
+
+@pytest.mark.parametrize("spec", specs.base_specs(), ids=lambda s: s.name)
+def test_buffer_manifest_invariants(spec):
+    """The invariants rust's Manifest::parse cross-validates, checked at
+    emit time for every base artifact (all MethodKinds)."""
+    lo = model.build_layout(spec)
+    bufs = lo.buffers_manifest()
+    fields = lo.to_manifest()
+
+    assert [b["name"] for b in bufs] == list(BUFFER_GROUPS)
+    off = 0
+    for b in bufs:
+        assert b["offset"] == off, f"{spec.name}: buffer {b['name']} not contiguous"
+        assert b["size"] > 0
+        off += b["size"]
+    assert off == lo.size, f"{spec.name}: buffers cover {off} of {lo.size}"
+
+    by_name = {b["name"]: b for b in bufs}
+    foff = 0
+    for f in fields:
+        assert f["offset"] == foff, f"{spec.name}: field {f['name']} not contiguous"
+        foff += f["size"]
+        b = by_name[f["group"]]
+        assert b["offset"] <= f["offset"]
+        assert f["offset"] + f["size"] <= b["offset"] + b["size"], (
+            f"{spec.name}: field {f['name']} leaks out of buffer {f['group']}"
+        )
+    # the metrics buffer is exactly the metrics field (the runtime reads
+    # it wholesale instead of executing readout)
+    mf = [f for f in fields if f["group"] == "metrics"]
+    assert len(mf) == 1 and mf[0]["name"] == "metrics"
+    assert by_name["metrics"]["size"] == mf[0]["size"]

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from compile import model, specs
-from compile.layout import METRIC_NAMES, Layout, mlp_fields
+from compile.layout import BUFFER_GROUPS, METRIC_NAMES, Layout, mlp_fields
 
 
 def tiny_spec(method="cce", impl="pallas", **kw):
@@ -31,6 +31,18 @@ def init_state(layout: Layout, seed=0) -> jnp.ndarray:
     return jnp.asarray(out)
 
 
+def split_state(lo: Layout, state):
+    """Flat host state → per-group device buffers (the runtime's split)."""
+    return {g: state[off : off + size] for g, off, size in lo.buffers()}
+
+
+def run_step(step, lo: Layout, state, dense, emb, labels):
+    """Drive a per-group train step from a flat state; return flat state'."""
+    gs = split_state(lo, state)
+    pool, dense_p, metrics = step(gs["pool"], gs["dense"], gs["metrics"], dense, emb, labels)
+    return jnp.concatenate([pool, dense_p, metrics])
+
+
 def random_inputs(spec, batch, seed=0):
     rng = np.random.default_rng(seed)
     dense = jnp.asarray(rng.normal(size=(batch, spec.n_dense)).astype(np.float32))
@@ -51,9 +63,46 @@ def random_inputs(spec, batch, seed=0):
 
 def test_layout_offsets_contiguous():
     lo = Layout()
-    lo.add("a", (3, 4), ("zeros",))
-    lo.add("b", (5,), ("normal", 0.1))
+    lo.add("a", (3, 4), ("zeros",), "pool")
+    lo.add("b", (5,), ("normal", 0.1), "dense")
     assert lo["a"].offset == 0 and lo["b"].offset == 12 and lo.size == 17
+
+
+def test_layout_groups_must_stay_contiguous():
+    lo = Layout()
+    lo.add("a", (2,), ("zeros",), "dense")
+    with pytest.raises(ValueError, match="contiguous"):
+        lo.add("b", (2,), ("zeros",), "pool")
+    with pytest.raises(ValueError, match="unknown group"):
+        lo.add("c", (2,), ("zeros",), "emb")
+
+
+def test_layout_buffers_tile_state():
+    for method in ["hash", "cce", "robe", "dhe"]:
+        lo = model.build_layout(tiny_spec(method=method))
+        bufs = lo.buffers()
+        assert [g for g, _, _ in bufs] == list(BUFFER_GROUPS)
+        off = 0
+        for _, b_off, b_size in bufs:
+            assert b_off == off
+            off += b_size
+        assert off == lo.size
+        for f in lo.fields:
+            g_off, g_size = dict((g, (o, s)) for g, o, s in bufs)[f.group]
+            assert g_off <= f.offset and f.offset + f.size <= g_off + g_size
+
+
+def test_group_pack_unpack_matches_flat():
+    spec = tiny_spec()
+    lo = model.build_layout(spec)
+    state = init_state(lo, seed=2)
+    flat = lo.unpack(state)
+    grouped = lo.unpack_groups(**split_state(lo, state))
+    assert set(flat) == set(grouped)
+    for k in flat:
+        np.testing.assert_array_equal(flat[k], grouped[k])
+    back = jnp.concatenate([lo.pack_group(g, grouped) for g in BUFFER_GROUPS])
+    np.testing.assert_array_equal(state, back)
 
 
 def test_layout_pack_unpack_roundtrip():
@@ -67,16 +116,16 @@ def test_layout_pack_unpack_roundtrip():
 
 def test_layout_rejects_duplicates():
     lo = Layout()
-    lo.add("a", (2,), ("zeros",))
+    lo.add("a", (2,), ("zeros",), "pool")
     with pytest.raises(ValueError, match="duplicate"):
-        lo.add("a", (2,), ("zeros",))
+        lo.add("a", (2,), ("zeros",), "pool")
 
 
 def test_layout_pack_shape_mismatch():
     lo = Layout()
-    lo.add("a", (2, 2), ("zeros",))
+    lo.add("a", (2, 2), ("zeros",), "pool")
     with pytest.raises(ValueError, match="expected"):
-        lo.pack({"a": jnp.zeros((4,))})
+        lo.pack_group("pool", {"a": jnp.zeros((4,))})
 
 
 def test_metrics_is_last_field():
@@ -179,7 +228,7 @@ def test_train_step_decreases_loss(method):
     dense, emb, labels = random_inputs(spec, spec.batch, seed=3)
     losses = []
     for _ in range(30):
-        state = step(state, dense, emb, labels)
+        state = run_step(step, lo, state, dense, emb, labels)
         losses.append(float(state[lo["metrics"].offset + 3]))
     assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]
 
@@ -191,7 +240,7 @@ def test_train_step_metrics_accumulate():
     state = init_state(lo)
     dense, emb, labels = random_inputs(spec, spec.batch)
     for _ in range(5):
-        state = step(state, dense, emb, labels)
+        state = run_step(step, lo, state, dense, emb, labels)
     m = lo["metrics"]
     metrics = np.asarray(state[m.offset : m.offset + m.size])
     assert metrics[1] == 5 * spec.batch  # examples
@@ -207,7 +256,7 @@ def test_train_step_only_touched_rows_change():
     state0 = init_state(lo, seed=5)
     dense, _, labels = random_inputs(spec, spec.batch, seed=5)
     emb = jnp.zeros((spec.batch, spec.n_features, 1, 1), dtype=jnp.int32)  # only row 0
-    state1 = step(state0, dense, emb, labels)
+    state1 = run_step(step, lo, state0, dense, emb, labels)
     pool_f = lo["pool"]
     p0 = np.asarray(state0[pool_f.offset : pool_f.offset + pool_f.size]).reshape(pool_f.shape)
     p1 = np.asarray(state1[pool_f.offset : pool_f.offset + pool_f.size]).reshape(pool_f.shape)
@@ -221,7 +270,8 @@ def test_predict_in_unit_interval():
     predict = jax.jit(model.make_predict(spec, lo))
     state = init_state(lo)
     dense, emb, _ = random_inputs(spec, spec.eval_batch)
-    p = predict(state, dense, emb)
+    gs = split_state(lo, state)
+    p = predict(gs["pool"], gs["dense"], dense, emb)
     assert p.shape == (spec.eval_batch,)
     assert np.all((np.asarray(p) >= 0) & (np.asarray(p) <= 1))
 
@@ -230,7 +280,6 @@ def test_readout_slices_metrics():
     spec = tiny_spec()
     lo = model.build_layout(spec)
     ro = jax.jit(model.make_readout(lo))
-    state = np.zeros(lo.size, dtype=np.float32)
-    m = lo["metrics"]
-    state[m.offset : m.offset + m.size] = [1, 2, 3, 4]
-    np.testing.assert_array_equal(ro(jnp.asarray(state)), [1, 2, 3, 4])
+    np.testing.assert_array_equal(
+        ro(jnp.asarray(np.array([1, 2, 3, 4], dtype=np.float32))), [1, 2, 3, 4]
+    )

@@ -128,6 +128,7 @@ mod tests {
             offset: 0,
             size,
             init: InitSpec::Zeros,
+            group: "pool".into(),
         };
         (state, field, plan)
     }

@@ -31,10 +31,12 @@
 //! [`cluster_event`] runs both phases back-to-back on the same state).
 //!
 //! Synchronous [`cluster_event`] mutates the pool range of the state
-//! vector in place on the host; the caller re-uploads it afterwards
-//! (`DlrmSession::set_field` moves only the pool field). Features whose
-//! subtables are identity (full tables under the cap) are skipped —
-//! clustering a lossless table can only discard information.
+//! vector in place on the host; the caller re-uploads it afterwards.
+//! With per-group device buffers, `DlrmSession::set_field` on the pool
+//! field is a pure upload of the pool buffer — the dense layers never
+//! cross the wire during an event. Features whose subtables are identity
+//! (full tables under the cap) are skipped — clustering a lossless table
+//! can only discard information.
 //!
 //! §Perf log, opt L3-2 (clustering-event hot path): materialization used
 //! to walk `Indexer::global_row` per `(t, v)` lookup — an enum-dispatch
@@ -323,6 +325,7 @@ mod tests {
             offset: 0,
             size: pool_size,
             init: InitSpec::Normal(0.3),
+            group: "pool".into(),
         };
         (state, field, indexer)
     }
@@ -550,6 +553,7 @@ mod tests {
             offset: 0,
             size: state.len(),
             init: InitSpec::Zeros,
+            group: "pool".into(),
         };
         cluster_event(&mut state, &field, &mut ix, &cfg());
     }

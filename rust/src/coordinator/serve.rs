@@ -69,15 +69,21 @@ pub fn serve(
 /// bake its contemporaneous indexer (the pair is only valid together —
 /// clustering events rewrite both). This is the ROADMAP "trained-weight
 /// serving path": `cce serve --train-steps N` lands here instead of
-/// serving a random-initialized model.
+/// serving a random-initialized model. The state upload (one device
+/// buffer per group) is the only transfer at bake time; it is reported
+/// as `ServeReport::bake_transfer_bytes`.
 pub fn serve_trained(
     session: &mut DlrmSession,
     ckpt: &Checkpoint,
     ds: &SyntheticDataset,
     cfg: &ServeConfig,
 ) -> Result<ServeReport> {
+    let tb = session.transfer_bytes();
     session.set_state(&ckpt.state)?;
-    serve(session, &ckpt.indexer, ds, cfg)
+    let (d, u) = session.transfer_bytes();
+    let mut rep = serve(session, &ckpt.indexer, ds, cfg)?;
+    rep.bake_transfer_bytes = (d - tb.0) + (u - tb.1);
+    Ok(rep)
 }
 
 /// Boot the engine straight from an on-disk segment (`cce serve --snapshot`):

@@ -10,8 +10,10 @@
 //!
 //!   * **synchronous** (default, deterministic): the step loop stalls
 //!     while `compute_cluster` + `apply_cluster` run back-to-back against
-//!     the pool field (`pull_field` → cluster → `set_field`; the dense
-//!     layers never cross the transfer API).
+//!     the pool field (`pull_field` → cluster → `set_field`; with
+//!     per-group device buffers the dense layers never cross the wire —
+//!     an event costs pool-buffer bytes, accounted in
+//!     `TrainOutcome::event_bytes_*`).
 //!   * **overlapped** (`cluster_overlap`): the pool snapshot + an
 //!     `Indexer` clone go to a persistent `BackgroundWorker`; training
 //!     continues on the old maps, and at the first step boundary where
@@ -98,6 +100,21 @@ pub struct TrainOutcome {
     pub cluster_event_secs: f64,
     /// samples/sec over the training phase (excludes eval + clustering)
     pub throughput: f64,
+    /// state bytes moved device→host over the run (group-buffer traffic
+    /// only; per-batch dense/emb/labels uploads are not state)
+    pub bytes_downloaded: u64,
+    /// state bytes moved host→device over the run
+    pub bytes_uploaded: u64,
+    /// the share of `bytes_downloaded` spent on clustering events
+    /// (snapshot pulls + applies); with per-group buffers this is
+    /// pool-buffer traffic only — 2 pool downloads + 1 pool upload per
+    /// overlapped event, 1 + 1 per synchronous event
+    pub event_bytes_downloaded: u64,
+    /// the share of `bytes_uploaded` spent on clustering events
+    pub event_bytes_uploaded: u64,
+    /// wire cost (bytes) of moving the pool buffer once — the unit the
+    /// event costs above are multiples of
+    pub pool_bytes: u64,
     /// the best-validation (state, indexer) pair — what serving should
     /// bake; always `Some` after `train` returns Ok
     pub best_checkpoint: Option<Checkpoint>,
@@ -355,9 +372,13 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 match p.handle.try_join() {
                     Some(computed) => {
                         let t0 = Instant::now();
+                        let tb = session.transfer_bytes();
                         let pf =
                             pool_field.as_ref().expect("rowwise artifact without pool field");
                         let mut res = apply_computed(&mut session, pf, &mut indexer, computed)?;
+                        let (d, u) = session.transfer_bytes();
+                        out.event_bytes_downloaded += d - tb.0;
+                        out.event_bytes_uploaded += u - tb.1;
                         res.stale_steps = global_step - p.started_step;
                         out.cluster_stale_steps.push(res.stale_steps);
                         out.cluster_secs += t0.elapsed().as_secs_f64();
@@ -398,9 +419,15 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                 if let Some(worker) = &cluster_worker {
                     if pending.is_none() {
                         // overlapped: snapshot the pool + clone the maps,
-                        // hand both to the background job, keep training
+                        // hand both to the background job, keep training.
+                        // With per-group buffers this pull moves pool
+                        // bytes only, never the dense-layer share.
                         let t0 = Instant::now();
+                        let tb = session.transfer_bytes();
                         let pool = session.pull_field(pf)?;
+                        let (d, u) = session.transfer_bytes();
+                        out.event_bytes_downloaded += d - tb.0;
+                        out.event_bytes_uploaded += u - tb.1;
                         let ix_snapshot = indexer.clone();
                         let handle =
                             worker.submit(move || compute_cluster(&pool, &ix_snapshot, &cc));
@@ -423,13 +450,17 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                     }
                 } else {
                     // synchronous: compute + apply back-to-back on the one
-                    // held pool copy; only the pool field crosses the
-                    // transfer API
+                    // held pool copy; only the pool buffer crosses the
+                    // wire (1 download + 1 upload)
                     let t0 = Instant::now();
+                    let tb = session.transfer_bytes();
                     let mut pool = session.pull_field(pf)?;
                     let computed = compute_cluster(&pool, &indexer, &cc);
                     let res = apply_cluster(&mut pool, &mut indexer, computed);
                     session.set_field(pf, &pool)?;
+                    let (d, u) = session.transfer_bytes();
+                    out.event_bytes_downloaded += d - tb.0;
+                    out.event_bytes_uploaded += u - tb.1;
                     out.clusterings_run += 1;
                     out.cluster_stale_steps.push(0);
                     let stall = t0.elapsed().as_secs_f64();
@@ -505,9 +536,13 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
             // no eval point was reached, so the FINAL state becomes the
             // checkpoint: block and apply so it carries the computed maps
             let t0 = Instant::now();
+            let tb = session.transfer_bytes();
             let computed = p.handle.join();
             let pf = pool_field.as_ref().expect("rowwise artifact without pool field");
             apply_computed(&mut session, pf, &mut indexer, computed)?;
+            let (d, u) = session.transfer_bytes();
+            out.event_bytes_downloaded += d - tb.0;
+            out.event_bytes_uploaded += u - tb.1;
             let stale = global_step - p.started_step;
             out.cluster_stale_steps.push(stale);
             out.cluster_secs += t0.elapsed().as_secs_f64();
@@ -552,6 +587,10 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let tacc = evaluate(&session, &ck_indexer, &ds, Split::Test)?;
     out.test_bce = tacc.bce();
     out.test_auc = tacc.auc();
+    let (d, u) = session.transfer_bytes();
+    out.bytes_downloaded = d;
+    out.bytes_uploaded = u;
+    out.pool_bytes = session.buffer_bytes("pool")?;
     // final generation: the checkpoint that actually ships to serving
     write_snapshot_generation(&cfg.snapshot_dir, &cfg.artifact, &ck_indexer, cfg.snapshot_keep, &mut out)?;
     out.best_checkpoint = Some(Checkpoint { state: ck_state, indexer: ck_indexer });

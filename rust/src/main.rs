@@ -95,6 +95,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         "cluster time".into(),
         format!("{:.2}s stalled / {:.2}s total", out.cluster_secs, out.cluster_event_secs),
     ]);
+    t.row(vec![
+        "state transfer".into(),
+        format!(
+            "{:.1} KiB down / {:.1} KiB up ({:.1} KiB down / {:.1} KiB up on events; \
+             pool buffer {:.1} KiB)",
+            out.bytes_downloaded as f64 / 1024.0,
+            out.bytes_uploaded as f64 / 1024.0,
+            out.event_bytes_downloaded as f64 / 1024.0,
+            out.event_bytes_uploaded as f64 / 1024.0,
+            out.pool_bytes as f64 / 1024.0,
+        ),
+    ]);
     if !out.snapshot_files.is_empty() {
         t.row(vec![
             "snapshots".into(),
@@ -222,6 +234,7 @@ fn cmd_entropy(args: &Args) -> Result<()> {
             offset: 0,
             size,
             init: InitSpec::Zeros,
+            group: "pool".into(),
         };
         (state, field, ix)
     };
@@ -366,7 +379,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         t.row(vec![
             "snapshot".into(),
-            format!("{} KiB baked in {:.3}s", rep.snapshot_bytes / 1024, rep.bake_secs),
+            format!(
+                "{} KiB baked in {:.3}s ({:.1} KiB device transfer at bake)",
+                rep.snapshot_bytes / 1024,
+                rep.bake_secs,
+                rep.bake_transfer_bytes as f64 / 1024.0
+            ),
         ]);
     }
     if rep.snapshot_swaps > 0 {
@@ -417,7 +435,13 @@ fn cmd_snapshot_write(args: &Args) -> Result<()> {
         };
         let out = cce::coordinator::train(&store, &tcfg)?;
         let ckpt = out.best_checkpoint.expect("train always returns a checkpoint");
-        log::info!("baking trained index maps ({} steps)", out.steps_run);
+        log::info!(
+            "baking trained index maps ({} steps; {:.1} KiB state down / {:.1} KiB up \
+             during training, 0 at bake — the bake reads host-side maps)",
+            out.steps_run,
+            out.bytes_downloaded as f64 / 1024.0,
+            out.bytes_uploaded as f64 / 1024.0
+        );
         cce::serving::ServingSnapshot::bake(&ckpt.indexer)
     } else {
         let m = store.manifest(&artifact)?;

@@ -7,6 +7,11 @@
 use crate::util::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
+/// The manifest schema this runtime speaks: 2 = per-group device buffers
+/// (top-level "buffers" list, per-field "group" tags, `train` lowered
+/// with a tuple root). Mirrors `python/compile/layout.py::SCHEMA_VERSION`.
+pub const SCHEMA_VERSION: u64 = 2;
+
 /// Element type of an executable input.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
@@ -32,7 +37,9 @@ pub enum InitSpec {
     Uniform(f32),
 }
 
-/// One field of the packed state vector.
+/// One field of the flat state vector. `offset` is the field's absolute
+/// position in the flat (host interchange) state; the field lives in the
+/// device buffer named by `group` at `offset - buffer.offset`.
 #[derive(Clone, Debug)]
 pub struct FieldDesc {
     pub name: String,
@@ -40,6 +47,22 @@ pub struct FieldDesc {
     pub offset: usize,
     pub size: usize,
     pub init: InitSpec,
+    pub group: String,
+}
+
+/// One per-group device buffer: a contiguous range of the flat state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BufferDesc {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+impl BufferDesc {
+    /// Wire cost of moving this buffer once (f32 elements).
+    pub fn bytes(&self) -> u64 {
+        self.size as u64 * 4
+    }
 }
 
 /// One executable input.
@@ -80,6 +103,8 @@ pub struct DlrmSpec {
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub name: String,
+    /// calling-convention version the artifact was lowered with
+    pub schema_version: u64,
     pub family: String,
     pub kind: String,
     pub dataset: String,
@@ -88,6 +113,9 @@ pub struct Manifest {
     pub vocabs: Vec<usize>,
     pub state_size: usize,
     pub layout: Vec<FieldDesc>,
+    /// per-group device buffers, in upload/result order (pool, dense,
+    /// metrics); together they tile the flat state exactly
+    pub buffers: Vec<BufferDesc>,
     pub metrics_offset: usize,
     pub metric_names: Vec<String>,
     /// executable kind → hlo file name
@@ -103,6 +131,16 @@ impl Manifest {
         let j = Json::parse(src).map_err(|e| anyhow!("{e}"))?;
         let name = j.str_field("name")?.to_string();
         let family = j.str_field("family")?.to_string();
+        let schema_version =
+            j.get("schema_version").and_then(|v| v.as_usize()).unwrap_or(1) as u64;
+        if family == "dlrm" && schema_version != SCHEMA_VERSION {
+            bail!(
+                "artifact {name:?} was lowered with manifest schema v{schema_version} \
+                 (this runtime speaks v{SCHEMA_VERSION}). Schema v1 is the old \
+                 single-buffer convention — re-run `python -m compile.aot --force` \
+                 to re-lower the artifact with per-group state buffers"
+            );
+        }
         let kind = j
             .get("kind")
             .and_then(|k| k.as_str())
@@ -171,8 +209,27 @@ impl Manifest {
                     offset: f.usize_field("offset")?,
                     size: f.usize_field("size")?,
                     init,
+                    group: f
+                        .get("group")
+                        .and_then(|g| g.as_str())
+                        .ok_or_else(|| anyhow!("layout field without group tag"))?
+                        .to_string(),
                 });
             }
+        }
+
+        let mut buffers = Vec::new();
+        if let Some(arr) = j.get("buffers").and_then(|v| v.as_arr()) {
+            for b in arr {
+                buffers.push(BufferDesc {
+                    name: b.str_field("name")?.to_string(),
+                    offset: b.usize_field("offset")?,
+                    size: b.usize_field("size")?,
+                });
+            }
+        }
+        if family == "dlrm" && buffers.is_empty() {
+            bail!("artifact {name:?}: schema v{schema_version} manifest without buffers");
         }
 
         let (metrics_offset, metric_names) = match j.get("metrics") {
@@ -225,7 +282,20 @@ impl Manifest {
         let mut output_elems = std::collections::BTreeMap::new();
         if let Some(outs) = j.get("outputs").and_then(|v| v.as_obj()) {
             for (k, v) in outs {
-                let n: usize = v.usize_array("shape")?.iter().product();
+                // tuple-root executables (train) list one shape per result;
+                // single-root ones keep a plain "shape"
+                let n: usize = match v.get("tuple_shapes").and_then(|t| t.as_arr()) {
+                    Some(shapes) => shapes
+                        .iter()
+                        .map(|s| -> Result<usize> {
+                            let dims = s
+                                .as_arr()
+                                .ok_or_else(|| anyhow!("outputs[{k}] tuple shape"))?;
+                            Ok(dims.iter().filter_map(|d| d.as_usize()).product())
+                        })
+                        .sum::<Result<usize>>()?,
+                    None => v.usize_array("shape")?.iter().product(),
+                };
                 output_elems.insert(k.clone(), n);
             }
         }
@@ -248,8 +318,35 @@ impl Manifest {
             }
         }
 
+        // cross-validation: buffers must tile the state exactly, and every
+        // field must sit inside the buffer named by its group tag
+        if !buffers.is_empty() {
+            let mut off = 0usize;
+            for b in &buffers {
+                if b.offset != off {
+                    bail!("buffer {} at offset {} (expected {off})", b.name, b.offset);
+                }
+                if b.size == 0 {
+                    bail!("buffer {} is empty", b.name);
+                }
+                off += b.size;
+            }
+            if off != state_size {
+                bail!("buffers cover {off} of {state_size} state elements");
+            }
+            for f in &layout {
+                let b = buffers.iter().find(|b| b.name == f.group).ok_or_else(|| {
+                    anyhow!("field {} tagged with unknown group {:?}", f.name, f.group)
+                })?;
+                if f.offset < b.offset || f.offset + f.size > b.offset + b.size {
+                    bail!("field {} leaks out of buffer {}", f.name, b.name);
+                }
+            }
+        }
+
         Ok(Manifest {
             name,
+            schema_version,
             family,
             kind,
             dataset,
@@ -258,6 +355,7 @@ impl Manifest {
             vocabs,
             state_size,
             layout,
+            buffers,
             metrics_offset,
             metric_names,
             executables,
@@ -273,6 +371,25 @@ impl Manifest {
             .ok_or_else(|| anyhow!("no layout field {name:?} in {}", self.name))
     }
 
+    pub fn buffer(&self, name: &str) -> Result<&BufferDesc> {
+        self.buffers
+            .iter()
+            .find(|b| b.name == name)
+            .ok_or_else(|| anyhow!("no state buffer {name:?} in {}", self.name))
+    }
+
+    pub fn buffer_index(&self, name: &str) -> Result<usize> {
+        self.buffers
+            .iter()
+            .position(|b| b.name == name)
+            .ok_or_else(|| anyhow!("no state buffer {name:?} in {}", self.name))
+    }
+
+    /// Index of the device buffer holding `field` (by its group tag).
+    pub fn buffer_for_field(&self, field: &FieldDesc) -> Result<usize> {
+        self.buffer_index(&field.group)
+    }
+
     pub fn inputs_for(&self, exec: &str) -> Result<&[InputDesc]> {
         Ok(self
             .inputs
@@ -286,53 +403,111 @@ mod tests {
     use super::*;
 
     const SAMPLE: &str = r#"{
-      "name": "t", "family": "dlrm", "kind": "rowwise",
+      "name": "t", "schema_version": 2, "family": "dlrm", "kind": "rowwise",
       "dataset": "smoke", "method": "cce",
       "spec": {"batch": 64, "eval_batch": 128, "dim": 8, "dc": 2, "t": 2,
                "c": 4, "cap": 32, "lr": 0.05, "n_features": 4, "n_dense": 13,
                "pool_rows": 856, "dhe_hidden": 0, "n_hash": 0,
                "impl": "pallas", "embedding_params": 1712},
       "vocabs": [11, 50, 200, 1000],
-      "state_size": 20,
+      "state_size": 24,
       "layout": [
         {"name": "pool", "shape": [4, 4], "offset": 0, "size": 16,
-         "init": ["normal", 0.125]},
-        {"name": "metrics", "shape": [4], "offset": 16, "size": 4,
-         "init": ["zeros"]}
+         "init": ["normal", 0.125], "group": "pool"},
+        {"name": "bot_w0", "shape": [2, 2], "offset": 16, "size": 4,
+         "init": ["uniform", 0.5], "group": "dense"},
+        {"name": "metrics", "shape": [4], "offset": 20, "size": 4,
+         "init": ["zeros"], "group": "metrics"}
       ],
-      "metrics": {"offset": 16, "names": ["loss_sum", "examples", "steps", "last_loss"]},
+      "buffers": [
+        {"name": "pool", "offset": 0, "size": 16},
+        {"name": "dense", "offset": 16, "size": 4},
+        {"name": "metrics", "offset": 20, "size": 4}
+      ],
+      "metrics": {"offset": 20, "names": ["loss_sum", "examples", "steps", "last_loss"]},
       "executables": {"train": "t.train.hlo.txt"},
       "inputs": {"train": [
-        {"name": "state", "dtype": "f32", "shape": [20]},
+        {"name": "state.pool", "dtype": "f32", "shape": [16]},
+        {"name": "state.dense", "dtype": "f32", "shape": [4]},
+        {"name": "state.metrics", "dtype": "f32", "shape": [4]},
         {"name": "emb", "dtype": "i32", "shape": [64, 4, 2, 4]}
       ]},
-      "outputs": {"train": {"dtype": "f32", "shape": [20]}}
+      "outputs": {"train": {"dtype": "f32", "tuple_shapes": [[16], [4], [4]]}}
     }"#;
 
     #[test]
     fn parses_complete_manifest() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.name, "t");
+        assert_eq!(m.schema_version, SCHEMA_VERSION);
         assert_eq!(m.spec.batch, 64);
         assert_eq!(m.vocabs, vec![11, 50, 200, 1000]);
-        assert_eq!(m.layout.len(), 2);
+        assert_eq!(m.layout.len(), 3);
         assert_eq!(m.field("pool").unwrap().init, InitSpec::Normal(0.125));
-        assert_eq!(m.metrics_offset, 16);
+        assert_eq!(m.metrics_offset, 20);
         let ins = m.inputs_for("train").unwrap();
-        assert_eq!(ins[1].dtype, DType::I32);
-        assert_eq!(ins[1].elems(), 64 * 4 * 2 * 4);
-        assert_eq!(m.output_elems["train"], 20);
+        assert_eq!(ins[3].dtype, DType::I32);
+        assert_eq!(ins[3].elems(), 64 * 4 * 2 * 4);
+        // tuple root: output_elems is the summed element count
+        assert_eq!(m.output_elems["train"], 24);
+    }
+
+    #[test]
+    fn resolves_buffers_and_field_groups() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.buffers.len(), 3);
+        assert_eq!(m.buffer("pool").unwrap().size, 16);
+        assert_eq!(m.buffer("pool").unwrap().bytes(), 64);
+        assert_eq!(m.buffer_index("metrics").unwrap(), 2);
+        let f = m.field("bot_w0").unwrap().clone();
+        assert_eq!(m.buffer_for_field(&f).unwrap(), 1);
+        assert!(m.buffer("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_single_buffer_schema_v1() {
+        let bad = SAMPLE.replace("\"schema_version\": 2, ", "");
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("schema v1"), "{err}");
+        assert!(err.contains("single-buffer"), "{err}");
+        assert!(err.contains("compile.aot"), "{err}");
+    }
+
+    #[test]
+    fn rejects_field_without_group_tag() {
+        let bad = SAMPLE.replace(", \"group\": \"dense\"", "");
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("group"), "{err}");
+    }
+
+    #[test]
+    fn rejects_buffers_not_tiling_state() {
+        let bad = SAMPLE.replace(
+            "{\"name\": \"dense\", \"offset\": 16, \"size\": 4}",
+            "{\"name\": \"dense\", \"offset\": 17, \"size\": 4}",
+        );
+        assert!(Manifest::parse(&bad).unwrap_err().to_string().contains("buffer"));
+    }
+
+    #[test]
+    fn rejects_field_leaking_out_of_its_buffer() {
+        let bad = SAMPLE.replace("\"group\": \"dense\"", "\"group\": \"metrics\"");
+        let err = Manifest::parse(&bad).unwrap_err().to_string();
+        assert!(err.contains("leaks out of"), "{err}");
     }
 
     #[test]
     fn rejects_bad_layout_offsets() {
-        let bad = SAMPLE.replace("\"offset\": 16", "\"offset\": 17");
+        let bad = SAMPLE.replace(
+            "\"offset\": 20, \"size\": 4,\n         \"init\": [\"zeros\"]",
+            "\"offset\": 21, \"size\": 4,\n         \"init\": [\"zeros\"]",
+        );
         assert!(Manifest::parse(&bad).is_err());
     }
 
     #[test]
     fn rejects_layout_not_covering_state() {
-        let bad = SAMPLE.replace("\"state_size\": 20", "\"state_size\": 21");
+        let bad = SAMPLE.replace("\"state_size\": 24", "\"state_size\": 25");
         assert!(Manifest::parse(&bad).is_err());
     }
 

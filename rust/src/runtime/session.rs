@@ -1,16 +1,22 @@
-//! Packed-state training session over one DLRM artifact.
+//! Per-buffer training session over one DLRM artifact.
 //!
-//! Owns the state device buffer and chains `execute_b` step-to-step with
-//! no host round-trips; metrics come from the tiny `readout` executable.
-//! `pull_field`/`set_field` move single layout fields (clustering events
-//! only touch the pool field, never the dense-layer share) with a
-//! generation-tagged download cache so a field round trip costs the same
-//! one download + one upload as the full-state pair. NOTE: the PJRT
-//! wrapper only exposes whole-buffer transfers and the state is one
-//! device buffer, so the full state still crosses the wire internally —
-//! the field API bounds what callers see/copy host-side and is the seam
-//! a future per-field buffer split would slot into (ROADMAP "true
-//! partial state transfer").
+//! The flat host state is split across one device buffer per layout
+//! group (`pool` / `dense` / `metrics`, see `manifest.buffers` and
+//! docs/CALLING_CONVENTION.md). `train` takes one parameter per group
+//! and returns a tuple root, re-fed buffer-for-buffer with no host
+//! round-trips; metrics are read by downloading the 16-byte metrics
+//! buffer directly (the manifest still ships a `readout` HLO for older
+//! tooling, but the session never compiles it).
+//!
+//! `pull_field`/`set_field` move only the device buffer holding the
+//! field: a clustering event's pull → cluster → patch round trip costs
+//! pool-buffer bytes on the wire, never the dense-layer share. When a
+//! field *is* its buffer (the pool field always is), `set_field` is a
+//! pure upload — no download-patch-reupload. Transfer counters
+//! (`transfer_bytes`) account every state byte crossing the PCIe/host
+//! boundary; per-batch inputs (dense/emb/labels) are not state and are
+//! not counted.
+//!
 //! Every call validates input sizes/dtypes against the manifest FIRST —
 //! PJRT aborts the process on shape mismatch (DESIGN.md §7.2), so the
 //! validation here is what turns config bugs into `Err` instead of SIGABRT.
@@ -18,6 +24,7 @@
 use crate::runtime::manifest::{DType, FieldDesc, Manifest};
 use crate::runtime::ArtifactStore;
 use anyhow::{anyhow, bail, Result};
+use std::cell::Cell;
 
 /// The embedding-side input of one batch (dtype depends on method kind).
 pub enum EmbInput<'a> {
@@ -29,19 +36,15 @@ pub struct DlrmSession {
     pub manifest: Manifest,
     train: xla::PjRtLoadedExecutable,
     predict: xla::PjRtLoadedExecutable,
-    readout: xla::PjRtLoadedExecutable,
-    state: Option<xla::PjRtBuffer>,
+    /// one device buffer per manifest buffer, in manifest order
+    /// (pool, dense, metrics); `None` until the first `set_state`
+    buffers: Option<Vec<xla::PjRtBuffer>>,
     /// steps executed since the last `set_state`
     pub steps_since_upload: u64,
-    /// device-state version: bumped by every mutation (`set_state`,
-    /// `set_field`, `train_step`); tags `pull_cache` entries
-    generation: u64,
-    /// full-state download kept between a `pull_field` and the `set_field`
-    /// that finishes a field-ranged round trip, so the pair costs one
-    /// download + one upload (same as `pull_state`/`set_state`) while the
-    /// caller only ever holds the field-sized slice. Invalidated whenever
-    /// the device state advances.
-    pull_cache: std::cell::RefCell<Option<(u64, Vec<f32>)>>,
+    /// state bytes moved device→host since open (buffer downloads only)
+    bytes_downloaded: Cell<u64>,
+    /// state bytes moved host→device since open (buffer uploads only)
+    bytes_uploaded: Cell<u64>,
 }
 
 impl DlrmSession {
@@ -49,22 +52,67 @@ impl DlrmSession {
     /// all steps reuse the loaded executables.
     pub fn open(store: &ArtifactStore, name: &str) -> Result<DlrmSession> {
         let manifest = store.manifest(name)?;
+        // the calling convention is load-bearing: every state.* input of
+        // every executable must match a manifest buffer exactly, or
+        // execute would feed a wrong-sized buffer (process-fatal in PJRT)
+        for exec in ["train", "predict"] {
+            for d in manifest.inputs_for(exec)? {
+                if let Some(g) = d.name.strip_prefix("state.") {
+                    let b = manifest.buffer(g)?;
+                    if d.elems() != b.size {
+                        bail!(
+                            "{exec}:{} expects {} elements but buffer {g} has {}",
+                            d.name,
+                            d.elems(),
+                            b.size
+                        );
+                    }
+                }
+            }
+        }
         let train = store.compile(&manifest, "train")?;
         let predict = store.compile(&manifest, "predict")?;
-        let readout = store.compile(&manifest, "readout")?;
         Ok(DlrmSession {
             manifest,
             train,
             predict,
-            readout,
-            state: None,
+            buffers: None,
             steps_since_upload: 0,
-            generation: 0,
-            pull_cache: std::cell::RefCell::new(None),
+            bytes_downloaded: Cell::new(0),
+            bytes_uploaded: Cell::new(0),
         })
     }
 
-    /// Upload a fresh state vector (initialization or post-clustering).
+    /// (bytes_downloaded, bytes_uploaded) of state-buffer traffic so far.
+    pub fn transfer_bytes(&self) -> (u64, u64) {
+        (self.bytes_downloaded.get(), self.bytes_uploaded.get())
+    }
+
+    /// Wire cost (bytes) of moving the buffer holding `name` once.
+    pub fn buffer_bytes(&self, name: &str) -> Result<u64> {
+        Ok(self.manifest.buffer(name)?.bytes())
+    }
+
+    fn upload_group(&self, idx: usize, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let b = &self.manifest.buffers[idx];
+        debug_assert_eq!(data.len(), b.size);
+        let buf = crate::runtime::with_client(|c| {
+            Ok(c.buffer_from_host_buffer(data, &[b.size], None)?)
+        })?;
+        self.bytes_uploaded.set(self.bytes_uploaded.get() + b.bytes());
+        Ok(buf)
+    }
+
+    fn download_group(&self, idx: usize) -> Result<Vec<f32>> {
+        let bufs = self.buffers.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        let out = bufs[idx].to_literal_sync()?.to_vec::<f32>()?;
+        self.bytes_downloaded
+            .set(self.bytes_downloaded.get() + self.manifest.buffers[idx].bytes());
+        Ok(out)
+    }
+
+    /// Upload a fresh state vector (initialization or post-clustering),
+    /// split into one device buffer per group.
     pub fn set_state(&mut self, state: &[f32]) -> Result<()> {
         if state.len() != self.manifest.state_size {
             bail!(
@@ -74,19 +122,24 @@ impl DlrmSession {
                 self.manifest.state_size
             );
         }
-        self.state = Some(crate::runtime::with_client(|c| {
-            Ok(c.buffer_from_host_buffer(state, &[state.len()], None)?)
-        })?);
+        let mut bufs = Vec::with_capacity(self.manifest.buffers.len());
+        for i in 0..self.manifest.buffers.len() {
+            let b = self.manifest.buffers[i].clone();
+            bufs.push(self.upload_group(i, &state[b.offset..b.offset + b.size])?);
+        }
+        self.buffers = Some(bufs);
         self.steps_since_upload = 0;
-        self.generation += 1;
-        *self.pull_cache.get_mut() = None;
         Ok(())
     }
 
-    /// Download the full state vector (clustering events, checkpoints).
+    /// Download the full state vector (checkpoints, snapshot baking) by
+    /// concatenating every group buffer.
     pub fn pull_state(&self) -> Result<Vec<f32>> {
-        let buf = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
-        Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+        let mut out = Vec::with_capacity(self.manifest.state_size);
+        for i in 0..self.manifest.buffers.len() {
+            out.extend_from_slice(&self.download_group(i)?);
+        }
+        Ok(out)
     }
 
     /// A layout field passed by the caller must be the manifest's own
@@ -94,48 +147,41 @@ impl DlrmSession {
     /// silently read or patch the wrong state range.
     fn validate_field(&self, field: &FieldDesc) -> Result<()> {
         let d = self.manifest.field(&field.name)?;
-        if d.offset != field.offset || d.size != field.size {
+        if d.offset != field.offset || d.size != field.size || d.group != field.group {
             bail!(
-                "field {:?} (offset {}, size {}) does not match artifact {} layout \
-                 (offset {}, size {})",
+                "field {:?} (offset {}, size {}, group {}) does not match artifact {} \
+                 layout (offset {}, size {}, group {})",
                 field.name,
                 field.offset,
                 field.size,
+                field.group,
                 self.manifest.name,
                 d.offset,
-                d.size
+                d.size,
+                d.group
             );
         }
         Ok(())
     }
 
     /// Download ONE layout field (e.g. the embedding pool around a
-    /// clustering event) instead of the whole state vector. The caller
-    /// only ever sees the field-sized slice; the full download backing it
-    /// is cached (tagged with the state generation) so a following
-    /// `set_field` finishes the round trip without a second download.
+    /// clustering event). Only the device buffer holding the field
+    /// crosses the wire — a pool pull costs pool-buffer bytes, not the
+    /// full state.
     pub fn pull_field(&self, field: &FieldDesc) -> Result<Vec<f32>> {
         self.validate_field(field)?;
-        let range = field.offset..field.offset + field.size;
-        {
-            let cache = self.pull_cache.borrow();
-            if let Some((gen, full)) = cache.as_ref() {
-                if *gen == self.generation {
-                    return Ok(full[range].to_vec());
-                }
-            }
-        }
-        let full = self.pull_state()?;
-        let out = full[range.clone()].to_vec();
-        *self.pull_cache.borrow_mut() = Some((self.generation, full));
-        Ok(out)
+        let idx = self.manifest.buffer_for_field(field)?;
+        let b = &self.manifest.buffers[idx];
+        let group = self.download_group(idx)?;
+        let rel = field.offset - b.offset;
+        Ok(group[rel..rel + field.size].to_vec())
     }
 
-    /// Patch ONE layout field and re-upload; every other field keeps its
-    /// current device value. Completes the `pull_field` → mutate →
-    /// `set_field` round trip of a clustering event: only the field data
-    /// crosses the API, and the cached download (if still current) covers
-    /// the untouched remainder of the state.
+    /// Patch ONE layout field; every other group buffer keeps its current
+    /// device value untouched. When the field covers its whole buffer
+    /// (the pool field always does) this is a pure upload; otherwise the
+    /// buffer is downloaded, patched, and re-uploaded — still bounded by
+    /// that one buffer, never the full state.
     pub fn set_field(&mut self, field: &FieldDesc, data: &[f32]) -> Result<()> {
         self.validate_field(field)?;
         if data.len() != field.size {
@@ -146,13 +192,19 @@ impl DlrmSession {
                 field.size
             );
         }
-        let cached = self.pull_cache.get_mut().take();
-        let mut full = match cached {
-            Some((gen, full)) if gen == self.generation => full,
-            _ => self.pull_state()?,
+        let idx = self.manifest.buffer_for_field(field)?;
+        let b = self.manifest.buffers[idx].clone();
+        let buf = if field.offset == b.offset && field.size == b.size {
+            self.upload_group(idx, data)?
+        } else {
+            let mut group = self.download_group(idx)?;
+            let rel = field.offset - b.offset;
+            group[rel..rel + field.size].copy_from_slice(data);
+            self.upload_group(idx, &group)?
         };
-        full[field.offset..field.offset + field.size].copy_from_slice(data);
-        self.set_state(&full)
+        let bufs = self.buffers.as_mut().ok_or_else(|| anyhow!("no state uploaded"))?;
+        bufs[idx] = buf;
+        Ok(())
     }
 
     fn validate(&self, exec: &str, name: &str, dtype: DType, len: usize) -> Result<()> {
@@ -202,44 +254,71 @@ impl DlrmSession {
         }
     }
 
-    /// One fused fwd+bwd+SGD step. The state buffer advances in place.
+    /// One fused fwd+bwd+SGD step. The group buffers advance in place:
+    /// train's tuple root yields one result buffer per group, re-fed
+    /// as-is next step with no host round-trip.
     pub fn train_step(&mut self, dense: &[f32], emb: EmbInput, labels: &[f32]) -> Result<()> {
-        let state = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
         self.validate("train", "dense", DType::F32, dense.len())?;
         self.validate("train", "labels", DType::F32, labels.len())?;
         let spec = &self.manifest.spec;
         let dense_b = self.upload_f32(dense, &[spec.batch, spec.n_dense])?;
         let emb_b = self.emb_buffer("train", &emb)?;
         let labels_b = self.upload_f32(labels, &[spec.batch])?;
-        let outs = self.train.execute_b(&[state, &dense_b, &emb_b, &labels_b])?;
-        let new_state = outs
+        let bufs = self.buffers.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        for d in self.manifest.inputs_for("train")? {
+            match d.name.strip_prefix("state.") {
+                Some(g) => args.push(&bufs[self.manifest.buffer_index(g)?]),
+                None => match d.name.as_str() {
+                    "dense" => args.push(&dense_b),
+                    "emb" => args.push(&emb_b),
+                    "labels" => args.push(&labels_b),
+                    other => bail!("unexpected train input {other:?}"),
+                },
+            }
+        }
+        let outs = self.train.execute_b(&args)?;
+        let results = outs
             .into_iter()
             .next()
-            .and_then(|r| r.into_iter().next())
             .ok_or_else(|| anyhow!("train step returned no buffers"))?;
-        self.state = Some(new_state);
+        if results.len() != self.manifest.buffers.len() {
+            bail!(
+                "train step returned {} buffers, expected {} (one per state group)",
+                results.len(),
+                self.manifest.buffers.len()
+            );
+        }
+        self.buffers = Some(results);
         self.steps_since_upload += 1;
-        self.generation += 1;
-        *self.pull_cache.get_mut() = None;
         Ok(())
     }
 
     /// Read the in-graph metric slots: [loss_sum, examples, steps, last_loss].
+    /// A direct download of the metrics buffer — no executable runs.
     pub fn metrics(&self) -> Result<Vec<f32>> {
-        let state = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
-        let outs = self.readout.execute_b(&[state])?;
-        let lit = outs[0][0].to_literal_sync()?;
-        Ok(lit.to_vec::<f32>()?)
+        self.download_group(self.manifest.buffer_index("metrics")?)
     }
 
     /// Batched prediction: probabilities for `eval_batch` samples.
     pub fn predict(&self, dense: &[f32], emb: EmbInput) -> Result<Vec<f32>> {
-        let state = self.state.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
         self.validate("predict", "dense", DType::F32, dense.len())?;
         let spec = &self.manifest.spec;
         let dense_b = self.upload_f32(dense, &[spec.eval_batch, spec.n_dense])?;
         let emb_b = self.emb_buffer("predict", &emb)?;
-        let outs = self.predict.execute_b(&[state, &dense_b, &emb_b])?;
+        let bufs = self.buffers.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::new();
+        for d in self.manifest.inputs_for("predict")? {
+            match d.name.strip_prefix("state.") {
+                Some(g) => args.push(&bufs[self.manifest.buffer_index(g)?]),
+                None => match d.name.as_str() {
+                    "dense" => args.push(&dense_b),
+                    "emb" => args.push(&emb_b),
+                    other => bail!("unexpected predict input {other:?}"),
+                },
+            }
+        }
+        let outs = self.predict.execute_b(&args)?;
         let lit = outs[0][0].to_literal_sync()?;
         Ok(lit.to_vec::<f32>()?)
     }

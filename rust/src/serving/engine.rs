@@ -368,6 +368,10 @@ pub struct ServeReport {
     /// snapshot bake cost, filled in by callers that bake per run
     pub snapshot_bytes: usize,
     pub bake_secs: f64,
+    /// device state bytes moved at bake time (serve_trained uploads the
+    /// checkpoint's group buffers; pure indexer bakes and mmap boots
+    /// transfer nothing and report 0)
+    pub bake_transfer_bytes: u64,
     /// segment load cost, filled in by callers that boot from a segment
     pub load_secs: f64,
     /// generation transitions observed at the exec thread (hot swaps that
@@ -563,6 +567,7 @@ pub fn run<E: Executor>(
         exec_secs,
         snapshot_bytes: slot.current().1.host_bytes(),
         bake_secs: 0.0,
+        bake_transfer_bytes: 0,
         load_secs: 0.0,
         snapshot_swaps,
         generation: last_gen.unwrap_or(0),

@@ -43,6 +43,7 @@ mod tests {
                 offset: 0,
                 size: 40,
                 init: InitSpec::Normal(0.5),
+                group: "pool".into(),
             },
             FieldDesc {
                 name: "b".into(),
@@ -50,6 +51,7 @@ mod tests {
                 offset: 40,
                 size: 8,
                 init: InitSpec::Zeros,
+                group: "dense".into(),
             },
             FieldDesc {
                 name: "w".into(),
@@ -57,6 +59,7 @@ mod tests {
                 offset: 48,
                 size: 16,
                 init: InitSpec::Uniform(0.1),
+                group: "dense".into(),
             },
         ]
     }

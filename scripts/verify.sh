@@ -62,9 +62,31 @@ assert sync and over, f"need both sync and overlap rows: {[r['name'] for r in ov
 assert min(r["stall_ns"] for r in over) < min(r["stall_ns"] for r in sync), \
     "overlapped event did not reduce the per-event stall"
 assert all(r["stale_steps"] >= 1 for r in over), "overlap rows must report staleness"
+
+# per-group device buffers: every sync_vs_overlap row must report the event
+# wire cost, and it must be pool-bounded — a sync event is one pool download
+# + one pool upload; an overlapped event adds one extra pool download for the
+# snapshot. The dense/metrics tail must never cross the wire during an event.
+for r in ov:
+    for key in ("event_bytes_downloaded", "event_bytes_uploaded",
+                "pool_bytes", "full_state_bytes"):
+        assert isinstance(r.get(key), int) and r[key] > 0, \
+            f"sync_vs_overlap row missing {key}: {r}"
+    assert r["pool_bytes"] < r["full_state_bytes"], \
+        f"pool buffer not smaller than full state (gate is vacuous): {r}"
+    assert r["event_bytes_downloaded"] <= 2 * r["pool_bytes"], \
+        f"event downloaded more than 2x the pool buffer: {r}"
+    assert r["event_bytes_uploaded"] <= r["pool_bytes"], \
+        f"event uploaded more than the pool buffer: {r}"
+for r in sync:
+    assert r["event_bytes_downloaded"] <= r["pool_bytes"], \
+        f"sync event should download the pool exactly once: {r}"
+
 print(f"BENCH_cluster.json OK ({len(results)} results, mode={doc['mode']}, "
       f"overlap stall {min(r['stall_ns'] for r in over)/1e6:.2f} ms vs "
-      f"sync {min(r['stall_ns'] for r in sync)/1e6:.2f} ms)")
+      f"sync {min(r['stall_ns'] for r in sync)/1e6:.2f} ms, "
+      f"event wire cost {ov[0]['event_bytes_downloaded']/1024:.0f} KiB down "
+      f"of {ov[0]['full_state_bytes']/1024:.0f} KiB state)")
 PY
 
   echo "== perf_hot_paths bench (smoke) =="
@@ -144,6 +166,28 @@ print(f"BENCH_serving.json OK ({len(results)} results, mode={doc['mode']}, "
       f"swap pause p99 {hs[0]['swap_pause_ns']/1e6:.2f} ms, "
       f"overload 4x p99 shed {shed4/1e6:.2f} ms vs block {block4/1e6:.2f} ms)")
 PY
+
+  # End-to-end smoke of the per-field (schema v2) artifact convention:
+  # train with an overlapped clustering event (pool-only wire traffic),
+  # bake a trained segment, verify its checksums, and serve from it.
+  # Soft-skips when no compiled artifacts are present — building them
+  # needs the JAX toolchain (`cd python && python -m compile.aot`).
+  echo "== per-field artifact smoke (train → overlapped event → bake → serve) =="
+  art_dir="${CCE_ARTIFACTS:-artifacts}"
+  if [[ -f "$art_dir/index.json" ]]; then
+    bin=target/release/cce
+    smoke_out=$(mktemp -d)
+    "$bin" train --artifact quick_cce --seed 7 --max-batches 96 \
+      --cluster-every 32 --cluster-times 2 --cluster-overlap
+    "$bin" snapshot write --artifact quick_cce --seed 7 --train-steps 48 \
+      --out "$smoke_out/quick.cceseg"
+    "$bin" snapshot inspect "$smoke_out/quick.cceseg" --verify
+    "$bin" serve --artifact quick_cce --seed 7 --requests 64 --workers 1 \
+      --snapshot "$smoke_out/quick.cceseg"
+    rm -rf "$smoke_out"
+  else
+    echo "skipped: no $art_dir/index.json (re-run the compiler to build per-field artifacts)"
+  fi
 fi
 
 echo "verify: OK"

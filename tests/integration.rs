@@ -11,7 +11,7 @@ use cce::data::batch::{BatchIter, Split};
 use cce::data::SyntheticDataset;
 use cce::runtime::session::EmbInput;
 use cce::runtime::{ArtifactStore, DlrmSession};
-use cce::tables::indexer::Indexer;
+use cce::tables::indexer::{Indexer, MethodKind};
 use cce::tables::init::init_state;
 use cce::tables::layout::TablePlan;
 use cce::util::Rng;
@@ -32,7 +32,8 @@ fn smoke_cfg(artifact: &str) -> TrainConfig {
 }
 
 /// Run `n` deterministic train steps (unshuffled train split, skipping
-/// `skip` batches first) against a session + indexer pair.
+/// `skip` batches first) against a session + indexer pair, dispatching
+/// on the indexer's method kind like the trainer does.
 fn step_n(
     session: &mut DlrmSession,
     ix: &Indexer,
@@ -44,11 +45,25 @@ fn step_n(
     let mut it = BatchIter::new(ds, Split::Train, m.spec.batch, None);
     it.skip_batches(skip);
     let mut b = it.alloc_batch();
-    let mut rows = vec![0i32; session.emb_elems("train").unwrap()];
+    let elems = session.emb_elems("train").unwrap();
+    let mut rows = vec![0i32; elems];
+    let mut hashes = vec![0f32; elems];
     for _ in 0..n {
         assert!(it.next_into(&mut b), "ran out of train batches");
-        ix.fill_rowwise(&b.cats, m.spec.batch, &mut rows);
-        session.train_step(&b.dense, EmbInput::Rows(&rows), &b.labels).unwrap();
+        match ix.kind {
+            MethodKind::RowWise => {
+                ix.fill_rowwise(&b.cats, m.spec.batch, &mut rows);
+                session.train_step(&b.dense, EmbInput::Rows(&rows), &b.labels).unwrap();
+            }
+            MethodKind::ElementWise => {
+                ix.fill_elementwise(&b.cats, m.spec.batch, &mut rows);
+                session.train_step(&b.dense, EmbInput::Rows(&rows), &b.labels).unwrap();
+            }
+            MethodKind::Dhe => {
+                ix.fill_dhe(&b.cats, m.spec.batch, &mut hashes);
+                session.train_step(&b.dense, EmbInput::Hashes(&hashes), &b.labels).unwrap();
+            }
+        }
     }
 }
 
@@ -146,16 +161,24 @@ fn full_train_run_is_deterministic() {
 #[test]
 fn field_ranged_transfer_round_trips_every_field() {
     // pull_field must equal the pull_state slice, and set_field must
-    // patch exactly its own range, for EVERY field in the layout — the
-    // contract the field-ranged clustering-event path stands on
+    // patch exactly its own range, for EVERY field in the layout of
+    // EVERY method kind — the contract the field-ranged clustering-event
+    // path stands on, now over per-group device buffers
     let store = store();
-    for seed in [0u64, 7] {
-        let mut session = DlrmSession::open(&store, "smoke_cce").unwrap();
+    let cases = [
+        ("smoke_cce", 0u64),
+        ("smoke_cce", 7),
+        ("smoke_robe", 0),
+        ("smoke_dhe", 0),
+        ("smoke_hash", 0),
+    ];
+    for (artifact, seed) in cases {
+        let mut session = DlrmSession::open(&store, artifact).unwrap();
         let m = session.manifest.clone();
         let mut rng = Rng::new(seed);
         session.set_state(&init_state(&m.layout, m.state_size, &mut rng)).unwrap();
         // a few real steps so the device state isn't the init vector and
-        // the pull cache sees invalidation by train_step
+        // the buffers being sliced are post-training tuple results
         let ds = SyntheticDataset::new(store.dataset(&m.dataset, seed).unwrap());
         let ix = cce::coordinator::trainer::build_indexer(&m, seed).unwrap();
         step_n(&mut session, &ix, &ds, 0, 3);
@@ -188,11 +211,14 @@ fn field_ranged_transfer_round_trips_every_field() {
         let mut bogus = m.layout[0].clone();
         bogus.name = "nope".into();
         assert!(session.pull_field(&bogus).is_err());
-        let pool = m.field("pool").unwrap().clone();
-        assert!(session.set_field(&pool, &vec![0.0; pool.size + 1]).is_err());
-        let mut skewed = pool.clone();
+        let first = m.layout[0].clone();
+        assert!(session.set_field(&first, &vec![0.0; first.size + 1]).is_err());
+        let mut skewed = first.clone();
         skewed.offset += 1;
         assert!(session.pull_field(&skewed).is_err(), "stale descriptor must be rejected");
+        let mut regrouped = first.clone();
+        regrouped.group = "metrics".into();
+        assert!(session.pull_field(&regrouped).is_err(), "wrong group tag must be rejected");
     }
 }
 
@@ -243,6 +269,108 @@ fn field_ranged_event_path_matches_full_round_trip() {
     step_n(&mut sa, &ixa, &dsa, 12, 5);
     step_n(&mut sb, &ixb, &dsb, 12, 5);
     assert_eq!(sa.pull_state().unwrap(), sb.pull_state().unwrap(), "post-event training diverged");
+}
+
+#[test]
+fn event_round_trip_moves_pool_bytes_only() {
+    // the tentpole payoff, pinned byte-for-byte: with per-group device
+    // buffers a field round trip costs the field's buffer on the wire,
+    // never the full state
+    let store = store();
+    let mut session = DlrmSession::open(&store, "smoke_cce").unwrap();
+    let m = session.manifest.clone();
+    let full_bytes = m.state_size as u64 * 4;
+    let pool_bytes = m.buffer("pool").unwrap().bytes();
+    assert!(pool_bytes < full_bytes, "smoke artifact must have a dense share");
+
+    assert_eq!(session.transfer_bytes(), (0, 0), "fresh session has moved nothing");
+    let mut rng = Rng::new(0);
+    session.set_state(&init_state(&m.layout, m.state_size, &mut rng)).unwrap();
+    assert_eq!(session.transfer_bytes(), (0, full_bytes), "set_state uploads each group once");
+
+    let pf = m.field("pool").unwrap().clone();
+    let pool = session.pull_field(&pf).unwrap();
+    assert_eq!(
+        session.transfer_bytes(),
+        (pool_bytes, full_bytes),
+        "pull_field downloads the pool buffer only"
+    );
+    session.set_field(&pf, &pool).unwrap();
+    assert_eq!(
+        session.transfer_bytes(),
+        (pool_bytes, full_bytes + pool_bytes),
+        "whole-buffer set_field is a pure upload"
+    );
+
+    // metrics is a 16-byte buffer download, not a readout execution
+    let met = session.metrics().unwrap();
+    assert_eq!(met.len(), m.metric_names.len());
+    let mb = m.buffer("metrics").unwrap().bytes();
+    assert_eq!(session.transfer_bytes(), (pool_bytes + mb, full_bytes + pool_bytes));
+
+    // per-batch train inputs are not state: a step moves no state bytes
+    let ds = SyntheticDataset::new(store.dataset(&m.dataset, 0).unwrap());
+    let ix = cce::coordinator::trainer::build_indexer(&m, 0).unwrap();
+    let before = session.transfer_bytes();
+    step_n(&mut session, &ix, &ds, 0, 2);
+    assert_eq!(session.transfer_bytes(), before, "train_step must not move state");
+}
+
+#[test]
+fn train_outcome_reports_pool_only_event_transfer() {
+    // synchronous events: exactly 1 pool download + 1 pool upload each —
+    // the TrainOutcome accounting the bench and verify.sh gate on
+    let store = store();
+    let cfg = TrainConfig {
+        artifact: "smoke_cce".into(),
+        epochs: 1,
+        cluster_times: 2,
+        cluster_every: 24,
+        eval_every: 32,
+        ..Default::default()
+    };
+    let out = train(&store, &cfg).unwrap();
+    assert_eq!(out.clusterings_run, 2);
+    let m = store.manifest("smoke_cce").unwrap();
+    assert_eq!(out.pool_bytes, m.buffer("pool").unwrap().bytes());
+    assert!(out.pool_bytes < m.state_size as u64 * 4);
+    assert_eq!(out.event_bytes_downloaded, 2 * out.pool_bytes);
+    assert_eq!(out.event_bytes_uploaded, 2 * out.pool_bytes);
+    assert!(out.bytes_downloaded >= out.event_bytes_downloaded);
+    assert!(out.bytes_uploaded >= out.event_bytes_uploaded);
+}
+
+#[test]
+fn overlapped_event_transfer_stays_pool_bounded() {
+    // overlapped events cost at most 2 pool downloads + 1 pool upload
+    // each (snapshot pull + apply's pull/patch); an abandoned in-flight
+    // event adds its snapshot download but no upload
+    let store = store();
+    let cfg = TrainConfig {
+        artifact: "smoke_cce".into(),
+        epochs: 2,
+        cluster_times: 2,
+        cluster_every: 24,
+        eval_every: 32,
+        cluster_overlap: true,
+        ..Default::default()
+    };
+    let out = train(&store, &cfg).unwrap();
+    let events = 2u64; // snapshots taken, whether or not each one landed
+    assert!(out.pool_bytes > 0);
+    assert!(
+        out.event_bytes_downloaded <= 2 * events * out.pool_bytes,
+        "event downloads {} exceed 2 pool pulls per event ({} each)",
+        out.event_bytes_downloaded,
+        out.pool_bytes
+    );
+    assert!(
+        out.event_bytes_uploaded <= events * out.pool_bytes,
+        "event uploads {} exceed 1 pool upload per event ({} each)",
+        out.event_bytes_uploaded,
+        out.pool_bytes
+    );
+    assert!(out.event_bytes_downloaded >= out.pool_bytes, "at least one snapshot pull");
 }
 
 #[test]
@@ -424,6 +552,8 @@ fn serve_loop_reports_sane_numbers() {
     assert!(rep.latency.p95_ns >= rep.latency.p50_ns);
     assert!(rep.queue_wait.p50_ns <= rep.latency.p50_ns);
     assert!(rep.snapshot_bytes > 0);
+    // pure indexer bake: the maps are baked host-side, no device transfer
+    assert_eq!(rep.bake_transfer_bytes, 0);
 }
 
 #[test]

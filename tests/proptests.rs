@@ -703,6 +703,7 @@ fn prop_cluster_event_invariant_across_thread_counts() {
                 offset: 0,
                 size,
                 init: InitSpec::Zeros,
+                group: "pool".into(),
             };
             (state, field, ix)
         };
