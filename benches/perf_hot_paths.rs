@@ -16,6 +16,9 @@
 //! cold-start and swap-pause are machine-trackable; `scripts/verify.sh`
 //! smoke-runs this bench (`--smoke`) and fails if `cold_start_ns` /
 //! `swap_pause_ns` go missing or the mmap load stops beating the bake.
+//! The `obs_overhead` group prices the telemetry subsystem (spans + trace
+//! ring vs `obs::set_enabled(false)`) and verify.sh fails above the 3%
+//! budget docs/OBSERVABILITY.md commits to.
 //!
 //! The segment group and all L3 groups are store-independent (shapes are
 //! inlined); groups needing compiled artifacts are skipped without
@@ -494,6 +497,65 @@ fn main() -> anyhow::Result<()> {
                 ));
             }
         }
+    }
+
+    // ---------------- serving: observability overhead --------------------
+    // the ≤3% budget docs/OBSERVABILITY.md commits to: the same engine run
+    // with spans + trace ring hot vs `obs::set_enabled(false)`. Counters
+    // and gauges stay on in BOTH runs — they are the always-on baseline
+    // the reports are derived from, not optional instrumentation.
+    {
+        let ds = bench_dataset(&kaggle);
+        let ix = bench_indexer(&kaggle, kaggle_cap);
+        let slot = SnapshotSlot::new(ServingSnapshot::bake(&ix));
+        let cfg = EngineConfig {
+            workers: 4,
+            max_batch: 256,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+            admission: AdmissionPolicy::Block,
+            pace: None,
+        };
+        let obs_requests = if smoke { 6_000 } else { 20_000 };
+        let run_once = || -> anyhow::Result<f64> {
+            let mut exec = CountingExecutor::new(256);
+            let mut traffic = TrafficGen::new(&ds, 0.99, 11);
+            traffic.pregenerate(obs_requests);
+            Ok(serving::run(&mut exec, &slot, traffic, &cfg, obs_requests)?.throughput_rps)
+        };
+        // best-of-3 after a warmup run per mode: throughput is noisy and
+        // the gate is a ratio, so damp scheduler jitter on both sides
+        cce::obs::trace::enable(cce::obs::trace::DEFAULT_RING_CAP);
+        cce::obs::set_enabled(true);
+        let _ = run_once()?;
+        let mut on = 0f64;
+        for _ in 0..3 {
+            on = on.max(run_once()?);
+        }
+        cce::obs::set_enabled(false);
+        let _ = run_once()?;
+        let mut off = 0f64;
+        for _ in 0..3 {
+            off = off.max(run_once()?);
+        }
+        cce::obs::set_enabled(true);
+        let overhead = (off - on).max(0.0) / off.max(1.0);
+        let label = "obs overhead kaggle-small (spans+trace vs disabled)".to_string();
+        t.row(vec![
+            label.clone(),
+            format!("instrumented {:.0}k req/s, disabled {:.0}k req/s", on / 1e3, off / 1e3),
+            format!("{:.2}% overhead", overhead * 100.0),
+        ]);
+        results.push(stat_json(
+            &label,
+            &TimingStats::empty(),
+            vec![
+                ("group", Json::from("obs_overhead")),
+                ("throughput_instrumented_rps", Json::from(on)),
+                ("throughput_disabled_rps", Json::from(off)),
+                ("overhead_frac", Json::from(overhead)),
+            ],
+        ));
     }
 
     // ---------------- L3: batch generation ------------------------------

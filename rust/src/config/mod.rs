@@ -55,6 +55,16 @@ pub struct TrainConfig {
     /// generations of this artifact from `snapshot_dir` (the generation
     /// just written is never pruned); 0 = keep every generation
     pub snapshot_keep: usize,
+    /// append a JSONL metrics snapshot to this file every
+    /// `stats_interval_ms` during the run (docs/OBSERVABILITY.md);
+    /// empty = off
+    pub stats_out: String,
+    /// interval between stats snapshots (milliseconds)
+    pub stats_interval_ms: u64,
+    /// record spans (train.step, train.event.*, train.snapshot.bake) into
+    /// the bounded trace ring and dump a Chrome `trace.json` here after
+    /// training; empty = tracing off
+    pub trace_out: String,
 }
 
 impl Default for TrainConfig {
@@ -77,6 +87,9 @@ impl Default for TrainConfig {
             pipeline_depth: 4,
             snapshot_dir: String::new(),
             snapshot_keep: 0,
+            stats_out: String::new(),
+            stats_interval_ms: 500,
+            trace_out: String::new(),
         }
     }
 }
@@ -108,6 +121,9 @@ impl TrainConfig {
         self.pipeline_depth = args.usize_or("queue-depth", self.pipeline_depth);
         self.snapshot_dir = args.str_or("snapshot-dir", &self.snapshot_dir);
         self.snapshot_keep = args.usize_or("snapshot-keep", self.snapshot_keep);
+        self.stats_out = args.str_or("stats-out", &self.stats_out);
+        self.stats_interval_ms = args.u64_or("stats-interval-ms", self.stats_interval_ms);
+        self.trace_out = args.str_or("trace-out", &self.trace_out);
         self
     }
 
@@ -135,6 +151,9 @@ impl TrainConfig {
                 "pipeline_depth" => c.pipeline_depth = v.as_u64()? as usize,
                 "snapshot_dir" => c.snapshot_dir = v.as_str().to_string(),
                 "snapshot_keep" => c.snapshot_keep = v.as_u64()? as usize,
+                "stats_out" => c.stats_out = v.as_str().to_string(),
+                "stats_interval_ms" => c.stats_interval_ms = v.as_u64()?,
+                "trace_out" => c.trace_out = v.as_str().to_string(),
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -147,6 +166,9 @@ impl TrainConfig {
         }
         if self.pipeline_depth == 0 || self.pipeline_workers == 0 {
             bail!("pipeline workers/depth must be ≥ 1");
+        }
+        if !self.stats_out.is_empty() && self.stats_interval_ms == 0 {
+            bail!("stats_interval_ms must be ≥ 1 when stats_out is set");
         }
         Ok(())
     }
@@ -180,7 +202,8 @@ mod tests {
     fn toml_round_trip() {
         let doc = TomlDoc::parse(
             "[train]\nartifact = \"smoke_cce\"\nepochs = 2\nearly_stop = true\nshuffle = false\n\
-             cluster_overlap = true\nsnapshot_dir = \"snaps\"\nsnapshot_keep = 2\n",
+             cluster_overlap = true\nsnapshot_dir = \"snaps\"\nsnapshot_keep = 2\n\
+             stats_out = \"stats.jsonl\"\ntrace_out = \"trace.json\"\n",
         )
         .unwrap();
         let c = TrainConfig::from_toml(&doc).unwrap();
@@ -191,6 +214,12 @@ mod tests {
         assert!(c.cluster_overlap);
         assert_eq!(c.snapshot_dir, "snaps");
         assert_eq!(c.snapshot_keep, 2);
+        assert_eq!(c.stats_out, "stats.jsonl");
+        assert_eq!(c.trace_out, "trace.json");
+        assert!(c.validate().is_ok());
+        // a stats file with a zero interval would busy-write: rejected
+        let bad = TrainConfig { stats_interval_ms: 0, ..c };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -57,6 +57,18 @@ pub struct ServeConfig {
     /// accepts. Paced traffic stamps each request with its intended emission
     /// time, which is what makes overload visible in block mode
     pub pace_rps: f64,
+    /// bind a Prometheus-text `/metrics` endpoint here for the run's
+    /// duration (e.g. "127.0.0.1:9184"; port 0 picks an ephemeral port,
+    /// logged at startup); empty = no endpoint
+    pub metrics_addr: String,
+    /// append a JSONL metrics snapshot to this file every
+    /// `stats_interval_ms` (docs/OBSERVABILITY.md); empty = off
+    pub stats_out: String,
+    /// interval between stats snapshots (milliseconds)
+    pub stats_interval_ms: u64,
+    /// record spans into the bounded trace ring and dump a Chrome
+    /// `trace.json` here at the end of the run; empty = tracing off
+    pub trace_out: String,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +89,10 @@ impl Default for ServeConfig {
             admission: "block".into(),
             deadline_us: 0,
             pace_rps: 0.0,
+            metrics_addr: String::new(),
+            stats_out: String::new(),
+            stats_interval_ms: 500,
+            trace_out: String::new(),
         }
     }
 }
@@ -99,6 +115,10 @@ impl ServeConfig {
         self.admission = args.str_or("admission", &self.admission);
         self.deadline_us = args.u64_or("deadline-us", self.deadline_us);
         self.pace_rps = args.f64_or("pace-rps", self.pace_rps);
+        self.metrics_addr = args.str_or("metrics-addr", &self.metrics_addr);
+        self.stats_out = args.str_or("stats-out", &self.stats_out);
+        self.stats_interval_ms = args.u64_or("stats-interval-ms", self.stats_interval_ms);
+        self.trace_out = args.str_or("trace-out", &self.trace_out);
         self
     }
 
@@ -122,6 +142,10 @@ impl ServeConfig {
                 "admission" => c.admission = v.as_str().to_string(),
                 "deadline_us" => c.deadline_us = v.as_u64()?,
                 "pace_rps" => c.pace_rps = v.as_f64()?,
+                "metrics_addr" => c.metrics_addr = v.as_str().to_string(),
+                "stats_out" => c.stats_out = v.as_str().to_string(),
+                "stats_interval_ms" => c.stats_interval_ms = v.as_u64()?,
+                "trace_out" => c.trace_out = v.as_str().to_string(),
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }
@@ -188,6 +212,9 @@ impl ServeConfig {
         }
         if !self.snapshot_dir.is_empty() && self.watch_poll_ms == 0 {
             bail!("watch_poll_ms must be ≥ 1 when snapshot_dir is set");
+        }
+        if !self.stats_out.is_empty() && self.stats_interval_ms == 0 {
+            bail!("stats_interval_ms must be ≥ 1 when stats_out is set");
         }
         Ok(())
     }
@@ -301,6 +328,37 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = ServeConfig { watch_poll_ms: 0, ..c };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn observability_knobs_layer_and_validate() {
+        let doc = TomlDoc::parse(
+            "[serve]\nmetrics_addr = \"127.0.0.1:9184\"\nstats_out = \"stats.jsonl\"\n\
+             stats_interval_ms = 250\ntrace_out = \"trace.json\"\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&doc).unwrap();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.metrics_addr, "127.0.0.1:9184");
+        assert_eq!(c.stats_out, "stats.jsonl");
+        assert_eq!(c.stats_interval_ms, 250);
+        assert_eq!(c.trace_out, "trace.json");
+        // CLI overrides win
+        let args = Args::parse(
+            "serve --metrics-addr 127.0.0.1:0 --trace-out other.json"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let c = c.apply_args(&args);
+        assert_eq!(c.metrics_addr, "127.0.0.1:0");
+        assert_eq!(c.trace_out, "other.json");
+        // a stats file with a zero interval would busy-write: rejected
+        let bad = ServeConfig { stats_interval_ms: 0, ..c };
+        assert!(bad.validate().is_err());
+        // no stats file → the interval is irrelevant
+        let ok = ServeConfig { stats_interval_ms: 0, ..ServeConfig::default() };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]

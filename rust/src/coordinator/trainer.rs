@@ -168,6 +168,8 @@ fn write_snapshot_generation(
     }
     let t0 = Instant::now();
     let generation = out.snapshot_files.len() as u64;
+    let mut sp = crate::span!("train.snapshot.bake");
+    sp.attr("generation", generation);
     let snap = crate::serving::ServingSnapshot::bake(indexer);
     std::fs::create_dir_all(dir)
         .with_context(|| format!("create snapshot dir {dir}"))?;
@@ -319,6 +321,12 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
     let mut prev_epoch_best = f64::INFINITY;
     let t_start = Instant::now();
     let mut eval_secs = 0f64;
+    // registry mirrors, bumped beside the TrainOutcome fields they shadow
+    // (tests/obs_metrics.rs pins the deltas against the outcome): the live
+    // stats stream and the final report come from the same source sites
+    let m_steps = crate::obs_counter!("train.steps");
+    let m_events = crate::obs_counter!("train.cluster.events");
+    let m_stale = crate::obs_counter!("train.cluster.stale_steps");
     let pool_field = m.layout.iter().find(|f| f.name == "pool").cloned();
 
     // overlapped clustering: one persistent background worker, at most
@@ -346,6 +354,7 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
         while let Some(b) = pipe.next() {
             // padding in the final train batch: train on it anyway (the
             // duplicated sample adds negligible bias at these scales)
+            let sp_step = crate::span!("train.step");
             match indexer.kind {
                 MethodKind::RowWise => {
                     indexer.fill_rowwise(&b.cats, batch, &mut rows);
@@ -360,9 +369,11 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                     session.train_step(&b.dense, EmbInput::Hashes(&hashes), &b.labels)?;
                 }
             }
+            drop(sp_step);
             global_step += 1;
             batch_in_epoch += 1;
             samples_trained += b.real;
+            m_steps.inc();
 
             // apply a finished overlapped event at this step boundary
             // BEFORE deciding whether a new event is due — a boundary
@@ -373,6 +384,7 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                     Some(computed) => {
                         let t0 = Instant::now();
                         let tb = session.transfer_bytes();
+                        let mut sp = crate::span!("train.event.apply");
                         let pf =
                             pool_field.as_ref().expect("rowwise artifact without pool field");
                         let mut res = apply_computed(&mut session, pf, &mut indexer, computed)?;
@@ -383,6 +395,14 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                         out.cluster_stale_steps.push(res.stale_steps);
                         out.cluster_secs += t0.elapsed().as_secs_f64();
                         out.cluster_event_secs += p.started_at.elapsed().as_secs_f64();
+                        // trace attrs carry the same per-event numbers the
+                        // outcome (and BENCH_cluster.json) report
+                        sp.attr("event_bytes_downloaded", d - tb.0);
+                        sp.attr("event_bytes_uploaded", u - tb.1);
+                        sp.attr("stale_steps", res.stale_steps as u64);
+                        drop(sp);
+                        m_events.inc();
+                        m_stale.add(res.stale_steps as u64);
                         log::info!(
                             "clustering #{} applied at step {global_step}: {} subtables, \
                              inertia {:.3e}, {} steps on stale maps",
@@ -424,13 +444,18 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                         // bytes only, never the dense-layer share.
                         let t0 = Instant::now();
                         let tb = session.transfer_bytes();
+                        let mut sp = crate::span!("train.event.snapshot");
                         let pool = session.pull_field(pf)?;
                         let (d, u) = session.transfer_bytes();
                         out.event_bytes_downloaded += d - tb.0;
                         out.event_bytes_uploaded += u - tb.1;
+                        sp.attr("event_bytes_downloaded", d - tb.0);
+                        drop(sp);
                         let ix_snapshot = indexer.clone();
-                        let handle =
-                            worker.submit(move || compute_cluster(&pool, &ix_snapshot, &cc));
+                        let handle = worker.submit(move || {
+                            let _sp = crate::span!("train.event.compute");
+                            compute_cluster(&pool, &ix_snapshot, &cc)
+                        });
                         out.clusterings_run += 1;
                         out.cluster_secs += t0.elapsed().as_secs_f64();
                         pending = Some(PendingCluster {
@@ -454,15 +479,25 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
                     // wire (1 download + 1 upload)
                     let t0 = Instant::now();
                     let tb = session.transfer_bytes();
+                    let sp_snap = crate::span!("train.event.snapshot");
                     let mut pool = session.pull_field(pf)?;
+                    drop(sp_snap);
+                    let sp_compute = crate::span!("train.event.compute");
                     let computed = compute_cluster(&pool, &indexer, &cc);
+                    drop(sp_compute);
+                    let mut sp_apply = crate::span!("train.event.apply");
                     let res = apply_cluster(&mut pool, &mut indexer, computed);
                     session.set_field(pf, &pool)?;
                     let (d, u) = session.transfer_bytes();
                     out.event_bytes_downloaded += d - tb.0;
                     out.event_bytes_uploaded += u - tb.1;
+                    sp_apply.attr("event_bytes_downloaded", d - tb.0);
+                    sp_apply.attr("event_bytes_uploaded", u - tb.1);
+                    sp_apply.attr("stale_steps", 0);
+                    drop(sp_apply);
                     out.clusterings_run += 1;
                     out.cluster_stale_steps.push(0);
+                    m_events.inc();
                     let stall = t0.elapsed().as_secs_f64();
                     out.cluster_secs += stall;
                     out.cluster_event_secs += stall;
@@ -547,6 +582,8 @@ pub fn train(store: &ArtifactStore, cfg: &TrainConfig) -> Result<TrainOutcome> {
             out.cluster_stale_steps.push(stale);
             out.cluster_secs += t0.elapsed().as_secs_f64();
             out.cluster_event_secs += p.started_at.elapsed().as_secs_f64();
+            m_events.inc();
+            m_stale.add(stale as u64);
             log::info!(
                 "clustering #{} applied after training ended ({stale} steps on stale maps)",
                 out.clusterings_run

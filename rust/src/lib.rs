@@ -32,6 +32,7 @@ pub mod hashing;
 pub mod kmeans;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod serving;
 pub mod tables;

@@ -57,6 +57,60 @@ fn store(args: &Args) -> Result<ArtifactStore> {
     ArtifactStore::open(dir)
 }
 
+/// The observability sinks a run asked for (`--metrics-addr`,
+/// `--stats-out`, `--trace-out`): started before the run, stopped — and
+/// the trace ring dumped — after it. See docs/OBSERVABILITY.md.
+struct ObsSinks {
+    server: Option<cce::obs::MetricsServer>,
+    emitter: Option<cce::obs::StatsEmitter>,
+    trace_out: String,
+}
+
+fn start_obs(
+    metrics_addr: &str,
+    stats_out: &str,
+    stats_interval_ms: u64,
+    trace_out: &str,
+) -> Result<ObsSinks> {
+    // enable tracing BEFORE the run so the ring's epoch precedes every span
+    if !trace_out.is_empty() {
+        cce::obs::trace::enable(cce::obs::trace::DEFAULT_RING_CAP);
+    }
+    let server = if metrics_addr.is_empty() {
+        None
+    } else {
+        let s = cce::obs::MetricsServer::start(metrics_addr)?;
+        // port 0 binds an ephemeral port; this line is how callers learn it
+        log::info!("metrics endpoint listening on http://{}/metrics", s.addr);
+        Some(s)
+    };
+    let emitter = if stats_out.is_empty() {
+        None
+    } else {
+        Some(cce::obs::StatsEmitter::start(
+            stats_out.into(),
+            std::time::Duration::from_millis(stats_interval_ms),
+        )?)
+    };
+    Ok(ObsSinks { server, emitter, trace_out: trace_out.to_string() })
+}
+
+impl ObsSinks {
+    fn finish(self) -> Result<()> {
+        if let Some(e) = self.emitter {
+            e.stop();
+        }
+        if let Some(s) = self.server {
+            s.stop();
+        }
+        if !self.trace_out.is_empty() {
+            let n = cce::obs::trace::dump(std::path::Path::new(&self.trace_out))?;
+            log::info!("wrote {n} trace events to {}", self.trace_out);
+        }
+        Ok(())
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let store = store(args)?;
     let mut cfg = TrainConfig::default();
@@ -65,6 +119,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let cfg = cfg.apply_args(args);
     args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+    cfg.validate()?;
+    let obs = start_obs("", &cfg.stats_out, cfg.stats_interval_ms, &cfg.trace_out)?;
     let out = cce::coordinator::train(&store, &cfg)?;
     let mut t = Table::new(
         &format!("train {} (seed {})", out.artifact, out.seed),
@@ -119,6 +175,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    obs.finish()?;
     Ok(())
 }
 
@@ -287,6 +344,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = cfg.apply_args(args);
     args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
     cfg.validate()?;
+    let obs = start_obs(&cfg.metrics_addr, &cfg.stats_out, cfg.stats_interval_ms, &cfg.trace_out)?;
     let mut session = cce::runtime::DlrmSession::open(&store, &cfg.artifact)?;
     let m = session.manifest.clone();
     let ds = cce::data::SyntheticDataset::new(store.dataset(&m.dataset, cfg.seed)?);
@@ -405,6 +463,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ]);
     }
     t.print();
+    obs.finish()?;
     Ok(())
 }
 

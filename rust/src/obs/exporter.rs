@@ -1,0 +1,284 @@
+//! Registry exporters: Prometheus text over a hand-rolled
+//! `std::net::TcpListener` HTTP endpoint, and a periodic JSONL stats
+//! emitter (one registry snapshot per line).
+//!
+//! Metric names are dotted (`serve.requests.offered`); the Prometheus
+//! renderer maps them to `cce_serve_requests_offered` (dots → `_`,
+//! `cce_` prefix). Histograms render cumulative `_bucket{le="..."}`
+//! lines for non-empty buckets plus `+Inf`, `_sum`, `_count` — the
+//! standard text exposition, hand-rolled because no HTTP/metrics crates
+//! exist offline (docs/OBSERVABILITY.md).
+
+use crate::obs::registry::{bucket_lower, registry, HistSnapshot, MetricValue, N_BUCKETS};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 4);
+    out.push_str("cce_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn render_hist(out: &mut String, pn: &str, h: &HistSnapshot) {
+    out.push_str(&format!("# TYPE {pn} histogram\n"));
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        // upper bound of bucket i = last value that maps into it
+        let le = if i + 1 < N_BUCKETS { (bucket_lower(i + 1) - 1).to_string() } else { "+Inf".to_string() };
+        out.push_str(&format!("{pn}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("{pn}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+    out.push_str(&format!("{pn}_sum {}\n", h.sum));
+    out.push_str(&format!("{pn}_count {}\n", h.count));
+}
+
+/// Render the whole registry in Prometheus text exposition format;
+/// deterministic (name-ordered) for a given set of cell values.
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    for (name, v) in registry().scrape() {
+        let pn = prom_name(&name);
+        match v {
+            MetricValue::Counter(c) => {
+                out.push_str(&format!("# TYPE {pn} counter\n{pn} {c}\n"));
+            }
+            MetricValue::Gauge(g) => {
+                out.push_str(&format!("# TYPE {pn} gauge\n{pn} {g}\n"));
+            }
+            MetricValue::Histogram(h) => render_hist(&mut out, &pn, &h),
+        }
+    }
+    out
+}
+
+/// One registry snapshot as a flat JSON object: counters and gauges by
+/// dotted name; histograms contribute `<name>.count`, `<name>.sum`, and
+/// bucket-resolution `<name>.p50` / `<name>.p99`.
+pub fn stats_snapshot(t_ms: u64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("t_ms".to_string(), Json::Num(t_ms as f64));
+    for (name, v) in registry().scrape() {
+        match v {
+            MetricValue::Counter(c) => {
+                m.insert(name, Json::Num(c as f64));
+            }
+            MetricValue::Gauge(g) => {
+                m.insert(name, Json::Num(g as f64));
+            }
+            MetricValue::Histogram(h) => {
+                m.insert(format!("{name}.count"), Json::Num(h.count as f64));
+                m.insert(format!("{name}.sum"), Json::Num(h.sum as f64));
+                m.insert(format!("{name}.p50"), Json::Num(h.quantile(0.5) as f64));
+                m.insert(format!("{name}.p99"), Json::Num(h.quantile(0.99) as f64));
+            }
+        }
+    }
+    Json::Obj(m)
+}
+
+/// Minimal HTTP/1.1 server for `GET /metrics`. One accept loop thread,
+/// one short-lived response per connection — a scrape endpoint, not a
+/// web server.
+pub struct MetricsServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+fn respond(mut stream: TcpStream) {
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    let mut buf = [0u8; 1024];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let req = String::from_utf8_lossy(&buf[..n]);
+    let line = req.lines().next().unwrap_or("");
+    let ok = line.starts_with("GET /metrics") || line.starts_with("GET / ");
+    let (status, body) = if ok {
+        ("200 OK", render_prometheus())
+    } else {
+        ("404 Not Found", "only GET /metrics is served\n".to_string())
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes()).ok();
+}
+
+impl MetricsServer {
+    /// Bind `addr` (port 0 picks a free port — the bound address is in
+    /// `self.addr`) and serve scrapes until `stop()`.
+    pub fn start(addr: &str) -> Result<MetricsServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding metrics endpoint {addr}"))?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("cce-metrics".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    // ORDERING: Relaxed — the flag is a plain shutdown
+                    // signal; stop() wakes the accept loop with its own
+                    // connection after setting it, so the loop always
+                    // observes the store on that wake-up pass.
+                    if stop2.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        respond(stream);
+                    }
+                }
+            })?;
+        log::info!("metrics endpoint listening on http://{bound}/metrics");
+        Ok(MetricsServer { addr: bound, stop, handle: Some(handle) })
+    }
+
+    /// Signal the accept loop and join it.
+    pub fn stop(mut self) {
+        // ORDERING: Relaxed — see the accept loop; the wake-up connection
+        // below is what guarantees the loop re-checks the flag.
+        self.stop.store(true, Ordering::Relaxed);
+        // unblock the accept() by connecting once
+        TcpStream::connect(self.addr).ok();
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Periodic JSONL stats emitter: one `stats_snapshot` line per interval,
+/// plus a final line on stop so short runs still produce output.
+pub struct StatsEmitter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl StatsEmitter {
+    pub fn start(path: PathBuf, interval: Duration) -> Result<StatsEmitter> {
+        let mut file = std::fs::File::create(&path)
+            .with_context(|| format!("creating stats stream {}", path.display()))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let t0 = Instant::now();
+        let handle = std::thread::Builder::new()
+            .name("cce-stats".to_string())
+            .spawn(move || {
+                let tick = Duration::from_millis(20).min(interval);
+                let mut next = t0 + interval;
+                loop {
+                    // ORDERING: Relaxed — plain shutdown flag; the final
+                    // snapshot below is written after the load observes
+                    // it, and the writer thread is joined before the
+                    // caller reads the file.
+                    let stopping = stop2.load(Ordering::Relaxed);
+                    if !stopping && Instant::now() < next {
+                        std::thread::sleep(tick);
+                        continue;
+                    }
+                    let line = stats_snapshot(t0.elapsed().as_millis() as u64).to_string();
+                    if let Err(e) = writeln!(file, "{line}") {
+                        log::warn!("stats emitter: write failed: {e}");
+                        return;
+                    }
+                    if stopping {
+                        return;
+                    }
+                    next += interval;
+                }
+            })?;
+        log::info!("stats emitter writing to {} every {} ms", path.display(), interval.as_millis());
+        Ok(StatsEmitter { stop, handle: Some(handle) })
+    }
+
+    /// Flush a final snapshot and join the emitter thread.
+    pub fn stop(mut self) {
+        // ORDERING: Relaxed — see the emitter loop.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    #[test]
+    fn prometheus_rendering_is_wellformed() {
+        let c = registry().counter("test.prom.counter");
+        c.add(5);
+        registry().gauge("test.prom.gauge").set(9);
+        let h = registry().histogram("test.prom.hist");
+        h.record_always(100);
+        h.record_always(1_000_000);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE cce_test_prom_counter counter"));
+        assert!(text.contains("cce_test_prom_gauge 9"));
+        assert!(text.contains("cce_test_prom_hist_count"));
+        assert!(text.contains("cce_test_prom_hist_bucket{le=\"+Inf\"}"));
+        // every non-comment line is `name[{labels}] integer`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("metric line without value");
+            val.parse::<u64>().unwrap_or_else(|_| panic!("non-integer value in {line:?}"));
+        }
+    }
+
+    #[test]
+    fn metrics_server_serves_scrapes_on_an_ephemeral_port() {
+        registry().counter("test.http.counter").add(3);
+        let srv = MetricsServer::start("127.0.0.1:0").unwrap();
+        let mut stream = TcpStream::connect(srv.addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        stream.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "bad response: {resp:.60}");
+        assert!(resp.contains("cce_test_http_counter"), "scrape missing counter");
+
+        let mut bad = TcpStream::connect(srv.addr).unwrap();
+        bad.write_all(b"GET /nope HTTP/1.1\r\n\r\n").unwrap();
+        let mut resp404 = String::new();
+        bad.read_to_string(&mut resp404).unwrap();
+        assert!(resp404.starts_with("HTTP/1.1 404"));
+        srv.stop();
+    }
+
+    #[test]
+    fn stats_emitter_writes_parseable_jsonl() {
+        registry().counter("test.stats.counter").add(2);
+        let dir = TempDir::new("obs_stats");
+        let path = dir.path().join("stats.jsonl");
+        let em = StatsEmitter::start(path.clone(), Duration::from_millis(10)).unwrap();
+        std::thread::sleep(Duration::from_millis(35));
+        em.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(!lines.is_empty(), "emitter wrote no snapshots");
+        for line in &lines {
+            let j = Json::parse(line).expect("stats line is not valid JSON");
+            assert!(j.f64_field("t_ms").is_ok(), "line without t_ms: {line}");
+            assert!(j.get("test.stats.counter").is_some(), "counter missing from snapshot");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Live telemetry: metrics registry, tracing spans, and exporters.
+//!
+//! See docs/OBSERVABILITY.md for the metric naming scheme, the span
+//! taxonomy, endpoint formats, and the overhead budget (the
+//! `obs_overhead` group in `benches/perf_hot_paths.rs` gates the
+//! instrumented-vs-disabled engine throughput at ≤3%).
+//!
+//! Layering:
+//! * [`registry`] — process-global named counters / gauges /
+//!   log-linear histograms, recorded through per-thread atomic shards
+//!   and merged deterministically on scrape.
+//! * [`span`] — `span!("name")` RAII guards feeding `span.<name>.ns`
+//!   histograms and, when enabled, the Chrome-trace ring in [`trace`].
+//! * [`exporter`] — `GET /metrics` Prometheus text endpoint
+//!   (`--metrics-addr`) and the periodic JSONL stats stream
+//!   (`--stats-out`).
+//!
+//! Counters and gauges are always on; spans / histograms / the trace
+//! ring honor [`set_enabled`] so their cost can be switched off and
+//! measured.
+
+pub mod exporter;
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use exporter::{render_prometheus, stats_snapshot, MetricsServer, StatsEmitter};
+pub use registry::{
+    enabled, registry, set_enabled, Counter, Gauge, HistSnapshot, Histogram, Registry,
+};
+pub use span::SpanGuard;

@@ -1,0 +1,470 @@
+//! Process-global metrics registry: named counters, gauges, and fixed
+//! log-linear-bucket histograms (docs/OBSERVABILITY.md).
+//!
+//! Recording is lock-free after the first resolution of a handle: every
+//! metric owns `N_SHARDS` cache-line-separated atomic cells and a thread
+//! records into the shard picked by its process-unique thread index
+//! (round-robin at first use), so concurrent recorders on different
+//! threads rarely contend on a cell. A scrape merges the shards into one
+//! deterministic snapshot — metrics iterate in name order (`BTreeMap`)
+//! and shard sums are plain integer additions, so two scrapes of a quiet
+//! process render byte-identical text.
+//!
+//! Counters and gauges are always on (they are the source of truth the
+//! serving/train reports cross-check against). Histograms and spans are
+//! gated by [`enabled`] so `perf_hot_paths --smoke`'s `obs_overhead`
+//! group can measure the instrumented-vs-disabled cost honestly.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Shard count per metric. A power of two so the thread-index mask is a
+/// single AND; 16 covers every worker count the engine benches use.
+pub const N_SHARDS: usize = 16;
+
+/// Log-linear histogram layout: 2^SUB_BITS linear sub-buckets per
+/// power-of-two octave. With SUB_BITS=2 the relative bucket width is
+/// ≤25% everywhere — enough resolution for p50/p95/p99 over latencies.
+const SUB_BITS: u32 = 2;
+const SUB: usize = 1 << SUB_BITS;
+/// 4 exact buckets for 0..4, then 4 sub-buckets for each of the 62
+/// remaining octaves of a u64.
+pub const N_BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Bucket index for a recorded value; monotone in `v` (proptested).
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let octave = (msb - SUB_BITS) as usize;
+    let sub = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+    SUB + octave * SUB + sub
+}
+
+/// Inclusive lower bound of bucket `i` (the exporter's `le` boundaries
+/// are `bucket_lower(i + 1) - 1`, i.e. the largest value mapping to `i`).
+pub fn bucket_lower(i: usize) -> u64 {
+    if i < SUB {
+        return i as u64;
+    }
+    let octave = (i - SUB) / SUB;
+    let sub = ((i - SUB) % SUB) as u64;
+    (SUB as u64 + sub) << octave
+}
+
+/// Pad each shard's cells to a cache line so two threads recording into
+/// neighbouring shards do not false-share.
+#[repr(align(64))]
+struct ShardCell {
+    v: AtomicU64,
+}
+
+impl ShardCell {
+    fn new() -> ShardCell {
+        ShardCell { v: AtomicU64::new(0) }
+    }
+}
+
+fn shard_cells() -> Vec<ShardCell> {
+    (0..N_SHARDS).map(|_| ShardCell::new()).collect()
+}
+
+/// Global recording switch for the *timed* instrumentation (spans,
+/// histograms, trace ring). Counters and gauges ignore it.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    // ORDERING: Relaxed — the flag only modulates whether future samples
+    // are recorded; no data is published through it, and a racing
+    // recorder seeing the stale value records (or skips) one extra
+    // sample, which is statistically irrelevant.
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    // ORDERING: Relaxed — see set_enabled; a one-sample-stale read is fine.
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Process-unique shard index for the calling thread: handed out
+/// round-robin at first use so up to N_SHARDS concurrent recorders land
+/// on distinct cells.
+fn thread_shard() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize =
+            // ORDERING: Relaxed — the counter only needs each thread to
+            // draw a distinct ticket; no other memory is published with it.
+            NEXT.fetch_add(1, Ordering::Relaxed) & (N_SHARDS - 1);
+    }
+    SHARD.with(|s| *s)
+}
+
+/// Monotone counter: per-shard atomic adds, merged by summing on scrape.
+pub struct CounterInner {
+    shards: Vec<ShardCell>,
+}
+
+#[derive(Clone)]
+pub struct Counter(Arc<CounterInner>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        // ORDERING: Relaxed — counters are statistical accumulators; the
+        // scrape tolerates seeing an increment late, and every reader
+        // that needs exactness (the conservation cross-check) reads
+        // after the recording threads have been joined, so the join's
+        // happens-before edge publishes the final values.
+        self.0.shards[thread_shard()].v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sum of all shards at this instant.
+    pub fn value(&self) -> u64 {
+        self.0
+            .shards
+            .iter()
+            // ORDERING: Relaxed — see add; per-shard sums are independent
+            // monotone values, no inter-cell ordering is needed.
+            .map(|c| c.v.load(Ordering::Relaxed))
+            .sum()
+    }
+}
+
+/// Last-write-wins gauge (queue depth, current generation): a single
+/// atomic cell — sharding a set-semantics value would need timestamps.
+pub struct GaugeInner {
+    v: AtomicU64,
+}
+
+#[derive(Clone)]
+pub struct Gauge(Arc<GaugeInner>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        // ORDERING: Relaxed — a gauge is a point-in-time sample; readers
+        // only need *some* recent value, not an ordering with other memory.
+        self.0.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn value(&self) -> u64 {
+        // ORDERING: Relaxed — see set.
+        self.0.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-linear histogram: per-shard bucket counts plus per-shard
+/// count/sum cells, merged by addition on scrape.
+pub struct HistogramInner {
+    /// `buckets[shard * N_BUCKETS + bucket]`
+    buckets: Vec<ShardCell>,
+    count: Vec<ShardCell>,
+    sum: Vec<ShardCell>,
+}
+
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    /// Record one sample (no-op while `obs` is disabled).
+    pub fn record(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.record_always(v);
+    }
+
+    /// Record regardless of the enabled switch (tests, merge proptests).
+    pub fn record_always(&self, v: u64) {
+        self.record_in_shard(thread_shard(), v);
+    }
+
+    /// Record into an explicit shard — exercised by the shard-merge
+    /// property test; production recording always goes through
+    /// `thread_shard()`.
+    pub fn record_in_shard(&self, shard: usize, v: u64) {
+        let b = bucket_index(v);
+        let h = &self.0;
+        // ORDERING: Relaxed (all three) — histogram cells are independent
+        // statistical accumulators like Counter::add: a scrape may see a
+        // sample's bucket increment before its count/sum increments (or
+        // vice versa), which skews one in-flight sample at most; exact
+        // readers only run after joining the recording threads.
+        h.buckets[shard * N_BUCKETS + b].v.fetch_add(1, Ordering::Relaxed);
+        h.count[shard].v.fetch_add(1, Ordering::Relaxed);
+        h.sum[shard].v.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Merge all shards into one snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let h = &self.0;
+        let mut buckets = vec![0u64; N_BUCKETS];
+        for s in 0..N_SHARDS {
+            for (b, out) in buckets.iter_mut().enumerate() {
+                // ORDERING: Relaxed — see record_in_shard.
+                *out += h.buckets[s * N_BUCKETS + b].v.load(Ordering::Relaxed);
+            }
+        }
+        // ORDERING: Relaxed — see record_in_shard.
+        let count = h.count.iter().map(|c| c.v.load(Ordering::Relaxed)).sum();
+        // ORDERING: Relaxed — see record_in_shard.
+        let sum = h.sum.iter().map(|c| c.v.load(Ordering::Relaxed)).sum();
+        HistSnapshot { buckets, count, sum }
+    }
+}
+
+/// A merged histogram view: deterministic given the underlying cells.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    /// Bucket-resolution quantile: lower bound of the first bucket whose
+    /// cumulative count reaches `q * count`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_lower(i);
+            }
+        }
+        bucket_lower(N_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// One scraped metric; `Registry::scrape` returns them in name order.
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(HistSnapshot),
+}
+
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry { metrics: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Resolve (or create) the counter `name`. Resolution takes the
+    /// registry lock — hot paths resolve once via `obs_counter!` and
+    /// record through the returned handle lock-free.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter(Arc::new(CounterInner { shards: shard_cells() }))))
+        {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric {name:?} already registered with another kind"),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Gauge(Arc::new(GaugeInner { v: AtomicU64::new(0) }))))
+        {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric {name:?} already registered with another kind"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| {
+            Metric::Histogram(Histogram(Arc::new(HistogramInner {
+                buckets: (0..N_SHARDS * N_BUCKETS).map(|_| ShardCell::new()).collect(),
+                count: shard_cells(),
+                sum: shard_cells(),
+            })))
+        }) {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric {name:?} already registered with another kind"),
+        }
+    }
+
+    /// Deterministic merged snapshot of every registered metric, in name
+    /// order. Holding the lock only guards the map structure — cell reads
+    /// are the usual Relaxed shard merges.
+    pub fn scrape(&self) -> Vec<(String, MetricValue)> {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .map(|(name, metric)| {
+                let v = match metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.value()),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.value()),
+                    Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                };
+                (name.clone(), v)
+            })
+            .collect()
+    }
+
+    /// Counter values only, for delta-based cross-checks.
+    pub fn counter_values(&self) -> BTreeMap<String, u64> {
+        self.scrape()
+            .into_iter()
+            .filter_map(|(n, v)| match v {
+                MetricValue::Counter(c) => Some((n, c)),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// The process-global registry every `obs_counter!`/`span!` site records
+/// into and every exporter scrapes.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::new)
+}
+
+/// Resolve a counter once per call site and cache the handle in a
+/// function-local static: recording is then a single sharded fetch_add.
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:expr) => {{
+        static H: std::sync::OnceLock<$crate::obs::Counter> = std::sync::OnceLock::new();
+        H.get_or_init(|| $crate::obs::registry().counter($name))
+    }};
+}
+
+/// Call-site-cached gauge handle (see `obs_counter!`).
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:expr) => {{
+        static H: std::sync::OnceLock<$crate::obs::Gauge> = std::sync::OnceLock::new();
+        H.get_or_init(|| $crate::obs::registry().gauge($name))
+    }};
+}
+
+/// Call-site-cached histogram handle (see `obs_counter!`).
+#[macro_export]
+macro_rules! obs_hist {
+    ($name:expr) => {{
+        static H: std::sync::OnceLock<$crate::obs::Histogram> = std::sync::OnceLock::new();
+        H.get_or_init(|| $crate::obs::registry().histogram($name))
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_index_is_monotone_and_lower_bounds_agree() {
+        // proptest over random pairs: v <= w implies bucket(v) <= bucket(w),
+        // and every value lands in the bucket whose lower bound brackets it.
+        let mut rng = Rng::new(7);
+        let mut vals: Vec<u64> = (0..4000)
+            .map(|i| {
+                let shift = (rng.next_u64() % 64) as u32;
+                (rng.next_u64() >> shift).wrapping_add(i % 3)
+            })
+            .collect();
+        vals.extend([0, 1, 2, 3, 4, 5, 7, 8, u64::MAX - 1, u64::MAX]);
+        vals.sort_unstable();
+        let mut prev = 0usize;
+        for &v in &vals {
+            let b = bucket_index(v);
+            assert!(b >= prev, "bucket order inverted at {v}: {b} < {prev}");
+            assert!(b < N_BUCKETS, "bucket {b} out of range for {v}");
+            assert!(bucket_lower(b) <= v, "lower bound {} > value {v}", bucket_lower(b));
+            if b + 1 < N_BUCKETS {
+                assert!(v < bucket_lower(b + 1), "value {v} at or past next bucket {}", bucket_lower(b + 1));
+            }
+            prev = b;
+        }
+        // boundaries map to themselves: bucket_lower(bucket_index(lo)) == lo
+        for i in 0..N_BUCKETS {
+            let lo = bucket_lower(i);
+            assert_eq!(bucket_index(lo), i, "boundary {lo} not in its own bucket");
+        }
+    }
+
+    #[test]
+    fn shard_merge_equals_single_shard_recording() {
+        // The same sample multiset recorded round-robin across all shards
+        // and recorded into shard 0 alone must merge to identical snapshots.
+        let mut rng = Rng::new(11);
+        let samples: Vec<u64> = (0..2000).map(|_| rng.next_u64() >> (rng.next_u64() % 60)).collect();
+        let sharded = registry().histogram("test.merge.sharded");
+        let single = registry().histogram("test.merge.single");
+        for (i, &v) in samples.iter().enumerate() {
+            sharded.record_in_shard(i % N_SHARDS, v);
+            single.record_in_shard(0, v);
+        }
+        assert_eq!(sharded.snapshot(), single.snapshot());
+    }
+
+    #[test]
+    fn quantiles_track_bucket_resolution() {
+        let h = registry().histogram("test.quantile");
+        for v in 1..=1000u64 {
+            h.record_always(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        let p50 = s.quantile(0.5);
+        // bucket resolution is <=25%: the reported p50 must be the lower
+        // bound of the bucket containing 500
+        assert_eq!(p50, bucket_lower(bucket_index(500)));
+        assert!(s.quantile(0.99) >= p50);
+        assert!(s.mean() > 0.0);
+    }
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let c = registry().counter("test.counter");
+        c.add(3);
+        c.inc();
+        assert!(c.value() >= 4, "counter lost increments");
+        let g = registry().gauge("test.gauge");
+        g.set(17);
+        assert_eq!(g.value(), 17);
+        // same-name resolution returns a handle over the same cells
+        let c2 = registry().counter("test.counter");
+        let before = c2.value();
+        c.inc();
+        assert_eq!(c2.value(), before + 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        registry().counter("test.kind.clash");
+        registry().gauge("test.kind.clash");
+    }
+}

@@ -1,0 +1,105 @@
+//! RAII tracing spans: `span!("cluster.compute")` returns a guard whose
+//! drop records the elapsed nanoseconds into the histogram
+//! `span.cluster.compute.ns` and, when a trace ring is enabled
+//! (`--trace-out`), appends a Chrome-trace complete event with any
+//! attributes attached via [`SpanGuard::attr`].
+//!
+//! Spans are gated by `obs::enabled()`: a disabled span takes no
+//! timestamps and records nothing, which is what the `obs_overhead`
+//! bench group toggles to price the instrumentation.
+
+use crate::obs::registry::{enabled, Histogram};
+use crate::obs::trace;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Histogram handles per span name, resolved once. Span names are
+/// `&'static str` from the `span!` macro, so the cache is bounded by the
+/// number of instrumented call sites.
+fn span_hist(name: &'static str) -> Histogram {
+    static CACHE: OnceLock<Mutex<Vec<(&'static str, Histogram)>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(Vec::new()));
+    let mut c = cache.lock().unwrap();
+    if let Some((_, h)) = c.iter().find(|(n, _)| *n == name) {
+        return h.clone();
+    }
+    let h = crate::obs::registry().histogram(&format!("span.{name}.ns"));
+    c.push((name, h.clone()));
+    h
+}
+
+/// Live span: times the enclosing scope. Attributes land in the trace
+/// event's `args` (the per-event staleness/byte counters ride here).
+pub struct SpanGuard {
+    name: &'static str,
+    start: Option<Instant>,
+    attrs: Vec<(&'static str, u64)>,
+}
+
+impl SpanGuard {
+    pub fn enter(name: &'static str) -> SpanGuard {
+        let start = if enabled() { Some(Instant::now()) } else { None };
+        SpanGuard { name, start, attrs: Vec::new() }
+    }
+
+    /// Attach a numeric attribute to the trace event (no-op when the
+    /// span is disabled).
+    pub fn attr(&mut self, key: &'static str, value: u64) {
+        if self.start.is_some() {
+            self.attrs.push((key, value));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let dur = start.elapsed();
+        span_hist(self.name).record(dur.as_nanos() as u64);
+        if trace::trace_on() {
+            trace::record(self.name, start, dur, std::mem::take(&mut self.attrs));
+        }
+    }
+}
+
+/// Open a timed span for the current scope:
+/// `let _sp = span!("train.step");` or bind mutably to attach attributes.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        $crate::obs::SpanGuard::enter($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry;
+    use std::sync::Mutex;
+
+    /// Serializes the tests that flip the global enabled switch so they
+    /// cannot race each other's recordings.
+    static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn span_records_into_its_histogram() {
+        let _g = ENABLE_LOCK.lock().unwrap();
+        registry::set_enabled(true);
+        {
+            let mut sp = SpanGuard::enter("test.span");
+            sp.attr("k", 3);
+        }
+        let h = crate::obs::registry().histogram("span.test.span.ns");
+        assert!(h.snapshot().count >= 1, "span drop did not record a sample");
+    }
+
+    #[test]
+    fn disabled_span_records_nothing() {
+        let _g = ENABLE_LOCK.lock().unwrap();
+        registry::set_enabled(false);
+        drop(SpanGuard::enter("test.span.disabled"));
+        registry::set_enabled(true);
+        let h = crate::obs::registry().histogram("span.test.span.disabled.ns");
+        assert_eq!(h.snapshot().count, 0, "disabled span recorded a sample");
+    }
+}

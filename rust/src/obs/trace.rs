@@ -1,0 +1,186 @@
+//! Bounded in-memory trace ring dumped as Chrome trace JSON.
+//!
+//! When `--trace-out` enables the ring, every finished span appends one
+//! complete event (`ph: "X"`) with microsecond timestamps relative to a
+//! process epoch; [`dump`] writes the Perfetto-loadable
+//! `{"traceEvents": [...]}` document. The ring is bounded — once full it
+//! drops the OLDEST events (the tail of a run is what a stall
+//! investigation needs) and counts the drops so the dump can say so.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Default ring capacity: ~64k events ≈ a few MB, hours of span traffic
+/// at serve rates once batching amortizes spans per batch.
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+struct TraceEvent {
+    name: &'static str,
+    tid: usize,
+    ts_us: u64,
+    dur_us: u64,
+    args: Vec<(&'static str, u64)>,
+}
+
+struct TraceState {
+    cap: usize,
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+static RING: OnceLock<Mutex<TraceState>> = OnceLock::new();
+/// Fast-path switch so a disabled process never touches the ring mutex.
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+/// Monotonic process epoch all trace timestamps are relative to.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Small dense thread id for the `tid` lane (thread::current().id() is
+/// opaque); assigned at a thread's first trace event.
+fn trace_tid() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(1);
+    thread_local! {
+        // ORDERING: Relaxed — tickets only need to be distinct, nothing
+        // else is published through the counter.
+        static TID: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TID.with(|t| *t)
+}
+
+pub fn trace_on() -> bool {
+    // ORDERING: Relaxed — the flag gates whether future events are
+    // appended; a recorder seeing it one event late merely records or
+    // skips one span, and dump() reads the ring under its mutex anyway.
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Enable the ring (idempotent; the first call pins the capacity and the
+/// process epoch so early spans get small timestamps).
+pub fn enable(cap: usize) {
+    epoch();
+    RING.get_or_init(|| {
+        Mutex::new(TraceState { cap: cap.max(16), events: VecDeque::new(), dropped: 0 })
+    });
+    // ORDERING: Relaxed — see trace_on.
+    TRACE_ON.store(true, Ordering::Relaxed);
+}
+
+/// Append one complete event (called from `SpanGuard::drop`).
+pub fn record(name: &'static str, start: Instant, dur: Duration, args: Vec<(&'static str, u64)>) {
+    let Some(ring) = RING.get() else { return };
+    let ts_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+    let ev = TraceEvent {
+        name,
+        tid: trace_tid(),
+        ts_us,
+        dur_us: dur.as_micros() as u64,
+        args,
+    };
+    let mut st = ring.lock().unwrap();
+    if st.events.len() >= st.cap {
+        st.events.pop_front();
+        st.dropped += 1;
+    }
+    st.events.push_back(ev);
+}
+
+/// Render the ring as a Chrome trace document and write it to `path`.
+/// Events are sorted by timestamp (Perfetto accepts any order; sorted
+/// output makes the file diffable).
+pub fn dump(path: &Path) -> Result<usize> {
+    let Some(ring) = RING.get() else {
+        anyhow::bail!("trace ring was never enabled (--trace-out without obs::trace::enable)");
+    };
+    let (mut events, dropped) = {
+        let st = ring.lock().unwrap();
+        let evs: Vec<Json> = st
+            .events
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::from(e.name));
+                m.insert("ph".to_string(), Json::from("X"));
+                m.insert("ts".to_string(), Json::Num(e.ts_us as f64));
+                m.insert("dur".to_string(), Json::Num(e.dur_us.max(1) as f64));
+                m.insert("pid".to_string(), Json::Num(1.0));
+                m.insert("tid".to_string(), Json::Num(e.tid as f64));
+                let mut args = BTreeMap::new();
+                for (k, v) in &e.args {
+                    args.insert(k.to_string(), Json::Num(*v as f64));
+                }
+                m.insert("args".to_string(), Json::Obj(args));
+                (e.ts_us, Json::Obj(m))
+            })
+            .map(|(_, j)| j)
+            .collect();
+        (evs, st.dropped)
+    };
+    events.sort_by(|a, b| {
+        let ts = |j: &Json| j.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        ts(a).total_cmp(&ts(b))
+    });
+    let n = events.len();
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::from("ms"));
+    if dropped > 0 {
+        let mut meta = BTreeMap::new();
+        meta.insert("dropped_events".to_string(), Json::Num(dropped as f64));
+        doc.insert("otherData".to_string(), Json::Obj(meta));
+    }
+    std::fs::write(path, Json::Obj(doc).to_string())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    #[test]
+    fn ring_records_and_dumps_chrome_trace() {
+        enable(64);
+        record("test.trace.a", Instant::now(), Duration::from_micros(5), vec![("bytes", 7)]);
+        record("test.trace.b", Instant::now(), Duration::from_micros(3), Vec::new());
+        let dir = TempDir::new("obs_trace");
+        let path = dir.path().join("trace.json");
+        let n = dump(&path).unwrap();
+        assert!(n >= 2);
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(evs.len() >= 2);
+        let ours: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.str_field("name").unwrap().starts_with("test.trace."))
+            .collect();
+        assert!(ours.len() >= 2, "recorded events missing from the dump");
+        for e in &ours {
+            assert_eq!(e.str_field("ph").unwrap(), "X");
+            assert!(e.f64_field("ts").is_ok() && e.f64_field("dur").is_ok());
+        }
+        let a = ours.iter().find(|e| e.str_field("name").unwrap() == "test.trace.a").unwrap();
+        assert_eq!(a.get("args").unwrap().usize_field("bytes").unwrap(), 7);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        enable(64); // idempotent: first enable in the process pins the cap
+        let ring = RING.get().unwrap();
+        let cap = ring.lock().unwrap().cap;
+        for _ in 0..cap + 10 {
+            record("test.trace.fill", Instant::now(), Duration::from_micros(1), Vec::new());
+        }
+        let st = ring.lock().unwrap();
+        assert!(st.events.len() <= cap, "ring exceeded its capacity");
+        assert!(st.dropped >= 10, "overflow did not count drops");
+    }
+}

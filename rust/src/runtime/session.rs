@@ -100,14 +100,18 @@ impl DlrmSession {
             Ok(c.buffer_from_host_buffer(data, &[b.size], None)?)
         })?;
         self.bytes_uploaded.set(self.bytes_uploaded.get() + b.bytes());
+        // registry mirror of the session counter: transfer traffic shows up
+        // on a live scrape/stats stream, cumulative across sessions
+        crate::obs_counter!("runtime.bytes_uploaded").add(b.bytes());
         Ok(buf)
     }
 
     fn download_group(&self, idx: usize) -> Result<Vec<f32>> {
         let bufs = self.buffers.as_ref().ok_or_else(|| anyhow!("no state uploaded"))?;
         let out = bufs[idx].to_literal_sync()?.to_vec::<f32>()?;
-        self.bytes_downloaded
-            .set(self.bytes_downloaded.get() + self.manifest.buffers[idx].bytes());
+        let bytes = self.manifest.buffers[idx].bytes();
+        self.bytes_downloaded.set(self.bytes_downloaded.get() + bytes);
+        crate::obs_counter!("runtime.bytes_downloaded").add(bytes);
         Ok(out)
     }
 

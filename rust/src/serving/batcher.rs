@@ -94,6 +94,14 @@ pub struct BatchQueue<T> {
     cap: usize,
 }
 
+/// Live queue-depth gauge (`serve.queue.depth`): updated under the queue
+/// lock at every push/drain so a mid-run scrape sees the actual backlog.
+/// One shared metric — statics in generic fns are a single item — which is
+/// what we want: the engine owns one request queue per process.
+fn depth_gauge() -> &'static crate::obs::Gauge {
+    crate::obs_gauge!("serve.queue.depth")
+}
+
 impl<T> BatchQueue<T> {
     pub fn new(cap: usize) -> BatchQueue<T> {
         assert!(cap >= 1);
@@ -119,6 +127,7 @@ impl<T> BatchQueue<T> {
             st = self.not_full.wait(st).unwrap();
         }
         st.q.push_back(item);
+        depth_gauge().set(st.q.len() as u64);
         drop(st);
         self.not_empty.notify_one();
         true
@@ -137,6 +146,7 @@ impl<T> BatchQueue<T> {
             return TryPush::Full(item);
         }
         st.q.push_back(item);
+        depth_gauge().set(st.q.len() as u64);
         drop(st);
         self.not_empty.notify_one();
         TryPush::Pushed
@@ -187,6 +197,7 @@ impl<T> BatchQueue<T> {
                 continue;
             }
             let out: Vec<T> = st.q.drain(..n).collect();
+            depth_gauge().set(st.q.len() as u64);
             drop(st);
             self.not_full.notify_all();
             return Some(out);

@@ -418,6 +418,22 @@ pub fn run<E: Executor>(
     let mut exec_err: Option<anyhow::Error> = None;
     let t_all = Instant::now();
 
+    // live registry mirrors (docs/OBSERVABILITY.md): incremented at the same
+    // sites as the local totals below, so a mid-run /metrics scrape and the
+    // final ServeReport cannot drift — tests/obs_metrics.rs pins registry
+    // deltas == report fields, including the conservation invariant.
+    let m_offered = crate::obs_counter!("serve.requests.offered");
+    let m_served = crate::obs_counter!("serve.requests.served");
+    let m_rejected = crate::obs_counter!("serve.requests.rejected");
+    let m_expired = crate::obs_counter!("serve.requests.expired");
+    let m_batches = crate::obs_counter!("serve.batches");
+    let m_padded = crate::obs_counter!("serve.padded_rows");
+    let m_misses = crate::obs_counter!("serve.deadline_misses");
+    let m_swaps = crate::obs_counter!("serve.snapshot.swaps");
+    let g_gen = crate::obs_gauge!("serve.snapshot.generation");
+    let h_latency = crate::obs_hist!("serve.latency.ns");
+    let h_rows = crate::obs_hist!("serve.batch.rows");
+
     std::thread::scope(|s| {
         let (ready_tx, ready_rx) = sync_channel::<PreparedBatch>(cfg.workers * 2);
 
@@ -448,6 +464,7 @@ pub fn run<E: Executor>(
                     }
                     req.arrival = target;
                 }
+                m_offered.inc();
                 match &admission {
                     AdmissionPolicy::Block => {
                         if !producer_queue.push(req) {
@@ -462,6 +479,7 @@ pub fn run<E: Executor>(
                                 // ORDERING: Relaxed counter; aggregated only
                                 // after the scope joins every thread
                                 rejected.fetch_add(1, Ordering::Relaxed);
+                                m_rejected.inc();
                             }
                             TryPush::Closed(_) => return,
                         }
@@ -485,11 +503,15 @@ pub fn run<E: Executor>(
                     reqs.retain(|r| r.deadline.map_or(true, |d| d > now));
                     // ORDERING: Relaxed counter; aggregated after scope join
                     expired.fetch_add((before - reqs.len()) as u64, Ordering::Relaxed);
+                    m_expired.add((before - reqs.len()) as u64);
                     if reqs.is_empty() {
                         continue; // whole batch expired in the queue
                     }
                     let (generation, snap) = slot.current();
+                    h_rows.record(reqs.len() as u64);
+                    let _sp = crate::span!("serve.batch.prepare");
                     let mut pb = prepare(&snap, &reqs, device_batch);
+                    drop(_sp);
                     pb.generation = generation;
                     // ORDERING: Relaxed counter; aggregated after scope join
                     index_ns.fetch_add(pb.index_ns, Ordering::Relaxed);
@@ -505,7 +527,10 @@ pub fn run<E: Executor>(
         while let Ok(pb) = ready_rx.recv() {
             if exec_err.is_none() {
                 let te = Instant::now();
-                if let Err(e) = executor.execute(&pb) {
+                let sp_exec = crate::span!("serve.batch.exec");
+                let exec_res = executor.execute(&pb);
+                drop(sp_exec);
+                if let Err(e) = exec_res {
                     // fail fast but shut down cleanly: close the queue so the
                     // producer and workers unblock, then drain the channel
                     exec_err = Some(e);
@@ -517,19 +542,28 @@ pub fn run<E: Executor>(
                 // briefly after a swap; count the transitions actually seen
                 if last_gen != Some(pb.generation) {
                     snapshot_swaps += usize::from(last_gen.is_some());
+                    m_swaps.add(u64::from(last_gen.is_some()));
+                    g_gen.set(pb.generation);
                     last_gen = Some(pb.generation);
                 }
                 let done = Instant::now();
                 for ((arrival, wait_ns), deadline) in
                     pb.arrivals.iter().zip(&pb.queue_wait_ns).zip(&pb.deadlines)
                 {
-                    latencies.push(done.duration_since(*arrival).as_nanos() as f64);
+                    let lat_ns = done.duration_since(*arrival).as_nanos() as u64;
+                    latencies.push(lat_ns as f64);
+                    h_latency.record(lat_ns);
                     queue_waits.push(*wait_ns as f64);
-                    deadline_misses += usize::from(deadline.map_or(false, |d| done > d));
+                    let miss = deadline.map_or(false, |d| done > d);
+                    deadline_misses += usize::from(miss);
+                    m_misses.add(u64::from(miss));
                 }
                 served += pb.real;
+                m_served.add(pb.real as u64);
                 batches += 1;
+                m_batches.inc();
                 padded_rows += device_batch - pb.real;
+                m_padded.add((device_batch - pb.real) as u64);
             }
         }
     });

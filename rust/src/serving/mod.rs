@@ -97,6 +97,17 @@
 //! `coordinator::serve` is a thin adapter wiring a `DlrmSession` + dataset
 //! into this module; `cce serve` exposes the knobs via `config::ServeConfig`
 //! and `cce snapshot write|inspect` manages segment files.
+//!
+//! # Observability
+//!
+//! The engine, batcher, and watcher mirror their report counters into the
+//! process-global metrics registry (`crate::obs`) at the same source
+//! sites, and the hot phases run under `span!` guards — so a live run can
+//! be scraped (`cce serve --metrics-addr`, Prometheus text), streamed
+//! (`--stats-out`, JSONL), or traced (`--trace-out`, Chrome `trace.json`)
+//! without the numbers ever disagreeing with the final `ServeReport`.
+//! Naming scheme, span taxonomy, and overhead budget: docs/OBSERVABILITY.md;
+//! report↔registry equality is pinned by `tests/obs_metrics.rs`.
 
 pub mod batcher;
 pub mod engine;

@@ -142,6 +142,10 @@ impl WatcherState {
     /// `tick` never returns an error and never panics on directory contents.
     pub fn tick(&mut self, slot: &SnapshotSlot) {
         self.report.polls += 1;
+        // registry mirrors of the report counters, bumped at the same sites
+        // (docs/OBSERVABILITY.md): a stuck retry loop is visible on a live
+        // /metrics scrape instead of only in the end-of-run WatcherReport
+        crate::obs_counter!("serve.watcher.polls").inc();
         let now = Instant::now();
         let seen = self.scan(now);
         // forget files that vanished (pruned by retention GC, or deleted by
@@ -164,6 +168,7 @@ impl WatcherState {
                     } else {
                         st.given_up = true;
                         self.report.skipped_incompatible += 1;
+                        crate::obs_counter!("serve.watcher.skipped_incompatible").inc();
                     }
                 }
                 Err(_) => self.fail_attempt(p.clone(), now),
@@ -181,11 +186,15 @@ impl WatcherState {
             .max_by(|a, b| a.0.cmp(&b.0).then_with(|| b.1.cmp(&a.1)));
         let Some((generation, path)) = best else { return };
 
+        let mut sp = crate::span!("serve.snapshot.swap");
+        sp.attr("generation", generation);
         match slot.install_snapshot(&path) {
             Ok(_) => {
                 self.installed = Some(generation);
                 self.report.installs += 1;
                 self.report.generation = generation;
+                crate::obs_counter!("serve.watcher.installs").inc();
+                crate::obs_gauge!("serve.watcher.generation").set(generation);
                 if let Some(st) = self.files.get_mut(&path) {
                     st.attempts = 0;
                     st.next_attempt = None;
@@ -232,8 +241,10 @@ impl WatcherState {
         if st.attempts > self.cfg.max_retries {
             st.given_up = true;
             self.report.skipped_corrupt += 1;
+            crate::obs_counter!("serve.watcher.skipped_corrupt").inc();
         } else {
             self.report.retries += 1;
+            crate::obs_counter!("serve.watcher.retries").inc();
             // exponential backoff: base, 2×base, 4×base, …
             let factor = 1u32 << (st.attempts - 1).min(16);
             st.next_attempt = Some(now + self.cfg.backoff.saturating_mul(factor));

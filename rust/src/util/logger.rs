@@ -26,19 +26,40 @@ impl log::Log for StderrLogger {
 
 static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
 
+/// Map a `CCE_LOG` value to a level; `None` for unrecognized values.
+fn parse_level(v: &str) -> Option<log::LevelFilter> {
+    match v {
+        "error" => Some(log::LevelFilter::Error),
+        "warn" => Some(log::LevelFilter::Warn),
+        "info" => Some(log::LevelFilter::Info),
+        "debug" => Some(log::LevelFilter::Debug),
+        "trace" => Some(log::LevelFilter::Trace),
+        _ => None,
+    }
+}
+
 /// Install the logger (idempotent). Level comes from `CCE_LOG`
-/// (error|warn|info|debug|trace), defaulting to `info`.
+/// (error|warn|info|debug|trace), defaulting to `info`; an unrecognized
+/// value warns once instead of silently meaning `info`.
 pub fn init() {
     let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
-    let level = match std::env::var("CCE_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        _ => log::LevelFilter::Info,
-    };
+    let var = std::env::var("CCE_LOG").ok();
+    let parsed = var.as_deref().map(parse_level);
+    let level = parsed.flatten().unwrap_or(log::LevelFilter::Info);
     let _ = log::set_logger(logger);
     log::set_max_level(level);
+    if let (Some(raw), Some(None)) = (var.as_deref().filter(|v| !v.is_empty()), parsed) {
+        // after set_logger so the warning itself goes through the
+        // timestamped format; OnceLock-guarded so repeated init() calls
+        // (tests, library embedders) warn only once
+        static WARNED: OnceLock<()> = OnceLock::new();
+        WARNED.get_or_init(|| {
+            log::warn!(
+                "unknown CCE_LOG level {raw:?}; accepted: error|warn|info|debug|trace \
+                 (falling back to info)"
+            );
+        });
+    }
 }
 
 #[cfg(test)]
@@ -48,5 +69,21 @@ mod tests {
         super::init();
         super::init();
         log::info!("logger smoke test");
+    }
+
+    #[test]
+    fn recognizes_exactly_the_documented_levels() {
+        for (v, want) in [
+            ("error", log::LevelFilter::Error),
+            ("warn", log::LevelFilter::Warn),
+            ("info", log::LevelFilter::Info),
+            ("debug", log::LevelFilter::Debug),
+            ("trace", log::LevelFilter::Trace),
+        ] {
+            assert_eq!(super::parse_level(v), Some(want));
+        }
+        for v in ["INFO", "verbose", "warning", "", "2"] {
+            assert_eq!(super::parse_level(v), None, "{v:?} should be unrecognized");
+        }
     }
 }

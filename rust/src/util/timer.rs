@@ -37,7 +37,10 @@ impl TimingStats {
         if ns.is_empty() {
             return TimingStats::empty();
         }
-        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a NaN sample (e.g. a 0/0 rate fed back as a sample)
+        // must not panic the reporter; NaNs sort to the top and only
+        // perturb max/p99 instead of killing the run.
+        ns.sort_by(f64::total_cmp);
         let n = ns.len();
         let mean = ns.iter().sum::<f64>() / n as f64;
         let var = ns.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
@@ -149,6 +152,16 @@ mod tests {
         assert_eq!(s.n, 0);
         assert_eq!(s.mean_ns, 0.0);
         assert_eq!(s.p99_ns, 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // regression: sort_by(partial_cmp().unwrap()) panicked on NaN
+        let s = TimingStats::from_samples(vec![100.0, f64::NAN, 50.0]);
+        assert_eq!(s.n, 3);
+        // NaN totals-order above every number: min and p50 stay finite
+        assert_eq!(s.min_ns, 50.0);
+        assert!(s.p50_ns.is_finite());
     }
 
     #[test]

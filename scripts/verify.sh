@@ -160,11 +160,26 @@ shed_rows4 = [r for r in ov if r["mode"] == "shed" and r["load_mult"] == 4.0]
 assert shed_rows4[0]["shed_rate"] > 0, \
     "shed mode at 4x load reported zero shed rate — admission control inert"
 
+# observability: telemetry (spans + trace ring) must cost <= 3% serving
+# throughput vs obs::set_enabled(false) — the budget docs/OBSERVABILITY.md
+# commits to
+obs = [r for r in results if r.get("group") == "obs_overhead"]
+assert obs, "obs_overhead row missing"
+for r in obs:
+    for key in ("throughput_instrumented_rps", "throughput_disabled_rps",
+                "overhead_frac"):
+        assert isinstance(r.get(key), (int, float)) and r[key] >= 0, \
+            f"obs_overhead row missing {key}: {r}"
+    assert r["throughput_instrumented_rps"] > 0, f"instrumented run served nothing: {r}"
+    assert r["overhead_frac"] <= 0.03, \
+        f"telemetry overhead {r['overhead_frac']*100:.2f}% exceeds the 3% budget: {r}"
+
 print(f"BENCH_serving.json OK ({len(results)} results, mode={doc['mode']}, "
       f"terabyte cold start {tb[0]['cold_start_ns']/1e6:.2f} ms = "
       f"{tb[0]['speedup']:.0f}x over bake, "
       f"swap pause p99 {hs[0]['swap_pause_ns']/1e6:.2f} ms, "
-      f"overload 4x p99 shed {shed4/1e6:.2f} ms vs block {block4/1e6:.2f} ms)")
+      f"overload 4x p99 shed {shed4/1e6:.2f} ms vs block {block4/1e6:.2f} ms, "
+      f"obs overhead {obs[0]['overhead_frac']*100:.2f}%)")
 PY
 
   # End-to-end smoke of the per-field (schema v2) artifact convention:
@@ -184,6 +199,79 @@ PY
     "$bin" snapshot inspect "$smoke_out/quick.cceseg" --verify
     "$bin" serve --artifact quick_cce --seed 7 --requests 64 --workers 1 \
       --snapshot "$smoke_out/quick.cceseg"
+
+    # Live telemetry smoke: the same serve path with every exporter on —
+    # scrape /metrics mid-run (conservation must hold on any live snapshot),
+    # then check the JSONL stats stream and the Chrome trace dump.
+    echo "== live telemetry smoke (/metrics + stats.jsonl + trace.json) =="
+    "$bin" serve --artifact quick_cce --seed 7 --requests 2000 --workers 2 \
+      --snapshot "$smoke_out/quick.cceseg" --pace-rps 1000 \
+      --metrics-addr 127.0.0.1:9184 \
+      --stats-out "$smoke_out/stats.jsonl" --stats-interval-ms 100 \
+      --trace-out "$smoke_out/trace.json" &
+    serve_pid=$!
+    python3 - <<'PY'
+import time, urllib.request
+
+# poll until the endpoint answers, then treat that response as a live scrape
+body = None
+for _ in range(100):
+    try:
+        with urllib.request.urlopen("http://127.0.0.1:9184/metrics", timeout=1) as r:
+            assert r.status == 200, f"scrape returned {r.status}"
+            body = r.read().decode()
+            break
+    except OSError:
+        time.sleep(0.05)
+assert body is not None, "metrics endpoint never came up"
+
+def val(name):
+    for line in body.splitlines():
+        if line.startswith(name + " "):
+            return float(line.split()[1])
+    raise AssertionError(f"{name} missing from live scrape")
+
+offered = val("cce_serve_requests_offered")
+served = val("cce_serve_requests_served")
+rejected = val("cce_serve_requests_rejected")
+expired = val("cce_serve_requests_expired")
+assert served + rejected + expired <= offered, \
+    f"conservation violated on a live scrape: {served}+{rejected}+{expired} > {offered}"
+print(f"live /metrics scrape OK (offered={offered:.0f} served={served:.0f})")
+PY
+    wait "$serve_pid"
+    python3 - "$smoke_out" <<'PY'
+import json, sys
+out = sys.argv[1]
+
+# JSONL stats stream: flat objects, monotone t_ms, and a shutdown-time final
+# line whose registry counters satisfy exact conservation
+lines = [json.loads(l) for l in open(f"{out}/stats.jsonl") if l.strip()]
+assert lines, "stats.jsonl is empty"
+t_key = "t_ms"
+prev = -1.0
+for obj in lines:
+    assert isinstance(obj, dict) and t_key in obj, f"stats line without t_ms: {obj}"
+    assert obj[t_key] >= prev, "t_ms went backwards in stats.jsonl"
+    prev = obj[t_key]
+final = lines[-1]
+for name in ("serve.requests.offered", "serve.requests.served",
+             "serve.requests.rejected", "serve.requests.expired",
+             "serve.latency.ns.count"):
+    assert name in final, f"final stats line missing {name}"
+assert (final["serve.requests.served"] + final["serve.requests.rejected"]
+        + final["serve.requests.expired"]) == final["serve.requests.offered"], \
+    f"final stats line violates conservation: {final}"
+
+# Chrome trace: a Perfetto-loadable traceEvents document with span events
+doc = json.load(open(f"{out}/trace.json"))
+evs = doc["traceEvents"]
+assert isinstance(evs, list) and evs, "trace.json has no traceEvents"
+for e in evs[:16]:
+    for k in ("name", "ph", "ts", "pid", "tid"):
+        assert k in e, f"trace event missing {k}: {e}"
+print(f"telemetry files OK ({len(lines)} stats lines, {len(evs)} trace events)")
+PY
     rm -rf "$smoke_out"
   else
     echo "skipped: no $art_dir/index.json (re-run the compiler to build per-field artifacts)"

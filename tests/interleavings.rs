@@ -168,6 +168,53 @@ fn watcher_tick_races_direct_install() {
     assert_eq!(n, 3, "[2,1] step threads = 3 schedules, all exhausted");
 }
 
+/// Concurrent metric recording racing a scraper: under every interleaving
+/// of two incrementers and a prober, scraped counter values are monotone
+/// snapshots in `[0, 4]` and the final merge across shards loses nothing
+/// and double-counts nothing — the shard-merge contract the Relaxed
+/// ORDERING comments in `obs/registry.rs` claim.
+#[test]
+fn obs_counter_record_and_scrape_never_loses_counts() {
+    // one fixed registry metric: the registry is process-global, so every
+    // explored schedule accumulates into the same counter — the checks
+    // below are therefore phrased as per-schedule DELTAS
+    let counter = cce::obs::registry().counter("test.interleave.obs_counts");
+    let n = explore(100, || {
+        let base = counter.value();
+        let mut threads = Vec::new();
+        for _ in 0..2 {
+            let c = counter.clone();
+            threads.push(vec![step("inc", move || c.inc()), {
+                let c = counter.clone();
+                step("inc", move || c.inc())
+            }]);
+        }
+        let (c, last) = (counter.clone(), Arc::new(Mutex::new(0u64)));
+        let l2 = last.clone();
+        threads.push(vec![
+            step("scrape", move || {
+                let v = c.value() - base;
+                assert!(v <= 4, "scrape observed more than was ever recorded: {v}");
+                *l2.lock().unwrap() = v;
+            }),
+            {
+                let c = counter.clone();
+                step("scrape", move || {
+                    let v = c.value() - base;
+                    let prev = *last.lock().unwrap();
+                    assert!(v >= prev, "counter went backwards: {prev} then {v}");
+                    assert!(v <= 4);
+                })
+            },
+        ]);
+        let c = counter.clone();
+        Plan::new(threads, move || {
+            assert_eq!(c.value() - base, 4, "a recorded increment was lost");
+        })
+    });
+    assert_eq!(n, 90, "[2,2,2] step threads = 6!/(2!2!2!) schedules, all exhausted");
+}
+
 /// Two overlapping `par_map_with` fan-outs (their blocking steps both start
 /// before either finishes in some schedules) must produce bit-identical,
 /// fully-initialized outputs — shared pools and SharedSlice claims are

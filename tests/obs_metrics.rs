@@ -1,0 +1,226 @@
+//! Cross-checks between the serving engine's own per-run counters (the
+//! `ServeReport` contract) and the process-global metrics registry the
+//! same source sites mirror into (`rust/src/obs/`, docs/OBSERVABILITY.md).
+//!
+//! These run in their own integration binary on purpose: the registry is
+//! process-global, and the lib-test process runs dozens of engine tests
+//! concurrently whose increments would contaminate any before/after delta
+//! taken there. Here the only registry writers are the tests below, which
+//! additionally serialize themselves through `OBS_LOCK`.
+
+use cce::data::synthetic::{DatasetSpec, SyntheticDataset};
+use cce::serving::batcher::{AdmissionPolicy, TrafficGen};
+use cce::serving::engine::{
+    self, CountingExecutor, EngineConfig, Executor, PreparedBatch, ServeReport, SnapshotSlot,
+};
+use cce::serving::ServingSnapshot;
+use cce::tables::indexer::Indexer;
+use cce::tables::layout::TablePlan;
+use cce::util::Rng;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Serializes the tests in this binary: each takes before/after snapshots
+/// of the process-global registry, so they must not interleave.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn dataset() -> SyntheticDataset {
+    SyntheticDataset::new(DatasetSpec {
+        name: "obs".into(),
+        vocabs: vec![11, 50],
+        n_dense: 3,
+        train_samples: 40,
+        val_samples: 8,
+        test_samples: 32,
+        latent_clusters: 4,
+        zipf_exponent: 1.05,
+        label_noise: 0.0,
+        seed: 1,
+    })
+}
+
+fn snapshot(seed: u64) -> ServingSnapshot {
+    let mut rng = Rng::new(seed);
+    let ix = Indexer::new_rowwise(&mut rng, TablePlan::new(&[11, 50], 8, 2, 2, 4));
+    ServingSnapshot::bake(&ix)
+}
+
+/// A [`CountingExecutor`] that also sleeps per batch: backs the queue up so
+/// shed-mode runs actually reject/expire, and stretches runs long enough to
+/// scrape them live.
+struct SlowExecutor {
+    inner: CountingExecutor,
+    delay: Duration,
+}
+
+impl Executor for SlowExecutor {
+    fn device_batch(&self) -> usize {
+        self.inner.device_batch()
+    }
+    fn execute(&mut self, batch: &PreparedBatch) -> Result<(), anyhow::Error> {
+        std::thread::sleep(self.delay);
+        self.inner.execute(batch)
+    }
+}
+
+fn counters() -> BTreeMap<String, u64> {
+    cce::obs::registry().counter_values()
+}
+
+fn delta(before: &BTreeMap<String, u64>, after: &BTreeMap<String, u64>, name: &str) -> u64 {
+    after.get(name).copied().unwrap_or(0) - before.get(name).copied().unwrap_or(0)
+}
+
+/// Registry deltas across one engine run must equal the run's own report —
+/// the two are incremented at the same source sites, and this test is what
+/// keeps them from drifting apart.
+fn assert_report_matches_registry(
+    rep: &ServeReport,
+    before: &BTreeMap<String, u64>,
+    after: &BTreeMap<String, u64>,
+) {
+    assert_eq!(delta(before, after, "serve.requests.offered"), rep.offered as u64);
+    assert_eq!(delta(before, after, "serve.requests.served"), rep.requests as u64);
+    assert_eq!(delta(before, after, "serve.requests.rejected"), rep.rejected as u64);
+    assert_eq!(delta(before, after, "serve.requests.expired"), rep.expired as u64);
+    assert_eq!(delta(before, after, "serve.batches"), rep.batches as u64);
+    assert_eq!(delta(before, after, "serve.padded_rows"), rep.padded_rows as u64);
+    assert_eq!(delta(before, after, "serve.deadline_misses"), rep.deadline_misses as u64);
+    // conservation, stated on the REGISTRY numbers: nothing offered is lost
+    assert_eq!(
+        delta(before, after, "serve.requests.served")
+            + delta(before, after, "serve.requests.rejected")
+            + delta(before, after, "serve.requests.expired"),
+        delta(before, after, "serve.requests.offered"),
+        "served + rejected + expired must equal offered"
+    );
+}
+
+#[test]
+fn block_mode_registry_deltas_match_report() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ds = dataset();
+    let slot = SnapshotSlot::new(snapshot(0));
+    let mut exec = CountingExecutor::new(16);
+    let cfg = EngineConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_depth: 64,
+        admission: AdmissionPolicy::Block,
+        pace: None,
+    };
+    let lat_before = cce::obs::registry().histogram("serve.latency.ns").snapshot();
+    let before = counters();
+    let rep = engine::run(&mut exec, &slot, TrafficGen::new(&ds, 0.99, 31), &cfg, 500).unwrap();
+    let after = counters();
+    assert_eq!(rep.offered, 500);
+    assert_eq!(rep.requests, 500, "block mode serves everything offered");
+    assert_report_matches_registry(&rep, &before, &after);
+    // the latency histogram saw exactly one sample per served request
+    let lat_after = cce::obs::registry().histogram("serve.latency.ns").snapshot();
+    assert_eq!(lat_after.count - lat_before.count, rep.requests as u64);
+}
+
+#[test]
+fn shed_mode_conserves_and_matches_report() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let ds = dataset();
+    let slot = SnapshotSlot::new(snapshot(0));
+    // slow device + tiny queue + per-request deadline: forces both shed
+    // paths (admission rejects and in-queue expiries)
+    let mut exec =
+        SlowExecutor { inner: CountingExecutor::new(16), delay: Duration::from_micros(400) };
+    let cfg = EngineConfig {
+        workers: 2,
+        max_batch: 8,
+        max_wait: Duration::from_micros(50),
+        queue_depth: 4,
+        admission: AdmissionPolicy::Shed {
+            queue_depth: 4,
+            deadline: Some(Duration::from_micros(300)),
+        },
+        pace: None,
+    };
+    let before = counters();
+    let rep = engine::run(&mut exec, &slot, TrafficGen::new(&ds, 0.99, 31), &cfg, 800).unwrap();
+    let after = counters();
+    assert_eq!(rep.offered, 800);
+    assert!(
+        rep.rejected + rep.expired > 0,
+        "overload scenario must actually shed (rejected {}, expired {})",
+        rep.rejected,
+        rep.expired
+    );
+    assert_report_matches_registry(&rep, &before, &after);
+}
+
+fn http_get(addr: std::net::SocketAddr, path: &str) -> (u16, String) {
+    let mut s = std::net::TcpStream::connect(addr).expect("connect to metrics endpoint");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let status: u16 =
+        buf.split_whitespace().nth(1).and_then(|c| c.parse().ok()).expect("HTTP status line");
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+/// End to end over the wire: while an engine run is in flight, a scrape of
+/// the live `/metrics` endpoint returns Prometheus text whose counters come
+/// from THIS run; after the run, the final scrape agrees with the report.
+#[test]
+fn live_scrape_during_engine_run() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let server = cce::obs::MetricsServer::start("127.0.0.1:0").unwrap();
+    let addr = server.addr;
+    let ds = dataset();
+    let slot = SnapshotSlot::new(snapshot(0));
+    let before = counters();
+    let (rep, mid_body) = std::thread::scope(|s| {
+        let handle = s.spawn(|| {
+            let mut exec =
+                SlowExecutor { inner: CountingExecutor::new(16), delay: Duration::from_micros(500) };
+            let cfg = EngineConfig {
+                workers: 2,
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                admission: AdmissionPolicy::Block,
+                pace: None,
+            };
+            engine::run(&mut exec, &slot, TrafficGen::new(&ds, 0.99, 31), &cfg, 1000).unwrap()
+        });
+        // scrape mid-run: the endpoint must answer while the engine works
+        let mut mid = String::new();
+        while !handle.is_finished() {
+            let (status, body) = http_get(addr, "/metrics");
+            assert_eq!(status, 200);
+            if body.contains("cce_serve_requests_offered") {
+                mid = body;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        (handle.join().unwrap(), mid)
+    });
+    assert!(
+        mid_body.contains("cce_serve_requests_offered"),
+        "a mid-run scrape never saw the engine's counters"
+    );
+    let after = counters();
+    assert_report_matches_registry(&rep, &before, &after);
+    // the final scrape carries the same totals the registry reports
+    let (status, body) = http_get(addr, "/metrics");
+    assert_eq!(status, 200);
+    let total = after.get("serve.requests.offered").copied().unwrap_or(0);
+    assert!(
+        body.contains(&format!("cce_serve_requests_offered {total}")),
+        "scrape disagrees with the registry: wanted offered={total}"
+    );
+    // unknown paths 404 without killing the server
+    let (status, _) = http_get(addr, "/nope");
+    assert_eq!(status, 404);
+    server.stop();
+}
